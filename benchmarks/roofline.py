@@ -1,0 +1,119 @@
+"""Roofline table assembly: dry-run artifacts + analytic model -> §Roofline.
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+  compute term    = analytic MXU dot FLOPs / chip / 197e12       [s]
+  memory term     = analytic HBM traffic / chip / 819e9          [s]
+  collective term = probe-corrected wire bytes / chip / 50e9     [s]
+  + peak bytes/device from the compiled memory_analysis (fits-HBM check)
+  + MODEL_FLOPS / HLO(analytic-executed) usefulness ratio
+
+Sources of each column and their caveats are documented in
+EXPERIMENTS.md §Roofline-methodology.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.analytic import cell_cost
+from repro.launch.dryrun import model_flops  # pure helpers (no jax device init)
+from repro.models import api
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def _load(d: Path, arch: str, shape: str, mesh: str) -> dict | None:
+    p = d / f"{arch}__{shape}__{mesh}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def cell_row(arch: str, shape_name: str, mesh: str = "pod") -> dict | None:
+    cfg = get_config(arch)
+    shape = api.SHAPES[shape_name]
+    ok, reason = api.applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+    dr = _load(ART / "dryrun", arch, shape_name, mesh)
+    pr = _load(ART / "probe", arch, shape_name, mesh)
+    if dr is None or dr.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "status": "missing-dryrun"}
+
+    n_chips = dr["n_chips"]
+    cost = cell_cost(cfg, shape, n_chips)
+    compute_s = cost.flops_chip / PEAK_FLOPS
+    memory_s = cost.hbm_bytes_chip / HBM_BW
+    if pr is not None and pr.get("status") == "ok":
+        wire = pr["per_chip"]["wire_bytes"]
+        wire_src = "probe"
+    else:
+        wire = dr["per_chip"]["collective_wire_bytes"]
+        wire_src = "hlo-raw(undercount)"
+    coll_s = wire / LINK_BW
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    peak_mem = dr["memory"]["peak_bytes_per_device"]
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "status": "ok",
+        "n_chips": n_chips,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant, "step_lower_bound_s": bound,
+        "wire_source": wire_src,
+        "model_flops": mf,
+        "useful_ratio": mf / cost.flops_global if cost.flops_global else None,
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) / bound if bound else None,
+        "peak_bytes_per_device": peak_mem,
+        "fits_hbm": bool(peak_mem is not None and peak_mem <= HBM_PER_CHIP),
+        "notes": cost.notes,
+    }
+
+
+def full_table(mesh: str = "pod") -> list[dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        for shape_name in api.SHAPES:
+            r = cell_row(arch, shape_name, mesh)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "MF/HLO | roofline-frac | peak GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{(r['useful_ratio'] or 0):.2f} | {(r['roofline_fraction'] or 0):.3f} | "
+            f"{(r['peak_bytes_per_device'] or 0) / 1e9:.1f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} |\n")
+    return "".join(out)
+
+
+def rows_csv(rows: list[dict]) -> list[tuple]:
+    out = []
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        out.append((name, r["step_lower_bound_s"] * 1e6,
+                    f"dom={r['dominant']};frac={(r['roofline_fraction'] or 0):.3f}"))
+    return out

@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure + roofline readers.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper] [--skip-roofline]``
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="add the 64K size")
+    p.add_argument("--skip-paper", action="store_true")
+    p.add_argument("--skip-roofline", action="store_true")
+    args = p.parse_args()
+
+    rows: list[tuple] = []
+
+    if not args.skip_paper:
+        from . import paper_tables as T
+
+        sizes = T.FULL_SIZES if args.full else T.SIZES
+        rows += T.table1_exec_time(sizes)
+        rows += T.table2_stage_split(sizes)
+        rows += T.table3_knn_compare(sizes)
+        rows += T.accuracy_check()
+
+    if not args.skip_roofline:
+        from . import roofline as R
+
+        rows += R.rows_csv(R.full_table())
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

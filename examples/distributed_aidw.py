@@ -1,0 +1,45 @@
+"""Domain-decomposed (ring) AIDW across devices — the paper at pod scale.
+
+Shards the DATA POINTS across a device ring and the queries across the whole
+mesh, rotating data blocks with collective-permute so no chip ever holds the
+full dataset (DESIGN.md §2 'ring AIDW').  Run with forced host devices to
+simulate a pod slice on CPU:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/distributed_aidw.py
+"""
+
+import numpy as np
+import jax
+
+from repro.core import aidw_improved
+from repro.core.distributed import query_sharded_aidw, ring_aidw
+from repro.data.pipeline import spatial_points, spatial_queries
+
+
+def main() -> None:
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}")
+    pts = spatial_points(4096, seed=0)
+    qs = spatial_queries(2048, seed=1)
+
+    ref = np.asarray(aidw_improved(pts, qs).values)
+
+    if n_dev >= 2:
+        axes = (n_dev // 2, 2)
+        mesh = jax.make_mesh(axes, ("data", "model"))
+        ring = np.asarray(ring_aidw(mesh, "data", pts, qs))
+        qsh = np.asarray(query_sharded_aidw(mesh, pts, qs))
+        print(f"mesh {axes}: ring-AIDW max|err| vs single-device "
+              f"= {np.abs(ring - ref).max():.2e}")
+        print(f"mesh {axes}: query-sharded max|err| = {np.abs(qsh - ref).max():.2e}")
+        print(f"per-device data-point shard: {pts.shape[0] // axes[0]} of "
+              f"{pts.shape[0]} (O(m/P) memory)")
+    else:
+        print("single device: ring reduces to the local pipeline")
+        print(f"AIDW values[:4] = {ref[:4]}")
+    print("aidw distributed demo complete")
+
+
+if __name__ == "__main__":
+    main()

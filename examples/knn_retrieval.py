@@ -1,0 +1,44 @@
+"""Grid kNN as a retrieval primitive beyond interpolation.
+
+The paper's even-grid kNN is a general spatial index.  Here it serves
+nearest-neighbour retrieval over a 2-D projection of learned embeddings
+(e.g. for approximate semantic lookup), using exactly the same
+bin->CSR->expand->top-k machinery as the interpolation pipeline, and
+cross-checked against brute force.
+
+Run:  PYTHONPATH=src python examples/knn_retrieval.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bin_points, brute_knn, grid_knn, plan_grid
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # "embeddings": clustered 2-D projections (e.g. PCA of doc vectors)
+    centers = rng.random((32, 2)).astype(np.float32)
+    docs = (centers[rng.integers(0, 32, 20000)]
+            + rng.normal(0, 0.01, (20000, 2))).astype(np.float32)
+    queries = docs[rng.integers(0, len(docs), 256)] \
+        + rng.normal(0, 0.005, (256, 2)).astype(np.float32)
+
+    spec = plan_grid(docs, queries)
+    table = bin_points(spec, jnp.asarray(docs[:, 0]), jnp.asarray(docs[:, 1]),
+                       jnp.zeros(len(docs)))
+    res = grid_knn(spec, table, jnp.asarray(queries), 10, None, 2048, 256, True)
+    bd2, bidx = brute_knn(jnp.asarray(docs), jnp.asarray(queries), 10)
+
+    agree = np.mean(np.sort(np.asarray(res.d2), 1)
+                    == np.sort(np.asarray(bd2), 1))
+    print(f"indexed {len(docs)} docs in a {spec.n_rows}x{spec.n_cols} grid")
+    print(f"top-10 retrieval for {len(queries)} queries: "
+          f"{agree * 100:.1f}% exact agreement with brute force")
+    print(f"candidate windows examined: mean={float(res.n_candidates.mean()):.0f} "
+          f"points/query (vs {len(docs)} brute-force)")
+    print(f"overflowed windows: {int(res.overflow.sum())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: AIDW spatial interpolation with grid-accelerated kNN.
+
+Reproduces the paper's pipeline end to end on synthetic terrain:
+build data -> improved AIDW (grid kNN + adaptive alpha + Eq.1 weighting)
+-> compare against standard IDW and the brute-force 'original' algorithm.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import AidwConfig, aidw_improved, aidw_original, idw_standard
+from repro.data.pipeline import spatial_points, spatial_queries, spatial_surface
+
+
+def main() -> None:
+    m, n = 8192, 2048
+    pts = spatial_points(m, seed=0, noise=0.02)
+    qs = spatial_queries(n, seed=1)
+    truth = spatial_surface(qs[:, 0], qs[:, 1])
+
+    cfg = AidwConfig(k=15)
+    improved = aidw_improved(pts, qs, cfg, timings=True)
+    original = aidw_original(pts, qs, cfg, timings=True)
+    idw = np.asarray(idw_standard(pts, qs, alpha=2.0))
+
+    rmse = lambda v: float(np.sqrt(np.mean((np.asarray(v) - truth) ** 2)))
+    agree = float(np.abs(np.asarray(improved.values)
+                         - np.asarray(original.values)).max())
+
+    print(f"data points          : {m},  interpolated points: {n}")
+    print(f"adaptive alpha range : [{float(improved.alpha.min()):.2f}, "
+          f"{float(improved.alpha.max()):.2f}]")
+    print(f"AIDW prediction RMSE : {rmse(improved.values):.4f}")
+    print(f"IDW(a=2) RMSE        : {rmse(idw):.4f}")
+    print(f"improved vs original : max |diff| = {agree:.2e} (same math)")
+    print(f"stage times (s)      : kNN={improved.timings['knn']:.3f} "
+          f"interp={improved.timings['interp']:.3f}  "
+          f"(original kNN={original.timings['knn']:.3f})")
+    print(f"window overflow      : {improved.overflow} queries")
+
+
+if __name__ == "__main__":
+    main()

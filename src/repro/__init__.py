@@ -1,0 +1,3 @@
+"""repro: TPU-native AIDW/kNN interpolation framework + LM-scale distributed substrate."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Checkpointing: sharded save, async atomic commit, cross-mesh restore."""
+from .manager import CheckpointManager

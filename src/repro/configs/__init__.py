@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from .registry import ARCH_IDS, get_config, reduced

@@ -1,0 +1,11 @@
+"""command-r-plus-104b [dense]: Cohere GQA, no-bias, parallel residual blocks
+(hf:CohereForAI/c4ai-command-r-v01 family)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=33792, vocab=256000,
+    parallel_residual=True, tie_embeddings=True,
+    notes="Cohere-style parallel attention+FFN block; tied embeddings.",
+)

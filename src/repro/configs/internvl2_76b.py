@@ -1,0 +1,14 @@
+"""internvl2-76b [vlm]: InternViT + InternLM2 backbone (arXiv:2404.16821).
+
+Backbone only — the vision frontend is a STUB: input_specs() supplies
+precomputed patch embeddings (n_vis_tokens x d_model) per the assignment.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, rope_theta=1_000_000.0,
+    n_vis_tokens=256,
+    notes="InternLM2-76B LM backbone; GQA kv=8; patch-embed frontend stubbed.",
+)

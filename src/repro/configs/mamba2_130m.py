@@ -1,0 +1,10 @@
+"""mamba2-130m [ssm]: SSD / state-space duality (arXiv:2405.21060).
+Attention-free; runs the long_500k cell."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, vocab=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_groups=1, d_conv=4,
+    tie_embeddings=True,
+)

@@ -1,0 +1,10 @@
+"""qwen3-moe-30b-a3b [moe]: 128 experts top-8, 768-wide experts
+(hf:Qwen/Qwen3-30B-A3B)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=768, vocab=151936, rope_theta=1_000_000.0,
+    n_experts=128, top_k=8, moe_d_ff=768,
+)

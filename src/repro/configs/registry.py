@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Every assigned architecture is a selectable config; ``reduced()`` derives the
+small same-family config used by the per-arch CPU smoke tests (the FULL
+configs are exercised only via the dry-run's ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "internvl2-76b": "internvl2_76b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "deepseek-7b": "deepseek_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "granite-3-2b": "granite_3_2b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-medium": "whisper_medium",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ModelConfig, *, dtype=jnp.float32) -> ModelConfig:
+    """Small same-family config for CPU smoke tests (one fwd/train step)."""
+    kw: dict = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64, vocab=128, dtype=dtype, remat=False,
+        q_chunk=32, ssm_chunk=16,
+    )
+    if cfg.uses_attention:
+        kw.update(n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 4) or 4, d_head=16)
+    if cfg.is_moe:
+        kw.update(n_experts=min(cfg.n_experts, 8),
+                  top_k=min(cfg.top_k, 2), moe_d_ff=32)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_head_dim=16)
+    if cfg.family == "hybrid":
+        kw.update(attn_every=2, n_layers=4)
+    if cfg.enc_dec:
+        kw.update(n_enc_layers=2, enc_len=24)
+    if cfg.family == "vlm":
+        kw.update(n_vis_tokens=8)
+    return cfg.with_(**kw)

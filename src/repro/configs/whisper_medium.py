@@ -1,0 +1,15 @@
+"""whisper-medium [audio]: enc-dec transformer (arXiv:2212.04356).
+
+The conv/log-mel frontend is a STUB: input_specs() supplies precomputed
+frame embeddings (enc_len=1500 x d_model).  Sinusoidal positions substitute
+the decoder's learned table so params stay independent of assigned shapes.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51865,
+    enc_dec=True, n_enc_layers=24, enc_len=1500,
+    tie_embeddings=True,
+)

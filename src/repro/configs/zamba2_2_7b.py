@@ -1,0 +1,16 @@
+"""zamba2-2.7b [hybrid]: Mamba2 backbone + ONE shared attention block applied
+every 6 layers (arXiv:2411.15242).  Runs the long_500k cell.
+
+Simplifications vs. the full Zamba2 recipe (recorded in DESIGN.md): the
+shared block here takes the current hidden state (no concat-with-embedding
+input, no per-invocation LoRA deltas).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_groups=1, d_conv=4,
+    attn_every=6,
+)

@@ -1,0 +1,24 @@
+"""Core library: the paper's contribution (grid kNN + AIDW) as composable JAX."""
+
+from .aidw import (
+    DEFAULT_ALPHAS,
+    adaptive_alpha,
+    alpha_from_membership,
+    expected_nn_distance,
+    fuzzy_membership,
+    idw_weights_sq,
+    nn_statistic,
+    weighted_interpolate,
+)
+from .grid import CellTable, GridSpec, bin_points, cell_ids, plan_grid
+from .knn import KnnResult, brute_knn, grid_knn, mean_nn_distance
+from .pipeline import AidwConfig, AidwResult, aidw_improved, aidw_original, idw_standard
+
+__all__ = [
+    "DEFAULT_ALPHAS", "adaptive_alpha", "alpha_from_membership",
+    "expected_nn_distance", "fuzzy_membership", "idw_weights_sq",
+    "nn_statistic", "weighted_interpolate",
+    "CellTable", "GridSpec", "bin_points", "cell_ids", "plan_grid",
+    "KnnResult", "brute_knn", "grid_knn", "mean_nn_distance",
+    "AidwConfig", "AidwResult", "aidw_improved", "aidw_original", "idw_standard",
+]

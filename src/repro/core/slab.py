@@ -1,0 +1,186 @@
+"""Slab-decomposed AIDW: grid kNN with halo exchange + ring Stage 2.
+
+The final §Perf iteration for the paper's technique at pod scale
+(EXPERIMENTS.md cell 3): the ring variant's brute-force kNN doubles the step
+FLOPs.  Here Stage 1 keeps the paper's GRID search, domain-decomposed:
+
+* the study area is cut into P horizontal **slabs** of whole grid rows
+  (slab s owns rows [s*rps, (s+1)*rps) of the global grid); data points and
+  queries arrive pre-partitioned by slab (the natural layout of tiled
+  geospatial ingestion);
+* each shard receives its two neighbour slabs via collective-permute (the
+  halo — one ring hop each way) and builds a LOCAL grid over
+  [prev | own | next] with static dims (3*rps rows x global cols); the only
+  dynamic quantity is the slab's y-offset, folded into the point/query
+  coordinates, so the existing static-spec `bin_points`/`grid_knn` machinery
+  applies unchanged;
+* kNN is exact while the certified expansion level stays within one slab
+  (max_level <= rps; overflow flags report violations — with Eq.(2)x4 cells
+  and k=15 the certified level is ~5 vs rps=32 at 1B points / 512 chips);
+* Stage 2 is the ring rotation from `distributed.make_ring_aidw` (the global
+  Eq.(1) sum needs every data block regardless of where kNN happened).
+
+Per-chip cost at m=n=2^30, P=512: kNN drops from O(n_loc * m) ~ 1.7e16 FLOPs
+(ring brute force) to O(n_loc * window) ~ 4e9 — the step becomes one
+Stage-2 sweep, halving total FLOPs vs ring AIDW.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import aidw as A
+from . import grid as G
+from . import knn as K
+from .distributed import PAD_COORD, _ring_interp_step
+
+
+def slab_plan(m_global: int, p: int, *, bounds=(0.0, 1.0, 0.0, 1.0),
+              cell_factor: float = 4.0) -> tuple[G.GridSpec, int]:
+    """(local GridSpec with 3*rps rows, rows-per-slab) for a P-way split.
+
+    ``bounds`` = (min_x, max_x, min_y, max_y) must be known statically (the
+    ingestion contract for tiled spatial data)."""
+    min_x, max_x, min_y, max_y = bounds
+    area = (max_x - min_x) * (max_y - min_y)
+    cw = cell_factor * (1.0 / (2.0 * math.sqrt(m_global / area)))
+    cols = max(int((max_x - min_x + cw) / cw), 1)
+    rows_g = max(int((max_y - min_y + cw) / cw), 1)
+    rps = -(-rows_g // p)                      # rows per slab (ceil)
+    local = G.GridSpec(min_x, 0.0, cw, 3 * rps, cols)
+    return local, rps
+
+
+def partition_by_slab(points: np.ndarray, p: int, rps: int, cw: float,
+                      min_y: float = 0.0):
+    """Host-side: group rows into slabs, pad to equal size with sentinels.
+
+    Returns (slabbed (p, cap, d), original_index (p, cap) with -1 padding).
+    """
+    rows = np.clip(((points[:, 1] - min_y) / cw).astype(np.int64), 0,
+                   p * rps - 1)
+    slab = np.minimum(rows // rps, p - 1)
+    cap = int(np.bincount(slab, minlength=p).max())
+    d = points.shape[1]
+    out = np.full((p, cap, d), PAD_COORD, dtype=points.dtype)
+    idx = np.full((p, cap), -1, dtype=np.int64)
+    for s in range(p):
+        sel = np.nonzero(slab == s)[0]
+        out[s, : len(sel)] = points[sel]
+        idx[s, : len(sel)] = sel
+    return out, idx
+
+
+def make_slab_aidw(
+    mesh: Mesh,
+    ring_axis: str,
+    *,
+    m_global: int,
+    k: int = 15,
+    cell_factor: float = 4.0,
+    bounds=(0.0, 1.0, 0.0, 1.0),
+    window: int = 256,
+    q_block: int = 0,
+    alphas=A.DEFAULT_ALPHAS,
+    r_min: float = A.DEFAULT_R_MIN,
+    r_max: float = A.DEFAULT_R_MAX,
+):
+    """fn(points (P*cap, 3), queries (P*qcap, 2), n_points, area) -> values.
+
+    Inputs arrive slab-partitioned (see :func:`partition_by_slab`) and sharded
+    over ``ring_axis``; sentinel-padded rows yield NaN outputs (dropped by the
+    caller via the index map).
+    """
+    p_ring = mesh.shape[ring_axis]
+    spec, rps = slab_plan(m_global, p_ring, bounds=bounds,
+                          cell_factor=cell_factor)
+    min_y = bounds[2]
+    cw = spec.cell_width
+    max_level = min(K.auto_max_level(spec, max(m_global // p_ring, 1), k) + 1,
+                    rps)
+    fwd = [(i, (i + 1) % p_ring) for i in range(p_ring)]
+    bwd = [(i, (i - 1) % p_ring) for i in range(p_ring)]
+
+    def local_fn(points, queries, n_points, area):
+        s = jax.lax.axis_index(ring_axis)
+        # --- halo exchange: whole neighbour slabs, one hop each way --------
+        prev_blk = jax.lax.ppermute(points, ring_axis, fwd)   # from s-1
+        next_blk = jax.lax.ppermute(points, ring_axis, bwd)   # from s+1
+        pts = jnp.concatenate([prev_blk, points, next_blk], axis=0)
+
+        # --- shift into the local 3*rps-row frame --------------------------
+        y_base = min_y + (s.astype(jnp.float32) - 1.0) * (rps * cw)
+        ys = pts[:, 1] - y_base
+        # wraparound halos (slab 0's 'prev' etc.) land outside -> sentinel
+        ok = (ys >= 0.0) & (ys < spec.n_rows * cw) & (pts[:, 0] < PAD_COORD / 2)
+        xs = jnp.where(ok, pts[:, 0], PAD_COORD)
+        ys = jnp.where(ok, ys, PAD_COORD)
+        table = G.bin_points(spec, xs, ys, pts[:, 2])
+
+        qy = queries[:, 1] - y_base
+        q_ok = queries[:, 0] < PAD_COORD / 2
+        q_local = jnp.stack(
+            [jnp.where(q_ok, queries[:, 0], PAD_COORD),
+             jnp.where(q_ok, qy, PAD_COORD)], axis=1)
+
+        # --- paper Stage 1 on the local grid --------------------------------
+        res = K.grid_knn(spec, table, q_local, k, max_level, window,
+                         min(4096, queries.shape[0]), True)
+        r_obs = K.mean_nn_distance(res.d2)
+        alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=alphas,
+                                 r_min=r_min, r_max=r_max)
+
+        # --- Stage 2: ring rotation (global Eq. 1 sum) ----------------------
+        qx = queries[:, 0]
+        qy_g = queries[:, 1]
+
+        def interp_step(carry, _):
+            acc, blk = carry
+            acc, blk = _ring_interp_step(ring_axis, fwd, qx, qy_g, alpha,
+                                         acc, blk, q_block)
+            return (acc, blk), None
+
+        acc0 = (jnp.zeros_like(qx), jnp.zeros_like(qx))
+        ((swz, sw), _), _ = jax.lax.scan(interp_step, (acc0, points), None,
+                                         length=p_ring)
+        return swz / sw, res.overflow
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(ring_axis, None), P(ring_axis, None), P(), P()),
+        out_specs=(P(ring_axis), P(ring_axis)),
+    )
+    return jax.jit(fn), spec, rps
+
+
+def slab_aidw(mesh: Mesh, ring_axis: str, points_xyz, queries_xy, *,
+              k: int = 15, cell_factor: float = 4.0,
+              bounds=(0.0, 1.0, 0.0, 1.0), window: int = 256,
+              q_block: int = 0):
+    """Convenience wrapper: host-side slab partition, run, un-permute."""
+    p = mesh.shape[ring_axis]
+    pts = np.asarray(points_xyz)
+    qs = np.asarray(queries_xy)
+    m, n = len(pts), len(qs)
+    fn, spec, rps = make_slab_aidw(
+        mesh, ring_axis, m_global=m, k=k, cell_factor=cell_factor,
+        bounds=bounds, window=window, q_block=q_block)
+    cw = spec.cell_width
+    pts_s, _ = partition_by_slab(pts, p, rps, cw, bounds[2])
+    qs_s, q_idx = partition_by_slab(qs, p, rps, cw, bounds[2])
+    area = (bounds[1] - bounds[0]) * (bounds[3] - bounds[2])
+    vals, overflow = fn(
+        jnp.asarray(pts_s.reshape(-1, 3)), jnp.asarray(qs_s.reshape(-1, 2)),
+        jnp.float32(m), jnp.float32(area))
+    vals = np.asarray(vals).reshape(p, -1)
+    out = np.empty(n, np.float32)
+    flat_idx = q_idx.reshape(-1)
+    keep = flat_idx >= 0
+    out[flat_idx[keep]] = vals.reshape(-1)[keep]
+    return out, int(np.asarray(overflow).reshape(-1)[keep].sum())

@@ -1,0 +1,1 @@
+"""Deterministic sharded data pipelines (LM token streams + spatial points)."""

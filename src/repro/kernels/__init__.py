@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes:
+
+* ``aidw``  — Stage-2 tiled weighted interpolation (paper's shared-memory tiling)
+* ``knn``   — blocked brute-force kNN (the 'original' baseline's hot loop)
+"""

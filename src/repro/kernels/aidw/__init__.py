@@ -1,0 +1,5 @@
+"""Tiled AIDW Stage-2 Pallas kernel (VMEM analogue of the paper's shared-memory tiling)."""
+
+from . import ops, ref
+from .aidw_kernel import tiled_interpolate_kernel
+from .ops import fused_stage2, tiled_interpolate

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled AIDW Stage-2 weighted interpolation.
+
+TPU analogue of the paper's shared-memory "tiled version" (§3.3/§4.2.2):
+
+* CUDA shared-memory tile of data-point coordinates  ->  a ``(1, TILE_D)``
+  VMEM block per grid step along the data axis (BlockSpec-managed).
+* per-thread register accumulators (sum of partial weights / weighted values)
+  ->  ``(TILE_Q, 1)`` float32 VMEM scratch accumulators that persist across
+  the ``arbitrary`` data-axis grid dimension.
+* one thread per interpolated point  ->  one (8,128)-vectorized lane row per
+  query inside a ``(TILE_Q, TILE_D)`` distance/weight tile (MXU/VPU shaped).
+
+The kernel optionally FUSES the adaptive-alpha determination (Eqs. 2/4/5/6)
+with the weighting pass: it takes the Stage-1 mean NN distance ``r_obs`` and
+computes alpha in-kernel on the first data step — one kernel launch for the
+whole Stage 2 instead of the paper's two (beyond-paper optimization,
+DESIGN.md §2).
+
+Layouts are SoA exactly as the paper prescribes (§4.2.1): queries arrive as
+``(n, 1)`` column vectors (sublane-major), data points as ``(1, m)`` row
+vectors (lane-major), so the broadcasted difference is a native outer
+product on the VPU.
+
+Padding contract: data sentinels at +1e30 make ``d2 = inf`` in f32, hence
+``w = exp(-inf) = 0`` exactly — padded data points contribute nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import aidw as A
+
+DEFAULT_TILE_Q = 256
+DEFAULT_TILE_D = 512
+
+
+def _alpha_from_r_obs(r_obs, n_points, area, alphas, r_min, r_max):
+    """Eqs. (2)->(4)->(5)->(6) — jnp only, safe inside the kernel."""
+    r_exp = 1.0 / (2.0 * jnp.sqrt(n_points / area))
+    r_stat = r_obs / r_exp
+    mu = 0.5 - 0.5 * jnp.cos(jnp.pi / r_max * (r_stat - r_min))
+    mu = jnp.where(r_stat <= r_min, 0.0, jnp.where(r_stat >= r_max, 1.0, mu))
+    return A.alpha_from_membership(mu, alphas)
+
+
+def _interp_kernel(
+    qx_ref, qy_ref, aux_ref,            # queries: (TQ, 1); aux = alpha or r_obs
+    px_ref, py_ref, pz_ref,             # data:    (1, TD)
+    out_ref,                            # output:  (TQ, 1)
+    sum_w, sum_wz, alpha_s,             # scratch: (TQ, 1) f32
+    *, n_dblocks: int, fused: bool,
+    n_points: float, area: float, alphas, r_min: float, r_max: float,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        sum_w[...] = jnp.zeros_like(sum_w)
+        sum_wz[...] = jnp.zeros_like(sum_wz)
+        aux = aux_ref[...].astype(jnp.float32)
+        if fused:
+            alpha_s[...] = _alpha_from_r_obs(
+                aux, jnp.float32(n_points), jnp.float32(area), alphas, r_min, r_max)
+        else:
+            alpha_s[...] = aux
+
+    qx = qx_ref[...].astype(jnp.float32)          # (TQ, 1)
+    qy = qy_ref[...].astype(jnp.float32)
+    px = px_ref[...].astype(jnp.float32)          # (1, TD)
+    py = py_ref[...].astype(jnp.float32)
+    pz = pz_ref[...].astype(jnp.float32)
+    alpha = alpha_s[...]                          # (TQ, 1)
+
+    d2 = (qx - px) ** 2 + (qy - py) ** 2          # (TQ, TD) outer broadcast
+    # w = d2 ** (-alpha/2), squared distances throughout (paper: sqrt deferred);
+    # exp/log form feeds the VPU transcendental unit once each.
+    w = jnp.exp(-0.5 * alpha * jnp.log(jnp.maximum(d2, A.EPS_D2)))
+    sum_w[...] += w.sum(axis=1, keepdims=True)
+    sum_wz[...] += (w * pz).sum(axis=1, keepdims=True)
+
+    @pl.when(j == n_dblocks - 1)
+    def _finish():
+        denom = jnp.maximum(sum_w[...], jnp.float32(1e-30))
+        out_ref[...] = (sum_wz[...] / denom).astype(out_ref.dtype)
+
+
+def tiled_interpolate_kernel(
+    qx, qy, aux, px, py, pz,
+    *, tile_q: int = DEFAULT_TILE_Q, tile_d: int = DEFAULT_TILE_D,
+    fused: bool = False, n_points: float = 1.0, area: float = 1.0,
+    alphas=A.DEFAULT_ALPHAS, r_min: float = A.DEFAULT_R_MIN,
+    r_max: float = A.DEFAULT_R_MAX, interpret: bool = False,
+):
+    """Raw pallas_call wrapper.  Shapes: qx/qy/aux (n,1); px/py/pz (1,m).
+
+    n % tile_q == 0 and m % tile_d == 0 (ops.py pads).
+    """
+    n, m = qx.shape[0], px.shape[1]
+    assert n % tile_q == 0 and m % tile_d == 0, (n, tile_q, m, tile_d)
+    grid = (n // tile_q, m // tile_d)
+
+    kernel = functools.partial(
+        _interp_kernel, n_dblocks=grid[1], fused=fused,
+        n_points=n_points, area=area, alphas=tuple(alphas),
+        r_min=r_min, r_max=r_max,
+    )
+    q_spec = pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0))
+    d_spec = pl.BlockSpec((1, tile_d), lambda i, j: (0, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, q_spec, q_spec, d_spec, d_spec, d_spec],
+        out_specs=pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), qx.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qx, qy, aux, px, py, pz)

@@ -1,0 +1,80 @@
+"""jit'd public wrappers for the tiled AIDW Stage-2 Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aidw as A
+
+from .aidw_kernel import DEFAULT_TILE_D, DEFAULT_TILE_Q, tiled_interpolate_kernel
+
+PAD_COORD = 1e30  # padded data points -> d2 = inf (f32) -> weight exactly 0
+
+
+def _pad1(a, mult, value=0.0):
+    pad = (-a.shape[0]) % mult
+    return jnp.pad(a, (0, pad), constant_values=value) if pad else a
+
+
+@partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
+def tiled_interpolate(
+    queries_xy: jax.Array,   # (n, 2)
+    points_xy: jax.Array,    # (m, 2)
+    values: jax.Array,       # (m,)
+    alpha: jax.Array,        # (n,) or scalar
+    *, tile_q: int = DEFAULT_TILE_Q, tile_d: int = DEFAULT_TILE_D,
+    interpret: bool = True,
+) -> jax.Array:
+    """Eq. (1) weighted average over all data points, per-query alpha.
+
+    The TPU 'tiled version': drop-in replacement for
+    ``repro.core.aidw.weighted_interpolate``.
+    """
+    n = queries_xy.shape[0]
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, queries_xy.dtype), (n,))
+    qx = _pad1(queries_xy[:, 0], tile_q)[:, None]
+    qy = _pad1(queries_xy[:, 1], tile_q)[:, None]
+    aux = _pad1(alpha, tile_q, value=1.0)[:, None]
+    px = _pad1(points_xy[:, 0], tile_d, PAD_COORD)[None, :]
+    py = _pad1(points_xy[:, 1], tile_d, PAD_COORD)[None, :]
+    pz = _pad1(values, tile_d)[None, :]
+    out = tiled_interpolate_kernel(
+        qx, qy, aux, px, py, pz,
+        tile_q=tile_q, tile_d=tile_d, fused=False, interpret=interpret,
+    )
+    return out[:n, 0]
+
+
+@partial(jax.jit, static_argnames=(
+    "tile_q", "tile_d", "interpret", "alphas", "r_min", "r_max",
+    "n_points", "area"))
+def fused_stage2(
+    queries_xy: jax.Array,   # (n, 2)
+    points_xy: jax.Array,    # (m, 2)
+    values: jax.Array,       # (m,)
+    r_obs: jax.Array,        # (n,) Stage-1 mean NN distance
+    *, n_points: float, area: float,
+    alphas: tuple = A.DEFAULT_ALPHAS,
+    r_min: float = A.DEFAULT_R_MIN, r_max: float = A.DEFAULT_R_MAX,
+    tile_q: int = DEFAULT_TILE_Q, tile_d: int = DEFAULT_TILE_D,
+    interpret: bool = True,
+) -> jax.Array:
+    """Beyond-paper fusion: alpha determination (Eqs. 2/4/5/6) + Eq. (1)
+    weighting in ONE kernel launch (the paper launches two)."""
+    n = queries_xy.shape[0]
+    qx = _pad1(queries_xy[:, 0], tile_q)[:, None]
+    qy = _pad1(queries_xy[:, 1], tile_q)[:, None]
+    aux = _pad1(jnp.asarray(r_obs, queries_xy.dtype), tile_q, value=1.0)[:, None]
+    px = _pad1(points_xy[:, 0], tile_d, PAD_COORD)[None, :]
+    py = _pad1(points_xy[:, 1], tile_d, PAD_COORD)[None, :]
+    pz = _pad1(values, tile_d)[None, :]
+    out = tiled_interpolate_kernel(
+        qx, qy, aux, px, py, pz,
+        tile_q=tile_q, tile_d=tile_d, fused=True,
+        n_points=float(n_points), area=float(area), alphas=tuple(alphas),
+        r_min=r_min, r_max=r_max, interpret=interpret,
+    )
+    return out[:n, 0]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the tiled AIDW Stage-2 kernel (no Pallas, no blocking)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aidw as A
+
+
+def interpolate_ref(queries_xy, points_xy, values, alpha):
+    """Dense Eq. (1): full (n, m) weight matrix in one shot, f32 accumulation."""
+    n = queries_xy.shape[0]
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (n,))
+    q = queries_xy.astype(jnp.float32)
+    p = points_xy.astype(jnp.float32)
+    z = values.astype(jnp.float32)
+    d2 = (q[:, 0:1] - p[None, :, 0]) ** 2 + (q[:, 1:2] - p[None, :, 1]) ** 2
+    w = jnp.power(jnp.maximum(d2, A.EPS_D2), -0.5 * alpha[:, None])
+    return ((w * z[None, :]).sum(-1) / w.sum(-1)).astype(queries_xy.dtype)
+
+
+def fused_stage2_ref(queries_xy, points_xy, values, r_obs, *, n_points, area,
+                     alphas=A.DEFAULT_ALPHAS, r_min=A.DEFAULT_R_MIN,
+                     r_max=A.DEFAULT_R_MAX):
+    """Alpha determination + Eq. (1), unfused reference path."""
+    alpha = A.adaptive_alpha(
+        jnp.asarray(r_obs, jnp.float32), float(n_points), float(area),
+        alphas=alphas, r_min=r_min, r_max=r_max)
+    return interpolate_ref(queries_xy, points_xy, values, alpha)

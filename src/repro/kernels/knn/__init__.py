@@ -1,0 +1,5 @@
+"""Blocked brute-force kNN Pallas kernel (k-pass masked-min selection)."""
+
+from . import ops, ref
+from .knn_kernel import knn_kernel
+from .ops import knn_d2, mean_nn_distance

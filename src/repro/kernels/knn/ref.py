@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the blocked kNN kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_d2_ref(points_xy, queries_xy, *, k: int = 15):
+    """Full (n, m) distance matrix + lax.top_k; f32 accumulation."""
+    q = queries_xy.astype(jnp.float32)
+    p = points_xy.astype(jnp.float32)
+    d2 = (q[:, 0:1] - p[None, :, 0]) ** 2 + (q[:, 1:2] - p[None, :, 1]) ** 2
+    neg_top, _ = jax.lax.top_k(-d2, min(k, p.shape[0]))
+    out = -neg_top
+    if out.shape[1] < k:  # fewer points than k: pad with inf like the kernel
+        out = jnp.pad(out, ((0, 0), (0, k - out.shape[1])),
+                      constant_values=jnp.inf)
+    return out.astype(queries_xy.dtype)

@@ -1,0 +1,198 @@
+"""Analytic per-cell FLOPs / HBM-traffic model for the roofline.
+
+Why analytic: XLA's HLO cost analysis (a) counts while-loop bodies once (the
+layer scan under-reports ~L x), and (b) is unstable across SPMD partitioning
+choices (measured: non-monotonic FLOPs vs depth on the 256-way mesh; see
+EXPERIMENTS.md §Roofline-methodology).  We control every einsum in the model,
+so exact executed-FLOP accounting is straightforward; it is validated against
+single-device unrolled compiles (where cost analysis IS exact) in
+tests/test_analytic_flops.py.
+
+Conventions:
+* 2 FLOPs per MAC (XLA's convention, verified).
+* Counts what the implementation EXECUTES: full (not causal-halved) S^2
+  attention scores (we mask, not skip), MoE capacity slots E*C (not just
+  routed tokens), remat recompute under training.
+* train multiplier: fwd + recompute + 2x bwd = 4x layer fwd (cfg.remat=True),
+  3x for the unembed stem (outside the checkpoint); +~10 FLOPs/param AdamW.
+* per-chip = global / n_chips, except attention when the head count does not
+  divide the tensor axis (then those FLOPs replicate across it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.nn.moe import moe_capacity
+
+
+@dataclass(frozen=True)
+class CellCost:
+    flops_global: float          # executed FLOPs, whole step, all chips
+    flops_chip: float            # per chip (incl. replication penalties)
+    hbm_bytes_chip: float        # HBM traffic per chip (model below)
+    notes: str = ""
+
+
+def _attn_flops_token(cfg: ModelConfig, s_ctx: int) -> float:
+    """QK^T + PV per token (full, unmasked-skip) for one layer."""
+    return 4.0 * cfg.n_heads * cfg.head_dim * s_ctx
+
+
+def _dense_layer_matmul_params(cfg: ModelConfig) -> float:
+    D, dh = cfg.d_model, cfg.head_dim
+    return (D * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+            + cfg.n_heads * dh * D)
+
+
+def _mlp_flops_token(cfg: ModelConfig, n_tokens: int) -> float:
+    D = cfg.d_model
+    if not cfg.is_moe:
+        return 2.0 * 3 * D * cfg.d_ff
+    C = moe_capacity(n_tokens, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+    slots_per_token = cfg.n_experts * C / n_tokens
+    f = 2.0 * 3 * D * cfg.moe_d_ff * slots_per_token + 2.0 * D * cfg.n_experts
+    if cfg.n_shared_experts:
+        f += 2.0 * 3 * D * cfg.d_ff * cfg.n_shared_experts
+    return f
+
+
+def _ssm_layer_flops_token(cfg: ModelConfig, *, decode: bool) -> float:
+    from repro.models.lm import ssm_dims
+    d = ssm_dims(cfg)
+    D = cfg.d_model
+    proj = 2.0 * D * d.d_in_proj + 2.0 * d.d_inner * D
+    conv = 2.0 * d.d_conv * d.conv_ch
+    H, N, P, Q = d.n_heads, d.d_state, d.head_dim, cfg.ssm_chunk
+    if decode:
+        ssd = H * (6.0 * N * P)
+    else:
+        ssd = H * (2.0 * Q * N + 2.0 * Q * P + 4.0 * N * P)
+    return proj + conv + ssd
+
+
+def _attn_block_fwd(cfg: ModelConfig, n_tokens: int, s_ctx: int) -> float:
+    """One attention+MLP transformer block, fwd, global."""
+    return n_tokens * (2.0 * _dense_layer_matmul_params(cfg)
+                       + _attn_flops_token(cfg, s_ctx)
+                       + _mlp_flops_token(cfg, n_tokens))
+
+
+def _fwd_layers_global(cfg: ModelConfig, shape: api.ShapeSpec) -> tuple[float, float]:
+    """(layer_flops, attn_only_flops) fwd, global, whole layer stack."""
+    B, S = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    n_tokens = B * (1 if decode else S)
+    s_ctx = S  # decode attends the full cache; train/prefill compute full S^2
+
+    if cfg.enc_dec:
+        enc_tokens = B * cfg.enc_len
+        enc = cfg.n_enc_layers * _attn_block_fwd(cfg, enc_tokens, cfg.enc_len)
+        if decode:
+            enc = 0.0  # encoder ran at prefill
+        dec_self = cfg.n_layers * n_tokens * (
+            2.0 * _dense_layer_matmul_params(cfg) + _attn_flops_token(cfg, s_ctx))
+        dec_cross = cfg.n_layers * n_tokens * (
+            2.0 * _dense_layer_matmul_params(cfg) + _attn_flops_token(cfg, cfg.enc_len))
+        dec_mlp = cfg.n_layers * n_tokens * _mlp_flops_token(cfg, n_tokens)
+        attn = (0.0 if decode else cfg.n_enc_layers * enc_tokens *
+                _attn_flops_token(cfg, cfg.enc_len)) + \
+            cfg.n_layers * n_tokens * (_attn_flops_token(cfg, s_ctx)
+                                       + _attn_flops_token(cfg, cfg.enc_len))
+        return enc + dec_self + dec_cross + dec_mlp, attn
+
+    if cfg.family == "ssm":
+        per_tok = _ssm_layer_flops_token(cfg, decode=decode)
+        return cfg.n_layers * n_tokens * per_tok, 0.0
+
+    if cfg.family == "hybrid":
+        mamba = cfg.n_layers * n_tokens * _ssm_layer_flops_token(cfg, decode=decode)
+        n_shared = cfg.n_layers // cfg.attn_every
+        shared = n_shared * _attn_block_fwd(cfg, n_tokens, s_ctx)
+        attn = n_shared * n_tokens * _attn_flops_token(cfg, s_ctx)
+        return mamba + shared, attn
+
+    layer = cfg.n_layers * _attn_block_fwd(cfg, n_tokens, s_ctx)
+    attn = cfg.n_layers * n_tokens * _attn_flops_token(cfg, s_ctx)
+    return layer, attn
+
+
+def _stem_fwd_global(cfg: ModelConfig, shape: api.ShapeSpec) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    V, D = cfg.vocab, cfg.d_model
+    if shape.kind == "train":
+        return 2.0 * V * D * B * S
+    if shape.kind == "prefill":
+        return 2.0 * V * D * B       # last position only
+    return 2.0 * V * D * B           # decode: one token
+
+
+def cell_cost(cfg: ModelConfig, shape: api.ShapeSpec, n_chips: int,
+              tensor_parallel: int = 16) -> CellCost:
+    layers_fwd, attn_fwd = _fwd_layers_global(cfg, shape)
+    stem_fwd = _stem_fwd_global(cfg, shape)
+
+    if shape.kind == "train":
+        layer_mult = 4.0 if cfg.remat else 3.0
+        flops = layers_fwd * layer_mult + stem_fwd * 3.0 \
+            + 10.0 * cfg.param_count()
+        attn_total = attn_fwd * layer_mult
+    else:
+        flops = layers_fwd + stem_fwd
+        attn_total = attn_fwd
+
+    # replication penalty: attention einsums replicate across the tensor axis
+    # when n_heads doesn't divide it (e.g. llama3.2's 24 heads on TP=16).
+    repl = tensor_parallel if (cfg.uses_attention
+                               and cfg.n_heads % tensor_parallel) else 1
+    flops_chip = (flops - attn_total) / n_chips + attn_total * repl / n_chips
+    notes = f"attn replicated x{repl} (heads % tp != 0)" if repl > 1 else ""
+
+    return CellCost(flops_global=flops, flops_chip=flops_chip,
+                    hbm_bytes_chip=_hbm_bytes_chip(cfg, shape, n_chips),
+                    notes=notes)
+
+
+def _hbm_bytes_chip(cfg: ModelConfig, shape: api.ShapeSpec, n_chips: int) -> float:
+    """HBM traffic model per chip per step (documented in EXPERIMENTS.md):
+
+    train : weights 3 reads bf16 + grad r/w f32 + AdamW state r/w f32
+            (+ master r/w) + saved activations w+r + logits w+r
+    prefill: weights 1 read + cache write + activations write once
+    decode : weights 1 read + FULL cache read + 1 slot write
+    """
+    B, S = shape.global_batch, shape.seq_len
+    P_local = cfg.param_count() / n_chips
+    D = cfg.d_model
+    batch_shards = max(n_chips // 16, 1)           # data(+pod) axes
+    b_loc = max(B / batch_shards, 1)
+
+    act_layer = b_loc * S * D * 2.0                 # bf16 saved input per layer
+    n_layers_total = cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0)
+
+    # decode cache bytes (local): derived from cache defs
+    cache_local = 0.0
+    if shape.kind == "decode":
+        for d in api.cache_defs(cfg, B, S).values():
+            n = 1
+            for s in d.shape:
+                n *= s
+            width = 2 if d.dtype != bool else 1
+            cache_local += n * width / n_chips
+
+    if shape.kind == "train":
+        weights = P_local * (3 * 2.0)               # 3 bf16 passes
+        grads = P_local * 8.0                       # f32 write + read
+        opt = P_local * (16.0 + 8.0 + 2.0)          # mu/nu r+w, master r+w, param w
+        acts = 2.0 * n_layers_total * act_layer     # write + read
+        logits = 2.0 * b_loc * S * (cfg.vocab / 16) * 4.0
+        return weights + grads + opt + acts + logits
+    if shape.kind == "prefill":
+        weights = P_local * 2.0
+        acts = n_layers_total * act_layer           # cache/act write
+        return weights + acts
+    # decode
+    weights = P_local * 2.0
+    return weights + cache_local * 1.02             # full cache read + slot write

@@ -1,0 +1,1 @@
+"""Model zoo: decoder-only LMs (dense/MoE/SSM/hybrid/VLM) + whisper enc-dec."""

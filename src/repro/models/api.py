@@ -1,0 +1,123 @@
+"""Uniform model API: family dispatch + dry-run input specs.
+
+``step_fn(cfg, kind)`` returns the function the launcher jits:
+  * train  -> loss(params, batch)
+  * prefill-> (last logits, cache)
+  * decode -> (logits, new cache)
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of that (arch x shape) cell — weak-type-correct, shardable,
+zero allocation (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamDef, abstract_params
+
+from . import encdec, lm
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-not).  long_500k needs a sub-quadratic family."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.enc_dec else lm
+
+
+def param_defs(cfg: ModelConfig):
+    return _mod(cfg).param_defs(cfg)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, s_max: int):
+    return _mod(cfg).cache_defs(cfg, batch, s_max)
+
+
+def loss_fn(cfg: ModelConfig) -> Callable:
+    mod = _mod(cfg)
+    return lambda params, batch: mod.loss(params, cfg, batch)
+
+
+def prefill_fn(cfg: ModelConfig) -> Callable:
+    mod = _mod(cfg)
+    return lambda params, batch: mod.prefill(params, cfg, batch)
+
+
+def decode_fn(cfg: ModelConfig) -> Callable:
+    mod = _mod(cfg)
+    return lambda params, cache, batch: mod.decode_step(params, cfg, cache, batch)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch ShapeDtypeStructs for one (arch x shape) cell (no cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            specs = {
+                "enc_embeds": jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        elif cfg.family == "vlm":
+            s_txt = S - cfg.n_vis_tokens
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "vis_embeds": jax.ShapeDtypeStruct((B, cfg.n_vis_tokens, cfg.d_model), cfg.dtype),
+            }
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            lab_s = S - cfg.n_vis_tokens if cfg.family == "vlm" else S
+            specs["labels"] = jax.ShapeDtypeStruct((B, lab_s), i32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the decode cache of one cell."""
+    assert shape.kind == "decode"
+    return abstract_params(cache_defs(cfg, shape.global_batch, shape.seq_len))
+
+
+def make_step(cfg: ModelConfig, shape: ShapeSpec):
+    """(fn, example_args_specs) for this cell — what the dry-run lowers.
+
+    train  : fn(params, batch) -> loss                (grads+update added by trainer)
+    prefill: fn(params, batch) -> (logits, cache)
+    decode : fn(params, cache, batch) -> (logits, cache)
+    """
+    if shape.kind == "train":
+        return loss_fn(cfg)
+    if shape.kind == "prefill":
+        return prefill_fn(cfg)
+    return decode_fn(cfg)

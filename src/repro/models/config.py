@@ -1,0 +1,124 @@
+"""Unified model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    parallel_residual: bool = False   # command-r style fused attn+FFN block
+    # dense MLP
+    d_ff: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0            # per-expert hidden width
+    n_shared_experts: int = 0    # llama4-scout shared expert
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    d_conv: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one SHARED attention block applied every attn_every layers
+    attn_every: int = 0
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_len: int = 1500          # whisper 30 s of frames (stubbed frontend)
+    # vlm: prepended precomputed patch embeddings (stubbed frontend)
+    n_vis_tokens: int = 0
+    # numerics / compute shape
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    q_chunk: int = 512           # query chunking for exact blocked attention
+    remat: bool = True           # checkpoint each layer under scan
+    unroll_layers: bool = False  # fully unroll layer scans (dry-run probes)
+    # --- distribution/perf knobs (§Perf hillclimb) ---
+    act_spec: tuple | None = None   # PartitionSpec entries for the residual
+                                    # stream, e.g. (("pod","data"),"model",None)
+                                    # = Megatron-style sequence sharding
+    loss_chunk: int = 0             # CE loss in sequence chunks (logit memory)
+    moe_spec: tuple | None = None   # (E,C,D) dispatch-buffer constraint, e.g.
+                                    # ("model", None, None) = expert parallel
+    moe_impl: str = "pjit"          # "pjit" | "ep" (shard_map expert parallel)
+    notes: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family not in ("ssm",)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM state instead of full-attention prefill)."""
+        return self.family in ("ssm", "hybrid")
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6*N*D roofline bookkeeping)."""
+        D, dh = self.d_model, self.head_dim
+        emb = self.vocab * D * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            attn = D * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * D
+            if self.is_moe:
+                mlp = self.n_experts * 3 * D * self.moe_d_ff + D * self.n_experts
+                mlp += self.n_shared_experts * 3 * D * self.d_ff
+            else:
+                mlp = 3 * D * self.d_ff
+            per_layer = attn + mlp + (D if self.parallel_residual else 2 * D)
+        elif self.family in ("ssm", "hybrid"):
+            d_inner = self.ssm_expand * D
+            n_h = d_inner // self.ssm_head_dim
+            gn = self.ssm_groups * self.ssm_state
+            d_in_proj = 2 * d_inner + 2 * gn + n_h
+            conv_ch = d_inner + 2 * gn
+            per_layer = D * d_in_proj + d_inner * D + d_inner + 3 * n_h \
+                + (self.d_conv + 1) * conv_ch + D
+        n = emb + self.n_layers * per_layer + D  # + final norm
+        if self.family == "hybrid" and self.attn_every:
+            attn = D * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * D
+            n += attn + 3 * D * self.d_ff + 2 * D  # one shared block
+        if self.enc_dec:
+            attn = D * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * D
+            enc_layer = attn + 3 * D * self.d_ff + 2 * D
+            dec_extra = attn + D  # cross-attention + norm
+            n += self.n_enc_layers * enc_layer + self.n_layers * dec_extra + D  # + enc_norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        D = self.d_model
+        full = self.param_count()
+        moe_all = self.n_layers * self.n_experts * 3 * D * self.moe_d_ff
+        moe_active = self.n_layers * self.top_k * 3 * D * self.moe_d_ff
+        return full - moe_all + moe_active

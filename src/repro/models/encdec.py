@@ -1,0 +1,197 @@
+"""Encoder-decoder LM (whisper-family backbone).
+
+The audio frontend (log-mel + 2x conv downsample) is a STUB per the
+assignment: ``enc_embeds`` arrive as precomputed frame embeddings
+(B, enc_len, d_model).  Positions are sinusoidal (whisper's encoder scheme;
+we substitute it for the decoder's learned embedding so parameters stay
+independent of the assigned sequence shapes — recorded in DESIGN.md).
+
+Decoder blocks: causal self-attention (KV-cached) + cross-attention over the
+encoder output (cross-KV computed once at prefill) + MLP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import layers as L
+from repro.nn.param import ParamDef
+
+from .config import ModelConfig
+from .lm import _attn_defs, _mlp_defs, _maybe_remat, _scan
+
+
+def sinusoid_pos(s: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(s, dtype=jnp.float32) + offset)[:, None]
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> dict:
+    D, dt = cfg.d_model, cfg.dtype
+    return {
+        "ln1": ParamDef((D,), (None,), "ones", dt),
+        "self_attn": _attn_defs(cfg),
+        "lnx": ParamDef((D,), (None,), "ones", dt),
+        "cross_attn": _attn_defs(cfg),
+        "ln2": ParamDef((D,), (None,), "ones", dt),
+        "mlp": _mlp_defs(cfg, cfg.d_ff),
+    }
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> dict:
+    D, dt = cfg.d_model, cfg.dtype
+    return {
+        "ln1": ParamDef((D,), (None,), "ones", dt),
+        "attn": _attn_defs(cfg),
+        "ln2": ParamDef((D,), (None,), "ones", dt),
+        "mlp": _mlp_defs(cfg, cfg.d_ff),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    from .lm import _stack
+
+    D, V, dt = cfg.d_model, cfg.vocab, cfg.dtype
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "normal", dt),
+        "enc_layers": _stack(_enc_layer_defs(cfg), cfg.n_enc_layers),
+        "enc_norm": ParamDef((D,), (None,), "ones", dt),
+        "dec_layers": _stack(_dec_layer_defs(cfg), cfg.n_layers),
+        "final_norm": ParamDef((D,), (None,), "ones", dt),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((V, D), ("vocab", "embed"), "normal", dt)
+    return defs
+
+
+def _proj_kv(p, x):
+    return L.dense(x, p["wk"]), L.dense(x, p["wv"])
+
+
+def _attend(p, x, k, v, *, cfg, q_pos, k_pos, k_valid, causal):
+    q = L.dense(x, p["wq"])
+    out = attn_lib.gqa_attention(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                 k_valid=k_valid, causal=causal,
+                                 q_chunk=cfg.q_chunk)
+    B, S = x.shape[:2]
+    return L.dense(out.reshape(B, S, -1), p["wo"].reshape(-1, cfg.d_model))
+
+
+def encode(params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    B, S, D = enc_embeds.shape
+    x = enc_embeds.astype(cfg.dtype) + sinusoid_pos(S, D).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+
+    def body(h, p):
+        n1 = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        k, v = _proj_kv(p["attn"], n1)
+        h = h + _attend(p["attn"], n1, k, v, cfg=cfg, q_pos=pos, k_pos=pos,
+                        k_valid=valid, causal=False)
+        n2 = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + L.swiglu(n2, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"]), None
+
+    x, _ = _scan(_maybe_remat(body, cfg), cfg, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _run_decoder(params, cfg, x, enc_out, *, q_pos, k_pos, k_valid, mode,
+                 cache=None, write_pos=None):
+    B = x.shape[0]
+    Se = enc_out.shape[1]
+    e_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    e_valid = jnp.ones((B, Se), bool)
+
+    def body(h, xs):
+        p = xs["p"]
+        n1 = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            kn, vn = _proj_kv(p["self_attn"], n1)
+            k, v = attn_lib.update_cache(xs["k"], xs["v"], kn, vn, write_pos)
+            ck, cv = xs["ck"], xs["cv"]
+            ys = {"k": k, "v": v, "ck": ck, "cv": cv}
+        else:
+            k, v = _proj_kv(p["self_attn"], n1)
+            ck, cv = _proj_kv(p["cross_attn"], enc_out)
+            ys = {"k": k, "v": v, "ck": ck, "cv": cv} if mode == "prefill" else None
+        h = h + _attend(p["self_attn"], n1, k, v, cfg=cfg, q_pos=q_pos,
+                        k_pos=k_pos, k_valid=k_valid, causal=True)
+        nx = L.rms_norm(h, p["lnx"], cfg.norm_eps)
+        h = h + _attend(p["cross_attn"], nx, ck, cv, cfg=cfg, q_pos=q_pos,
+                        k_pos=e_pos, k_valid=e_valid, causal=False)
+        n2 = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + L.swiglu(n2, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"]), ys
+
+    xs = {"p": params["dec_layers"]}
+    if mode == "decode":
+        xs.update(cache)
+    x, ys = _scan(_maybe_remat(body, cfg), cfg, x, xs)
+    return x, ys
+
+
+def _dec_logits(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(x, table)
+
+
+def loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(tokens, params["embed"]) + sinusoid_pos(S, cfg.d_model).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+    x, _ = _run_decoder(params, cfg, x, enc_out, q_pos=pos, k_pos=pos,
+                        k_valid=valid, mode="train")
+    logits = _dec_logits(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_cross_entropy(logits, jnp.maximum(labels, 0), labels >= 0)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(tokens, params["embed"]) + sinusoid_pos(S, cfg.d_model).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+    x, cache = _run_decoder(params, cfg, x, enc_out, q_pos=pos, k_pos=pos,
+                            k_valid=valid, mode="prefill")
+    return _dec_logits(params, cfg, x[:, -1:])[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    tokens = batch["tokens"]                                   # (B, 1)
+    B = tokens.shape[0]
+    pos = batch["pos"].astype(jnp.int32)
+    x = L.embed(tokens, params["embed"]) + \
+        sinusoid_pos(1, cfg.d_model, offset=pos).astype(cfg.dtype)
+    q_pos = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    Smax = cache["k"].shape[2]
+    k_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    k_valid = k_pos <= pos
+    enc_stub = cache["ck"][0]  # (B, Se, Hkv, dh) — only shape matters downstream
+    x, new_cache = _run_decoder(
+        params, cfg, x, jnp.zeros((B, enc_stub.shape[1], cfg.d_model), cfg.dtype),
+        q_pos=q_pos, k_pos=k_pos, k_valid=k_valid, mode="decode",
+        cache=cache, write_pos=pos)
+    return _dec_logits(params, cfg, x)[:, 0], new_cache
+
+
+def cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    dt = cfg.dtype
+    kv = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    ckv = (cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim)
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": ParamDef(kv, ax, "zeros", dt),
+        "v": ParamDef(kv, ax, "zeros", dt),
+        "ck": ParamDef(ckv, ax, "zeros", dt),
+        "cv": ParamDef(ckv, ax, "zeros", dt),
+    }

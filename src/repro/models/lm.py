@@ -1,0 +1,536 @@
+"""Decoder-only language models: dense GQA, MoE, Mamba2/SSD, hybrid, VLM.
+
+One implementation, configuration-selected blocks, three entry points:
+
+* ``loss(params, batch)``            — training objective (next-token CE)
+* ``prefill(params, batch)``         — build the KV/SSM cache, last logits
+* ``decode_step(params, cache, batch)`` — one token with a full cache
+
+Layers are stacked (leading ``L`` dim) and driven by ``lax.scan`` so the HLO
+is O(1) in depth (compile time matters at 512 devices), with optional
+``jax.checkpoint`` per layer.  Hybrid (zamba2-style) models scan groups of
+``attn_every`` Mamba layers and interleave ONE shared attention block.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import layers as L
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.param import ParamDef
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _stack(defs, n: int, axis_name: str = "layers"):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.logical, d.init, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _attn_defs(cfg: ModelConfig) -> dict:
+    D, dh = cfg.d_model, cfg.head_dim
+    dt = cfg.dtype
+    return {
+        "wq": ParamDef((D, cfg.n_heads, dh), ("embed", "heads", None), "scaled", dt),
+        "wk": ParamDef((D, cfg.n_kv_heads, dh), ("embed", "kv_heads", None), "scaled", dt),
+        "wv": ParamDef((D, cfg.n_kv_heads, dh), ("embed", "kv_heads", None), "scaled", dt),
+        "wo": ParamDef((cfg.n_heads, dh, D), ("heads", None, "embed"), "scaled", dt),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, d_ff: int) -> dict:
+    D, dt = cfg.d_model, cfg.dtype
+    return {
+        "wg": ParamDef((D, d_ff), ("embed", "ffn"), "scaled", dt),
+        "wu": ParamDef((D, d_ff), ("embed", "ffn"), "scaled", dt),
+        "wd": ParamDef((d_ff, D), ("ffn", "embed"), "scaled", dt),
+    }
+
+
+def _moe_defs(cfg: ModelConfig) -> dict:
+    D, E, Fe, dt = cfg.d_model, cfg.n_experts, cfg.moe_d_ff, cfg.dtype
+    defs = {
+        "wr": ParamDef((D, E), ("embed", None), "scaled", jnp.float32),
+        "weg": ParamDef((E, D, Fe), ("expert", "embed", None), "scaled", dt),
+        "weu": ParamDef((E, D, Fe), ("expert", "embed", None), "scaled", dt),
+        "wed": ParamDef((E, Fe, D), ("expert", None, "embed"), "scaled", dt),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = _mlp_defs(cfg, cfg.d_ff)
+    return defs
+
+
+def _dense_layer_defs(cfg: ModelConfig) -> dict:
+    D, dt = cfg.d_model, cfg.dtype
+    defs = {"ln1": ParamDef((D,), (None,), "ones", dt), "attn": _attn_defs(cfg)}
+    if not cfg.parallel_residual:
+        defs["ln2"] = ParamDef((D,), (None,), "ones", dt)
+    defs["mlp"] = _moe_defs(cfg) if cfg.is_moe else _mlp_defs(cfg, cfg.d_ff)
+    return defs
+
+
+def _mamba_layer_defs(cfg: ModelConfig) -> dict:
+    D, dt = cfg.d_model, cfg.dtype
+    dims = ssm_dims(cfg)
+    return {
+        "ln": ParamDef((D,), (None,), "ones", dt),
+        "w_in": ParamDef((D, dims.d_in_proj), ("embed", "inner"), "scaled", dt),
+        "conv_w": ParamDef((dims.d_conv, dims.conv_ch), (None, "inner"), "scaled", dt),
+        "conv_b": ParamDef((dims.conv_ch,), ("inner",), "zeros", dt),
+        "A_log": ParamDef((dims.n_heads,), (None,), "zeros", jnp.float32),
+        "dt_bias": ParamDef((dims.n_heads,), (None,), "zeros", jnp.float32),
+        "D": ParamDef((dims.n_heads,), (None,), "ones", jnp.float32),
+        "norm": ParamDef((dims.d_inner,), ("inner",), "ones", dt),
+        "w_out": ParamDef((dims.d_inner, D), ("inner", "embed"), "scaled", dt),
+    }
+
+
+def ssm_dims(cfg: ModelConfig) -> ssm_lib.SsmDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return ssm_lib.SsmDims(
+        d_model=cfg.d_model, d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_head_dim, head_dim=cfg.ssm_head_dim,
+        d_state=cfg.ssm_state, n_groups=cfg.ssm_groups, d_conv=cfg.d_conv)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    D, V, dt = cfg.d_model, cfg.vocab, cfg.dtype
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "normal", dt),
+        "final_norm": ParamDef((D,), (None,), "ones", dt),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((V, D), ("vocab", "embed"), "normal", dt)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        defs["layers"] = _stack(_dense_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        defs["layers"] = _stack(_mamba_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        defs["layers"] = _stack(_mamba_layer_defs(cfg), cfg.n_layers)
+        defs["shared_attn"] = {
+            "ln1": ParamDef((D,), (None,), "ones", dt),
+            "attn": _attn_defs(cfg),
+            "ln2": ParamDef((D,), (None,), "ones", dt),
+            "mlp": _mlp_defs(cfg, cfg.d_ff),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_apply(p, x, *, cfg: ModelConfig, q_pos, k, v, k_pos, k_valid):
+    """Project queries from x; attend over provided k/v (B, Sk, Hkv, dh)."""
+    q = L.dense(x, p["wq"])                                  # (B,S,H,dh)
+    q = L.apply_rope(q, q_pos, cfg.rope_theta)
+    out = attn_lib.gqa_attention(
+        q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
+        causal=True, q_chunk=cfg.q_chunk)
+    B, S = x.shape[:2]
+    return L.dense(out.reshape(B, S, -1), p["wo"].reshape(-1, cfg.d_model))
+
+
+def _project_kv(p, x, *, cfg: ModelConfig, pos):
+    k = L.dense(x, p["wk"])                                  # (B,S,Hkv,dh)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    v = L.dense(x, p["wv"])
+    return k, v
+
+
+def _mlp_apply(p, x):
+    return L.swiglu(x, p["wg"], p["wu"], p["wd"])
+
+
+def _moe_apply(p, x, cfg: ModelConfig):
+    if cfg.moe_impl == "ep":
+        out = moe_lib.moe_apply_ep(
+            x, p["wr"], p["weg"], p["weu"], p["wed"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+    else:
+        out = moe_lib.moe_apply(
+            x, p["wr"], p["weg"], p["weu"], p["wed"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            buf_spec=cfg.moe_spec)
+    if cfg.n_shared_experts:
+        out = out + _mlp_apply(p["shared"], x)
+    return out
+
+
+def _dense_block(p, x, *, cfg: ModelConfig, q_pos, kv, k_pos, k_valid,
+                 new_kv=None):
+    """One transformer block.  kv = (k_full, v_full) to attend over.
+
+    Sub-block outputs are constrained to ``cfg.act_spec`` so tensor-parallel
+    partial-sum reductions compile to reduce-scatters into the (sequence-)
+    sharded residual layout instead of full all-reduces (§Perf iteration 4).
+    """
+    n1 = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = _constrain(_attn_apply(p["attn"], n1, cfg=cfg, q_pos=q_pos,
+                               k=kv[0], v=kv[1], k_pos=k_pos, k_valid=k_valid),
+                   cfg)
+    if cfg.parallel_residual:
+        m = _moe_apply(p["mlp"], n1, cfg) if cfg.is_moe else _mlp_apply(p["mlp"], n1)
+        return x + a + _constrain(m, cfg)
+    h = x + a
+    n2 = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    m = _moe_apply(p["mlp"], n2, cfg) if cfg.is_moe else _mlp_apply(p["mlp"], n2)
+    return h + _constrain(m, cfg)
+
+
+def _mamba_block(p, x, *, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                 decode=False):
+    n = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    out, new_state = ssm_lib.mamba_block(
+        p, n, ssm_dims(cfg), chunk=cfg.ssm_chunk,
+        conv_state=conv_state, ssm_state=ssm_state, decode=decode)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+ stubbed vision) embeddings; returns (x, loss_mask_extra)."""
+    x = L.embed(batch["tokens"], params["embed"])
+    if cfg.family == "vlm":
+        vis = batch["vis_embeds"].astype(x.dtype)            # (B, Nv, D) stub
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(x, table)                               # (B, S, V) f32
+
+
+# ---------------------------------------------------------------------------
+# layer-stack drivers (scan over stacked params)
+# ---------------------------------------------------------------------------
+
+
+def _constrain(x, cfg: ModelConfig):
+    """Residual-stream sharding constraint (§Perf knob; no-op without a mesh
+    context or when cfg.act_spec is None)."""
+    if cfg.act_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*cfg.act_spec))
+    except (ValueError, RuntimeError):  # no mesh (CPU unit tests)
+        return x
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(fn, cfg: ModelConfig, init, xs):
+    return jax.lax.scan(fn, init, xs, unroll=True if cfg.unroll_layers else 1)
+
+
+def _run_dense_stack(params, cfg, x, *, q_pos, k_pos, k_valid, mode,
+                     cache=None, write_pos=None):
+    """mode: train | prefill | decode."""
+
+    def body(h, xs):
+        p = xs["p"]
+        if mode == "train":
+            k, v = _project_kv(p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                               cfg=cfg, pos=q_pos)
+            h = _dense_block(p, h, cfg=cfg, q_pos=q_pos, kv=(k, v),
+                             k_pos=k_pos, k_valid=k_valid)
+            return _constrain(h, cfg), None
+        if mode == "prefill":
+            k, v = _project_kv(p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                               cfg=cfg, pos=q_pos)
+            h = _dense_block(p, h, cfg=cfg, q_pos=q_pos, kv=(k, v),
+                             k_pos=k_pos, k_valid=k_valid)
+            return _constrain(h, cfg), {"k": k, "v": v}
+        # decode: insert this token's k/v into the cache slice
+        ck, cv = xs["k"], xs["v"]
+        kn, vn = _project_kv(p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps),
+                             cfg=cfg, pos=q_pos)
+        ck, cv = attn_lib.update_cache(ck, cv, kn, vn, write_pos)
+        h = _dense_block(p, h, cfg=cfg, q_pos=q_pos, kv=(ck, cv),
+                         k_pos=k_pos, k_valid=k_valid)
+        return _constrain(h, cfg), {"k": ck, "v": cv}
+
+    xs = {"p": params["layers"]}
+    if mode == "decode":
+        xs.update(cache)
+    x, ys = _scan(_maybe_remat(body, cfg), cfg, x, xs)
+    return x, ys
+
+
+def _run_mamba_stack(params, cfg, x, *, mode, cache=None):
+    def body(h, xs):
+        p = xs["p"]
+        if mode == "train":
+            h, _ = _mamba_block(p, h, cfg=cfg)
+            return h, None
+        conv = xs["conv"] if mode == "decode" else None
+        ssm = xs["ssm"] if mode == "decode" else None
+        h, (conv_n, ssm_n) = _mamba_block(p, h, cfg=cfg, conv_state=conv,
+                                          ssm_state=ssm, decode=(mode == "decode"))
+        return _constrain(h, cfg), {"conv": conv_n, "ssm": ssm_n}
+
+    xs = {"p": params["layers"]}
+    if mode == "decode":
+        xs.update(cache)
+    x, ys = _scan(_maybe_remat(body, cfg), cfg, x, xs)
+    return x, ys
+
+
+def _run_hybrid_stack(params, cfg, x, *, q_pos, k_pos, k_valid, mode,
+                      cache=None, write_pos=None):
+    """Groups of ``attn_every`` mamba layers + ONE shared attention block."""
+    every = cfg.attn_every
+    n_groups = cfg.n_layers // every
+    shared = params["shared_attn"]
+
+    grouped_layers = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"])
+
+    def shared_block(h, kv_slice):
+        n1 = L.rms_norm(h, shared["ln1"], cfg.norm_eps)
+        if mode == "train":
+            k, v = _project_kv(shared["attn"], n1, cfg=cfg, pos=q_pos)
+            ys = None
+        elif mode == "prefill":
+            k, v = _project_kv(shared["attn"], n1, cfg=cfg, pos=q_pos)
+            ys = {"k": k, "v": v}
+        else:
+            kn, vn = _project_kv(shared["attn"], n1, cfg=cfg, pos=q_pos)
+            k, v = attn_lib.update_cache(kv_slice["k"], kv_slice["v"],
+                                         kn, vn, write_pos)
+            ys = {"k": k, "v": v}
+        a = _attn_apply(shared["attn"], n1, cfg=cfg, q_pos=q_pos, k=k, v=v,
+                        k_pos=k_pos, k_valid=k_valid)
+        h = h + a
+        n2 = L.rms_norm(h, shared["ln2"], cfg.norm_eps)
+        return _constrain(h + _mlp_apply(shared["mlp"], n2), cfg), ys
+
+    def group_body(h, xs):
+        def inner(hh, xs_in):
+            p = xs_in["p"]
+            if mode == "decode":
+                hh, (cn, sn) = _mamba_block(p, hh, cfg=cfg,
+                                            conv_state=xs_in["conv"],
+                                            ssm_state=xs_in["ssm"], decode=True)
+                return hh, {"conv": cn, "ssm": sn}
+            hh, st = _mamba_block(p, hh, cfg=cfg)
+            hh = _constrain(hh, cfg)
+            if mode == "prefill":
+                return hh, {"conv": st[0], "ssm": st[1]}
+            return hh, None
+
+        inner_xs = {"p": xs["p"]}
+        if mode == "decode":
+            inner_xs.update({"conv": xs["conv"], "ssm": xs["ssm"]})
+        h, inner_ys = _scan(_maybe_remat(inner, cfg), cfg, h, inner_xs)
+        kv_slice = {"k": xs["k"], "v": xs["v"]} if mode == "decode" else None
+        h, attn_ys = shared_block(h, kv_slice)
+        return h, (inner_ys, attn_ys)
+
+    xs = {"p": grouped_layers}
+    if mode == "decode":
+        xs["conv"] = cache["conv"].reshape((n_groups, every) + cache["conv"].shape[1:])
+        xs["ssm"] = cache["ssm"].reshape((n_groups, every) + cache["ssm"].shape[1:])
+        xs["k"], xs["v"] = cache["k"], cache["v"]
+    x, (inner_ys, attn_ys) = _scan(group_body, cfg, x, xs)
+
+    new_cache = None
+    if mode != "train":
+        flat = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        new_cache = {"conv": flat(inner_ys["conv"]), "ssm": flat(inner_ys["ssm"]),
+                     "k": attn_ys["k"], "v": attn_ys["v"]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Causal logits over the (vision+)token sequence — train-time path."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, _ = _run_dense_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                k_valid=valid, mode="train")
+    elif cfg.family == "ssm":
+        x, _ = _run_mamba_stack(params, cfg, x, mode="train")
+    else:
+        x, _ = _run_hybrid_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                 k_valid=valid, mode="train")
+    return _logits(params, cfg, x)
+
+
+def _hidden(params, cfg: ModelConfig, batch) -> jax.Array:
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, _ = _run_dense_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                k_valid=valid, mode="train")
+    elif cfg.family == "ssm":
+        x, _ = _run_mamba_stack(params, cfg, x, mode="train")
+    else:
+        x, _ = _run_hybrid_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                 k_valid=valid, mode="train")
+    return x
+
+
+def _chunked_ce(params, cfg: ModelConfig, x, labels, mask):
+    """CE over sequence chunks: the (B, C, V) logits exist one chunk at a
+    time and are rematerialized in backward (§Perf: logits memory knob)."""
+    C = cfg.loss_chunk
+    B, S = labels.shape
+    pad = (-S) % C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // C
+    xc = jnp.moveaxis(x.reshape(B, nc, C, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, C), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        xb, lb, mb = xs
+        logits = _logits(params, cfg, xb).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll_sum, n = carry
+        mf = mb.astype(jnp.float32)
+        return (nll_sum + ((lse - gold) * mf).sum(), n + mf.sum()), None
+
+    (nll_sum, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                   (xc, lc, mc))
+    return nll_sum / jnp.maximum(n, 1.0)
+
+
+def loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Mean next-token cross-entropy.  labels < 0 are masked."""
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # vision positions carry no next-token loss
+        pad = jnp.full(batch["vis_embeds"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = labels >= 0
+    if cfg.loss_chunk:
+        x = _hidden(params, cfg, batch)
+        return _chunked_ce(params, cfg, x, jnp.maximum(labels, 0), mask)
+    logits = forward(params, cfg, batch)
+    return L.softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Process the full prompt; return (last-position logits, cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = jnp.ones((B, S), bool)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache = _run_dense_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                    k_valid=valid, mode="prefill")
+    elif cfg.family == "ssm":
+        x, cache = _run_mamba_stack(params, cfg, x, mode="prefill")
+    else:
+        x, cache = _run_hybrid_stack(params, cfg, x, q_pos=pos, k_pos=pos,
+                                     k_valid=valid, mode="prefill")
+    return _logits(params, cfg, x[:, -1:])[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    """One new token.  batch: tokens (B,1), pos scalar (write slot & position).
+
+    Attention caches have capacity Smax; the new token is written at ``pos``
+    and attends to positions <= pos.
+    """
+    x = L.embed(batch["tokens"], params["embed"])
+    B = x.shape[0]
+    pos = batch["pos"].astype(jnp.int32)                      # scalar
+    q_pos = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+
+    if cfg.family == "ssm":
+        x, new_cache = _run_mamba_stack(params, cfg, x, mode="decode",
+                                        cache=cache)
+        return _logits(params, cfg, x)[:, 0], new_cache
+
+    Smax = cache["k"].shape[2]
+    k_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    # per-slot validity bitmask (continuous batching: swapped-in slots have
+    # holes); falls back to the prefix mask for plain synchronized decode.
+    valid = cache.get("valid")
+    if valid is not None:
+        valid = jax.lax.dynamic_update_slice(
+            valid, jnp.ones((B, 1), valid.dtype), (0, pos))
+        k_valid = valid
+    else:
+        k_valid = k_pos <= pos
+    run = (_run_dense_stack if cfg.family in ("dense", "moe", "vlm")
+           else _run_hybrid_stack)
+    layer_cache = {k: v for k, v in cache.items() if k != "valid"}
+    x, new_cache = run(params, cfg, x, q_pos=q_pos, k_pos=k_pos,
+                       k_valid=k_valid, mode="decode", cache=layer_cache,
+                       write_pos=pos)
+    if valid is not None:
+        new_cache["valid"] = valid
+    return _logits(params, cfg, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache shape definitions (for dry-run input_specs)
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """ShapeDtypeStruct-compatible ParamDef tree describing the decode cache."""
+    dt = cfg.dtype
+    Lc = cfg.n_layers
+    out: dict[str, ParamDef] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = (Lc, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        out["k"] = ParamDef(kv, ("layers", "batch", "kv_seq", "kv_heads", None), "zeros", dt)
+        out["v"] = ParamDef(kv, ("layers", "batch", "kv_seq", "kv_heads", None), "zeros", dt)
+    if cfg.family in ("ssm", "hybrid"):
+        dims = ssm_dims(cfg)
+        out["conv"] = ParamDef((Lc, batch, dims.d_conv - 1, dims.conv_ch),
+                               ("layers", "batch", None, "inner"), "zeros", dt)
+        out["ssm"] = ParamDef(
+            (Lc, batch, dims.n_heads, dims.d_state, dims.head_dim),
+            ("layers", "batch", "ssm_heads", None, None), "zeros", jnp.float32)
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        kv = (g, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        out["k"] = ParamDef(kv, ("layers", "batch", "kv_seq", "kv_heads", None), "zeros", dt)
+        out["v"] = ParamDef(kv, ("layers", "batch", "kv_seq", "kv_heads", None), "zeros", dt)
+    if cfg.family != "ssm":
+        out["valid"] = ParamDef((batch, s_max), ("batch", "kv_seq"),
+                                "zeros", jnp.bool_)
+    return out

@@ -1,0 +1,85 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD via NamedSharding).
+
+Scheme (MaxText-style FSDP + tensor parallelism):
+
+* ``model`` mesh axis: tensor parallel — attention heads, FFN hidden, vocab,
+  experts (expert parallelism), Mamba inner channels.
+* ``data`` mesh axis: batch parallel AND fully-sharded parameters (the other
+  dim of every weight matrix is sharded over ``data`` — ZeRO-3-like; XLA
+  inserts the per-layer all-gathers).
+* ``pod`` mesh axis (multi-pod): pure data parallelism — parameters are
+  replicated across pods, so the only cross-pod (DCN-class) collective is the
+  gradient all-reduce.  Batch shards over ``(pod, data)``.
+
+Any mapping whose dimension does not divide the mesh-axis product is dropped
+to replication by ``make_shardings`` (e.g. 8 KV heads over 16-way model
+parallelism -> replicated KV projections, the standard GQA duplication).
+
+For single-sample long-context decode (long_500k) the batch axis is
+unshardable; rules shift the KV/SSM cache sequence axis onto ``data``
+(context parallelism) instead.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+TENSOR_AXIS = "model"
+FSDP_AXIS = "data"
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != TENSOR_AXIS)
+
+
+def batch_size_divisor(mesh: Mesh) -> int:
+    from math import prod
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return prod(sizes[a] for a in batch_axes(mesh))
+
+
+def param_rules(mesh: Mesh) -> dict:
+    """Logical axis -> mesh axis mapping for parameters."""
+    return {
+        "vocab": TENSOR_AXIS,
+        "embed": FSDP_AXIS,
+        "heads": TENSOR_AXIS,
+        "kv_heads": TENSOR_AXIS,
+        "ffn": TENSOR_AXIS,
+        "expert": TENSOR_AXIS,
+        "inner": TENSOR_AXIS,
+        "ssm_heads": TENSOR_AXIS,
+        "layers": None,
+    }
+
+
+def cache_rules(mesh: Mesh, cfg: ModelConfig, batch: int) -> dict:
+    """Rules for decode caches; context-parallel fallback for tiny batches."""
+    rules = dict(param_rules(mesh))
+    b_axes = batch_axes(mesh)
+    if batch % batch_size_divisor(mesh) == 0:
+        rules.update({"batch": b_axes, "kv_seq": None})
+    else:
+        # long-context single-sample decode: shard the sequence instead
+        rules.update({"batch": None, "kv_seq": FSDP_AXIS})
+    return rules
+
+
+def data_specs(mesh: Mesh, cfg: ModelConfig, batch_shapes: dict) -> dict:
+    """PartitionSpec per input-batch entry (tokens/labels/vis_embeds/pos)."""
+    b_axes = batch_axes(mesh)
+    out = {}
+    for name, sds in batch_shapes.items():
+        if name == "pos":
+            out[name] = P()
+            continue
+        b = sds.shape[0]
+        lead = b_axes if b % batch_size_divisor(mesh) == 0 else None
+        out[name] = P(lead, *([None] * (len(sds.shape) - 1)))
+    return out
+
+
+def shard_batch(mesh: Mesh, specs: dict):
+    return {k: NamedSharding(mesh, v) for k, v in specs.items()}

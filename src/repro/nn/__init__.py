@@ -1,0 +1,1 @@
+"""Pure-JAX neural-network substrate (no external framework)."""

@@ -1,0 +1,80 @@
+"""Grouped-query attention with query-chunked softmax and KV caching.
+
+The (Sq, Sk) score matrix is never materialized for the full query axis:
+queries are processed in chunks of ``q_chunk`` rows (softmax still sees the
+full key axis per row, so the result is exact — this is memory chunking, not
+an approximation).  At 32k prefill this bounds the per-layer transient to
+``(B, Hkv, G, q_chunk, Sk)`` instead of quadratic-in-S.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attend_chunk(q, k, v, q_pos, k_pos, k_valid, *, causal: bool, scale: float):
+    """q (B, Cq, Hkv, G, dh); k/v (B, Sk, Hkv, dh); returns (B, Cq, Hkv, G, dh)."""
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale                                                 # (B,Hkv,G,Cq,Sk)
+    mask = k_valid[:, None, None, None, :]
+    if causal:
+        mask = mask & (q_pos[:, None, None, :, None] >= k_pos[:, None, None, None, :])
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def gqa_attention(
+    q: jax.Array,        # (B, Sq, H, dh)
+    k: jax.Array,        # (B, Sk, Hkv, dh)
+    v: jax.Array,        # (B, Sk, Hkv, dh)
+    *,
+    q_pos: jax.Array,            # (B, Sq) absolute positions
+    k_pos: jax.Array,            # (B, Sk)
+    k_valid: jax.Array | None = None,   # (B, Sk) bool
+    causal: bool = True,
+    q_chunk: int = 512,
+) -> jax.Array:
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = dh ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    if k_valid is None:
+        k_valid = jnp.ones(k.shape[:2], dtype=bool)
+
+    if Sq <= q_chunk:
+        out = _attend_chunk(qg, k, v, q_pos, k_pos, k_valid,
+                            causal=causal, scale=scale)
+        return out.reshape(B, Sq, H, dh)
+
+    pad = (-Sq) % q_chunk
+    if pad:  # query padding is output-only: padded rows are sliced off
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+    Sp = Sq + pad
+    nc = Sp // q_chunk
+    qs = jnp.moveaxis(qg.reshape(B, nc, q_chunk, Hkv, G, dh), 1, 0)
+    ps = jnp.moveaxis(q_pos.reshape(B, nc, q_chunk), 1, 0)
+
+    def body(_, qc):
+        qi, pi = qc
+        return None, _attend_chunk(qi, k, v, pi, k_pos, k_valid,
+                                   causal=causal, scale=scale)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))              # (nc,B,Cq,Hkv,G,dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sp, H, dh)[:, :Sq]
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos):
+    """Insert (B, Sn, Hkv, dh) at ``pos`` along the S axis of (B, Smax, Hkv, dh)."""
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    return cache_k, cache_v

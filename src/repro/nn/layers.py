@@ -1,0 +1,87 @@
+"""Primitive layers: norms, projections, embeddings, RoPE — pure functions.
+
+Convention: parameters are dict leaves produced from ``ParamDef`` trees; all
+apply functions take arrays and return arrays, compute dtype follows the
+activation dtype, reductions accumulate in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., d_in) @ w (d_in, *out_dims) with f32 accumulation on the MXU."""
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits against the (possibly tied) embedding table (V, D)."""
+    return jax.lax.dot_general(
+        x, table.astype(x.dtype),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g) * u, w_down)
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x (B, S, H, d_head); positions (B, S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (d_head/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token loss; logits (B, S, V) f32, labels (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

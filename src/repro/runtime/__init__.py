@@ -1,0 +1,3 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic rescale plans."""
+from .fault_tolerance import (ElasticPlanner, HeartbeatMonitor, RescalePlan,
+                              SpikeGuard, StragglerDetector)

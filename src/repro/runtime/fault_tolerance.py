@@ -1,0 +1,141 @@
+"""Fault-tolerance runtime: health, stragglers, elastic rescale planning.
+
+The container is single-host, so the *policies* here are exercised against
+simulated telemetry in tests; the *mechanisms* they drive (atomic checkpoint
+commit, cross-mesh restore, deterministic step-indexed data) are the real
+implementations in ``repro.checkpoint`` / ``repro.data``.
+
+Failure model and response, as deployed on a fleet:
+
+  node death       -> heartbeat timeout -> ElasticPlanner proposes the largest
+                      viable mesh over survivors -> job restarts, restores the
+                      latest complete checkpoint with new shardings
+                      (CheckpointManager.restore(shardings=new)) and replays
+                      the data stream from the restored step (pure function of
+                      step index -> no data loss/duplication).
+  straggler        -> StragglerDetector flags chips whose step time exceeds
+                      k x the fleet EWMA; the planner can evict its host
+                      (same path as node death) or keep it on probation.
+  silent data corr.-> loss/grad-norm spike guard in the train loop triggers a
+                      rollback-to-checkpoint (train.py --max-grad-spikes).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen time per host; hosts are dead after ``timeout_s``."""
+
+    def __init__(self, hosts, timeout_s: float = 60.0, clock=time.monotonic):
+        self._clock = clock
+        self.timeout_s = timeout_s
+        now = clock()
+        self._last = {h: now for h in hosts}
+
+    def beat(self, host):
+        self._last[host] = self._clock()
+
+    def dead_hosts(self) -> list:
+        now = self._clock()
+        return [h for h, t in self._last.items() if now - t > self.timeout_s]
+
+    def alive_hosts(self) -> list:
+        now = self._clock()
+        return [h for h, t in self._last.items() if now - t <= self.timeout_s]
+
+
+class StragglerDetector:
+    """EWMA step-time outlier detection, per worker.
+
+    A worker is a straggler when its own step-time EWMA exceeds
+    ``threshold`` x the fleet-median EWMA for ``patience`` consecutive steps.
+    """
+
+    def __init__(self, workers, *, alpha: float = 0.2, threshold: float = 1.5,
+                 patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self._ewma = {w: None for w in workers}
+        self._strikes = {w: 0 for w in workers}
+
+    def observe(self, worker, step_time_s: float):
+        prev = self._ewma[worker]
+        self._ewma[worker] = (step_time_s if prev is None
+                              else self.alpha * step_time_s + (1 - self.alpha) * prev)
+
+    def _median(self) -> float:
+        vals = sorted(v for v in self._ewma.values() if v is not None)
+        if not vals:
+            return 0.0
+        return vals[len(vals) // 2]
+
+    def end_step(self) -> list:
+        med = self._median()
+        out = []
+        for w, v in self._ewma.items():
+            if v is not None and med > 0 and v > self.threshold * med:
+                self._strikes[w] += 1
+            else:
+                self._strikes[w] = 0
+            if self._strikes[w] >= self.patience:
+                out.append(w)
+        return out
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    mesh_shape: tuple
+    mesh_axes: tuple
+    n_chips: int
+    dropped_chips: int
+    global_batch_divisor: int   # batch must stay divisible by this
+    reshard_restore: bool = True
+
+
+class ElasticPlanner:
+    """Propose the largest viable mesh after losing hosts.
+
+    Keeps the model axis FIXED (tensor-parallel degree is baked into layout
+    economics) and shrinks the data/pod axes to the largest whole number of
+    surviving model-groups.  Chips stranded by the shrink idle until the next
+    full-repair window.
+    """
+
+    def __init__(self, model_parallel: int, chips_per_host: int = 4):
+        self.model_parallel = model_parallel
+        self.chips_per_host = chips_per_host
+
+    def plan(self, surviving_chips: int) -> RescalePlan:
+        mp = self.model_parallel
+        data = surviving_chips // mp
+        if data < 1:
+            raise RuntimeError(
+                f"cannot fit model-parallel degree {mp} on {surviving_chips} chips")
+        used = data * mp
+        return RescalePlan(
+            mesh_shape=(data, mp), mesh_axes=("data", "model"),
+            n_chips=used, dropped_chips=surviving_chips - used,
+            global_batch_divisor=data)
+
+
+@dataclass
+class SpikeGuard:
+    """Loss/grad-norm spike detector -> rollback trigger (silent corruption)."""
+
+    window: int = 20
+    factor: float = 10.0
+    _hist: list = field(default_factory=list)
+
+    def observe(self, value: float) -> bool:
+        """Returns True if ``value`` is a spike vs the recent median."""
+        import math
+        if not math.isfinite(value):
+            return True
+        h = sorted(self._hist[-self.window:])
+        spike = bool(h) and value > self.factor * h[len(h) // 2]
+        self._hist.append(value)
+        return spike

@@ -1,0 +1,1 @@
+"""Batched serving: slot-based continuous batching engine."""

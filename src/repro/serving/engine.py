@@ -1,0 +1,156 @@
+"""Batched serving engine: slot-based continuous batching over prefill/decode.
+
+A fixed pool of ``batch_size`` slots decodes in lockstep (the jitted decode
+step is one token for the whole pool).  When a slot finishes (EOS/max_tokens)
+it is refilled from the request queue by re-prefilling JUST that slot's
+sequence and splicing its cache into the pool — the classic
+continuous-batching slot swap, expressed with pure-functional cache updates.
+
+Simplifications vs. a production stack (documented): synchronized position
+counter per slot via per-slot start offsets is folded into the attention
+validity mask; prompts within one engine share a maximum prompt length
+(length-classed queues).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int,
+                 max_len: int, eos_id: int | None = None):
+        assert not cfg.enc_dec, "engine demo targets decoder-only archs"
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._prefill = jax.jit(api.prefill_fn(cfg))
+        self._decode = jax.jit(api.decode_fn(cfg), donate_argnums=(1,))
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    # -- internal ------------------------------------------------------------
+
+    # batch axis per cache entry (for slot splicing)
+    _CACHE_BATCH_AXIS = {"k": 1, "v": 1, "ck": 1, "cv": 1,
+                         "conv": 1, "ssm": 1, "valid": 0}
+
+    def _prefill_batch(self, prompts: np.ndarray):
+        """prompts (B, S0) -> (next_tokens (B,), cache grown to max_len)."""
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        self.stats["prefills"] += 1
+        cache = dict(cache)
+        s0 = prompts.shape[1]
+        for k in ("k", "v"):
+            if k in cache:
+                pad = [(0, 0)] * cache[k].ndim
+                pad[2] = (0, self.max_len - s0)
+                cache[k] = jnp.pad(cache[k], pad)
+        if self.cfg.family != "ssm":
+            # per-slot validity: only the prompt prefix is populated
+            valid = jnp.zeros((prompts.shape[0], self.max_len), bool)
+            cache["valid"] = valid.at[:, :s0].set(True)
+        return np.asarray(jnp.argmax(logits, -1)), cache
+
+    def _splice_slot(self, cache: dict, fresh: dict, i: int) -> dict:
+        """Copy slot ``i`` of ``fresh`` (a 1-sequence cache) into ``cache``."""
+        out = dict(cache)
+        for k, ax in self._CACHE_BATCH_AXIS.items():
+            if k in out:
+                idx = [slice(None)] * out[k].ndim
+                idx[ax] = slice(i, i + 1)
+                out[k] = out[k].at[tuple(idx)].set(fresh[k])
+        return out
+
+    # -- public --------------------------------------------------------------
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve all requests; returns throughput stats."""
+        queue = list(requests)
+        assert queue and all(len(r.prompt) == len(queue[0].prompt) for r in queue), \
+            "engine demo uses one prompt-length class"
+        s0 = len(queue[0].prompt)
+
+        t_start = time.perf_counter()
+        while queue:
+            queue = self._run_pool(queue, s0)
+        dt = time.perf_counter() - t_start
+        self.stats["wall_s"] = dt
+        self.stats["tokens_per_s"] = self.stats["tokens"] / max(dt, 1e-9)
+        return dict(self.stats)
+
+    def _run_pool(self, queue: list[Request], s0: int) -> list[Request]:
+        """One pool lifetime: fill slots, decode until max_len, return leftovers.
+
+        (Requests still active when the position counter exhausts the cache
+        are re-queued and continue in the next pool — 'pool recycling'.)"""
+        active: list[Request | None] = [None] * self.B
+        first = [queue.pop(0) if queue else None for _ in range(self.B)]
+        prompts = np.stack([
+            (r.prompt if r is not None else np.zeros(s0, np.int32))
+            for r in first])
+        next_tok, cache = self._prefill_batch(prompts)
+        for i, r in enumerate(first):
+            if r is not None:
+                r.out_tokens.append(int(next_tok[i]))
+                self.stats["tokens"] += 1
+                self._finish(r)
+                active[i] = None if r.done else r
+
+        pos = s0
+        tokens = next_tok[:, None].astype(np.int32)
+        while any(a is not None for a in active) or queue:
+            if pos >= self.max_len:
+                # recycle: unfinished actives go back to the queue head
+                return [r for r in active if r is not None and not r.done] + queue
+            logits, cache = self._decode(
+                self.params, cache,
+                {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)})
+            self.stats["decode_steps"] += 1
+            nxt = np.array(jnp.argmax(logits, -1))  # writable copy (slot swap)
+            pos += 1
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
+                tok = int(nxt[i])
+                r.out_tokens.append(tok)
+                self.stats["tokens"] += 1
+                if self._finish(r, tok):
+                    active[i] = queue.pop(0) if queue else None
+                    if active[i] is not None:
+                        # slot swap: re-prefill just this sequence, splice in
+                        lg, c1 = self._prefill_batch(active[i].prompt[None, :])
+                        cache = self._splice_slot(cache, c1, i)
+                        active[i].out_tokens.append(int(lg[0]))
+                        self.stats["tokens"] += 1
+                        self._finish(active[i])
+                        if active[i].done:
+                            active[i] = None
+                        else:
+                            nxt[i] = active[i].out_tokens[-1]
+            tokens = nxt[:, None].astype(np.int32)
+        return queue
+
+    def _finish(self, r: Request, tok: int | None = None) -> bool:
+        if len(r.out_tokens) >= r.max_new_tokens or \
+                (tok is not None and tok == self.eos_id):
+            r.done = True
+        return r.done

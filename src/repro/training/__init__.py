@@ -1,0 +1,1 @@
+"""Training loop substrate: step construction, data, fault tolerance glue."""

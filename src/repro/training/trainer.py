@@ -1,0 +1,89 @@
+"""Training step construction: loss -> grads -> AdamW update, jit/pjit-ready.
+
+``make_train_step`` returns the donated-argument step the launcher jits; it
+optionally folds in gradient-accumulation microbatching (the accumulation
+scan also gives XLA the window to overlap per-bucket gradient reduction with
+the next microbatch's backprop) and error-feedback gradient compression.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim import adamw, compression
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    grad_accum: int = 1,
+    compress: bool = False,
+    grad_shardings=None,
+    grad_dtype=None,
+) -> Callable:
+    """``grad_shardings``: optional NamedSharding pytree matching params —
+    constrains gradients to the parameter layout so XLA reduce-scatters into
+    FSDP shards instead of all-reducing full tensors (§Perf knob).
+    ``grad_dtype``: reduce gradients in this dtype (bf16 halves the wire
+    bytes of the data-axis gradient reduction; §Perf knob)."""
+    loss_fn = api.loss_fn(cfg)
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        # split the batch leading dim into microbatches and scan: grads for
+        # microbatch i reduce while microbatch i+1 computes (XLA overlap).
+        def micro(carry, mb):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc_loss, acc_grads = carry
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_grads, grads)), None
+
+        mbs = jax.tree.map(
+            lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum) + a.shape[1:]),
+            batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), _ = jax.lax.scan(micro, (jnp.float32(0), zeros), mbs)
+        scale = 1.0 / grad_accum
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, grads_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if grad_dtype is not None:
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        if compress:
+            grads, new_err = compression.compress_with_feedback(
+                grads, opt_state["error"])
+            inner = {k: v for k, v in opt_state.items() if k != "error"}
+            params, inner, m = adamw.apply_updates(opt_cfg, params, inner, grads)
+            inner["error"] = new_err
+            return params, inner, {**metrics, **m}
+        params, opt_state, m = adamw.apply_updates(opt_cfg, params, opt_state, grads)
+        return params, opt_state, {**metrics, **m}
+
+    return train_step
+
+
+def init_opt_state(cfg: adamw.AdamWConfig, params, *, compress: bool = False):
+    state = adamw.init_state(cfg, params)
+    if compress:
+        state["error"] = compression.init_error(params)
+    return state
+
+
+def opt_state_specs(cfg: adamw.AdamWConfig, param_specs, *, compress: bool = False):
+    specs = adamw.state_specs(cfg, param_specs)
+    if compress:
+        specs["error"] = param_specs
+    return specs

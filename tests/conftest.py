@@ -1,0 +1,37 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; multi-device tests spawn subprocesses (helpers below)."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess with ``n_devices`` forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def spatial_data():
+    from repro.data.pipeline import spatial_points, spatial_queries
+
+    return spatial_points(2048, seed=0), spatial_queries(512, seed=1)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

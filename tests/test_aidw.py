@@ -1,0 +1,121 @@
+"""AIDW math (Eqs. 2-6) + end-to-end pipeline properties vs the serial oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AidwConfig, adaptive_alpha, aidw_improved,
+                        aidw_original, alpha_from_membership, fuzzy_membership,
+                        idw_standard)
+
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.serial_ref import serial_aidw  # noqa: E402
+
+
+def test_fuzzy_membership_endpoints():
+    assert float(fuzzy_membership(jnp.float32(-1.0))) == 0.0
+    assert float(fuzzy_membership(jnp.float32(0.0))) == 0.0
+    assert float(fuzzy_membership(jnp.float32(2.0))) == 1.0
+    assert float(fuzzy_membership(jnp.float32(5.0))) == 1.0
+    assert float(fuzzy_membership(jnp.float32(1.0))) == pytest.approx(0.5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1.0, 3.0), st.floats(-1.0, 3.0))
+def test_fuzzy_membership_monotone(a, b):
+    lo, hi = min(a, b), max(a, b)
+    assert float(fuzzy_membership(jnp.float32(lo))) <= \
+        float(fuzzy_membership(jnp.float32(hi))) + 1e-6
+
+
+def test_alpha_triangular_breakpoints():
+    alphas = (0.5, 1.0, 2.0, 3.0, 4.0)
+    for mu, expect in [(0.0, 0.5), (0.1, 0.5), (0.2, 0.75), (0.3, 1.0),
+                       (0.4, 1.5), (0.5, 2.0), (0.6, 2.5), (0.7, 3.0),
+                       (0.8, 3.5), (0.9, 4.0), (1.0, 4.0)]:
+        got = float(alpha_from_membership(jnp.float32(mu), alphas))
+        assert got == pytest.approx(expect, abs=1e-5), mu
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0))
+def test_alpha_within_levels(mu):
+    a = float(alpha_from_membership(jnp.float32(mu)))
+    assert 0.5 - 1e-6 <= a <= 4.0 + 1e-6
+
+
+def test_adaptive_alpha_clustered_vs_sparse():
+    # dense neighborhoods (small r_obs) -> small R -> small alpha;
+    # sparse neighborhoods -> large R -> alpha saturates high.
+    a_dense = float(adaptive_alpha(jnp.float32(0.001), 1000.0, 1.0))
+    a_sparse = float(adaptive_alpha(jnp.float32(0.2), 1000.0, 1.0))
+    assert a_dense < a_sparse
+    assert a_sparse == pytest.approx(4.0)
+
+
+def test_pipelines_agree(spatial_data):
+    pts, qs = spatial_data
+    r_impr = aidw_improved(pts, qs)
+    r_orig = aidw_original(pts, qs)
+    np.testing.assert_allclose(np.asarray(r_impr.values),
+                               np.asarray(r_orig.values), rtol=1e-4, atol=1e-5)
+    assert r_impr.overflow == 0
+
+
+def test_matches_serial_oracle(spatial_data):
+    pts, qs = spatial_data
+    got = np.asarray(aidw_improved(pts, qs[:128]).values)
+    want = serial_aidw(pts.astype(np.float64), qs[:128].astype(np.float64))
+    np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+def test_prediction_bounded_by_data(spatial_data):
+    pts, qs = spatial_data
+    vals = np.asarray(aidw_improved(pts, qs).values)
+    assert vals.min() >= pts[:, 2].min() - 1e-4   # convex combination
+    assert vals.max() <= pts[:, 2].max() + 1e-4
+
+
+def test_exact_hit_returns_data_value(spatial_data):
+    pts, _ = spatial_data
+    qs_on = pts[:50, :2].copy()
+    vals = np.asarray(aidw_improved(pts, qs_on).values)
+    np.testing.assert_allclose(vals, pts[:50, 2], atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(50, 400), st.integers(0, 99))
+def test_bounds_property(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3)).astype(np.float32)
+    qs = rng.random((32, 2)).astype(np.float32)
+    vals = np.asarray(aidw_improved(pts, qs, AidwConfig(k=min(10, n))).values)
+    assert np.isfinite(vals).all()
+    assert (vals >= pts[:, 2].min() - 1e-4).all()
+    assert (vals <= pts[:, 2].max() + 1e-4).all()
+
+
+def test_idw_standard_constant_alpha(spatial_data):
+    pts, qs = spatial_data
+    v2 = np.asarray(idw_standard(pts, qs[:64], alpha=2.0))
+    v4 = np.asarray(idw_standard(pts, qs[:64], alpha=4.0))
+    assert np.isfinite(v2).all() and np.isfinite(v4).all()
+    assert not np.allclose(v2, v4)
+
+
+def test_aidw_more_accurate_than_idw():
+    """The paper's motivation (via Lu & Wong): adaptive alpha beats fixed."""
+    from repro.data.pipeline import spatial_points, spatial_queries, spatial_surface
+
+    pts = spatial_points(4096, seed=5)
+    qs = spatial_queries(1024, seed=6)
+    truth = spatial_surface(qs[:, 0], qs[:, 1])
+    aidw = np.asarray(aidw_improved(pts, qs).values)
+    idw = np.asarray(idw_standard(pts, qs, alpha=2.0))
+    rmse = lambda a: float(np.sqrt(np.mean((a - truth) ** 2)))
+    assert rmse(aidw) < rmse(idw)

@@ -1,0 +1,102 @@
+"""Analytic FLOPs model validation vs exact (unrolled, single-device)
+HLO cost analysis — the §Roofline compute-term source."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.analytic import cell_cost
+from repro.models import api
+from repro.models.api import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.nn.param import abstract_params
+from repro.optim import adamw
+from repro.training import trainer
+
+
+def _exact_flops(cfg, shape):
+    pa = abstract_params(api.param_defs(cfg))
+    if shape.kind == "train":
+        step = trainer.make_train_step(cfg, adamw.AdamWConfig())
+        oa = jax.eval_shape(
+            lambda p: trainer.init_opt_state(adamw.AdamWConfig(), p), pa)
+        c = jax.jit(step).lower(pa, oa, api.input_specs(cfg, shape)).compile()
+    elif shape.kind == "prefill":
+        c = jax.jit(api.prefill_fn(cfg)).lower(
+            pa, api.input_specs(cfg, shape)).compile()
+    else:
+        c = jax.jit(api.decode_fn(cfg)).lower(
+            pa, api.cache_specs(cfg, shape), api.input_specs(cfg, shape)).compile()
+    return c.cost_analysis()["flops"]
+
+
+DENSE = ModelConfig(name="d", family="dense", n_layers=3, d_model=256,
+                    vocab=1024, n_heads=8, n_kv_heads=4, d_ff=512,
+                    dtype=jnp.bfloat16, remat=True, q_chunk=10**9,
+                    unroll_layers=True)
+MOE = ModelConfig(name="m", family="moe", n_layers=2, d_model=128, vocab=512,
+                  n_heads=4, n_kv_heads=4, d_ff=256, n_experts=8, top_k=2,
+                  moe_d_ff=64, dtype=jnp.bfloat16, remat=True, q_chunk=10**9,
+                  unroll_layers=True)
+SSM = ModelConfig(name="s", family="ssm", n_layers=3, d_model=128, vocab=512,
+                  ssm_state=32, ssm_head_dim=32, ssm_chunk=64,
+                  dtype=jnp.bfloat16, remat=True, unroll_layers=True)
+
+
+@pytest.mark.parametrize("cfg,kind,lo,hi", [
+    (DENSE, "train", 0.95, 1.10),     # matmul-exact; tiny elementwise slack
+    (DENSE, "prefill", 0.90, 1.10),
+    # decode: tiny absolute FLOPs, elementwise cache plumbing dominates the
+    # residual — and decode cells are memory-bound, so the compute term's
+    # precision is immaterial to the roofline verdict.
+    (DENSE, "decode", 0.50, 1.30),
+    (MOE, "train", 0.85, 1.10),       # router/scatter elementwise uncounted
+    (SSM, "train", 0.60, 1.10),       # SSD fusion elementwise (VPU) uncounted
+])
+def test_analytic_within_band_of_exact(cfg, kind, lo, hi):
+    shape = ShapeSpec("t", kind, 256, 8)
+    exact = _exact_flops(cfg, shape)
+    analytic = cell_cost(cfg, shape, n_chips=1, tensor_parallel=1).flops_global
+    assert lo <= analytic / exact <= hi, (analytic, exact, analytic / exact)
+
+
+def test_dot_census_matches_analytic_exactly():
+    """Dot-only census of the compiled HLO == analytic matmul accounting."""
+    import re
+
+    cfg, kind = DENSE, "train"
+    shape = ShapeSpec("t", kind, 256, 8)
+    pa = abstract_params(api.param_defs(cfg))
+    step = trainer.make_train_step(cfg, adamw.AdamWConfig())
+    oa = jax.eval_shape(lambda p: trainer.init_opt_state(adamw.AdamWConfig(), p), pa)
+    c = jax.jit(step).lower(pa, oa, api.input_specs(cfg, shape)).compile()
+    text = c.as_text()
+    # symbol table: instruction name -> dims (operands print without types)
+    shape_of = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(%[\w.\-]+) = \S*?\[([\d,]*)\]", line)
+        if m:
+            shape_of[m.group(1)] = [int(d) for d in m.group(2).split(",")] \
+                if m.group(2) else []
+    total = 0.0
+    for line in text.splitlines():
+        if " dot(" not in line:
+            continue
+        m = re.search(r"= \S*?\[([\d,]*)\]", line)
+        out_elems = 1
+        for d in (m.group(1).split(",") if m.group(1) else []):
+            out_elems *= int(d)
+        ops = re.search(r" dot\((%[\w.\-]+), (%[\w.\-]+)\)", line)
+        lhs = shape_of.get(ops.group(1), []) if ops else []
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        kdims = [int(i) for i in mc.group(1).split(",")] if mc and mc.group(1) else []
+        ksize = 1
+        for i in kdims:
+            if i < len(lhs):
+                ksize *= lhs[i]
+        total += 2.0 * out_elems * ksize
+    analytic = cell_cost(cfg, shape, n_chips=1, tensor_parallel=1).flops_global
+    # census excludes the ~10 flops/param optimizer elementwise
+    assert 0.9 <= analytic / total <= 1.1, (analytic, total)

@@ -1,0 +1,70 @@
+"""Even-grid construction: CSR cell table vs direct numpy binning."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bin_points, cell_ids, plan_grid
+
+
+def _np_points(seed, n):
+    r = np.random.default_rng(seed)
+    return r.random((n, 3)).astype(np.float32)
+
+
+def test_plan_grid_covers_all_points():
+    pts = _np_points(0, 500)
+    qs = np.random.default_rng(1).random((100, 2)).astype(np.float32) * 2 - 0.5
+    spec = plan_grid(pts[:, :2], qs)
+    allx = np.concatenate([pts[:, 0], qs[:, 0]])
+    ally = np.concatenate([pts[:, 1], qs[:, 1]])
+    assert spec.min_x <= allx.min() and spec.min_y <= ally.min()
+    assert spec.min_x + spec.n_cols * spec.cell_width >= allx.max()
+    assert spec.min_y + spec.n_rows * spec.cell_width >= ally.max()
+
+
+def test_cell_table_matches_numpy_bincount():
+    pts = _np_points(2, 1000)
+    spec = plan_grid(pts[:, :2])
+    table = bin_points(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1]),
+                       jnp.array(pts[:, 2]))
+    ids = np.asarray(cell_ids(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1])))
+    counts = np.bincount(ids, minlength=spec.n_cells)
+    cs = np.asarray(table.cell_start)
+    assert cs.shape == (spec.n_cells + 1,)
+    assert (np.diff(cs) == counts).all()
+    assert cs[0] == 0 and cs[-1] == len(pts)
+    # sorted coordinates really belong to their cells
+    sx, sy = np.asarray(table.sx), np.asarray(table.sy)
+    sorted_ids = np.asarray(cell_ids(spec, jnp.array(sx), jnp.array(sy)))
+    assert (np.diff(sorted_ids) >= 0).all()
+    # order is a permutation mapping back to originals
+    order = np.asarray(table.order)
+    assert sorted(order.tolist()) == list(range(len(pts)))
+    assert np.allclose(sx, pts[order, 0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 400), st.integers(0, 10_000),
+       st.floats(0.3, 4.0))
+def test_cell_table_properties(n, seed, cell_factor):
+    pts = _np_points(seed, n)
+    spec = plan_grid(pts[:, :2], cell_factor=cell_factor)
+    table = bin_points(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1]),
+                       jnp.array(pts[:, 2]))
+    cs = np.asarray(table.cell_start)
+    assert (np.diff(cs) >= 0).all()          # monotone CSR
+    assert cs[-1] == n                        # every point binned exactly once
+    assert float(jnp.sum(table.sz)) == pytest.approx(float(pts[:, 2].sum()), rel=1e-4)
+
+
+def test_paper_cell_width_formula():
+    # cellWidth from Eq.(2): 1 / (2 sqrt(m / A))
+    pts = _np_points(1, 4096)
+    spec = plan_grid(pts[:, :2])
+    area = (spec.n_cols * spec.cell_width) * (spec.n_rows * spec.cell_width)
+    ppc = 4096 / spec.n_cells
+    assert 0.15 < ppc < 0.40  # Eq.(2) width -> ~1/4 point per cell

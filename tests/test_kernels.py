@@ -1,0 +1,97 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (interpret)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.aidw import ops as aidw_ops, ref as aidw_ref
+from repro.kernels.knn import ops as knn_ops, ref as knn_ref
+
+
+def _data(n, m, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.random((n, 2)), dtype)
+    p = jnp.asarray(rng.random((m, 2)), dtype)
+    z = jnp.asarray(np.sin(rng.random(m) * 7), dtype)
+    a = jnp.asarray(rng.uniform(0.5, 4.0, n), dtype)
+    return q, p, z, a
+
+
+@pytest.mark.parametrize("n,m,tq,td", [
+    (256, 512, 256, 512),     # exact tile fit
+    (700, 1300, 256, 512),    # ragged both axes
+    (64, 100, 8, 128),        # tiny tiles
+    (1024, 256, 512, 128),    # more queries than data
+    (1, 1, 8, 128),           # degenerate
+])
+def test_aidw_kernel_shapes_f32(n, m, tq, td):
+    q, p, z, a = _data(n, m, jnp.float32)
+    out = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=tq, tile_d=td,
+                                     interpret=True)
+    want = aidw_ref.interpolate_ref(q, p, z, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 5e-2)])
+def test_aidw_kernel_dtypes(dtype, tol):
+    q, p, z, a = _data(300, 600, dtype)
+    out = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=128, tile_d=256,
+                                     interpret=True)
+    want = aidw_ref.interpolate_ref(q, p, z, a)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_aidw_fused_alpha_kernel():
+    q, p, z, _ = _data(300, 600, jnp.float32, seed=3)
+    r_obs = jnp.asarray(np.random.default_rng(4).uniform(0, 0.1, 300), jnp.float32)
+    out = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=600, area=1.0,
+                                tile_q=128, tile_d=256, interpret=True)
+    want = aidw_ref.fused_stage2_ref(q, p, z, r_obs, n_points=600, area=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,k", [
+    (256, 512, 15), (100, 300, 1), (70, 40, 8), (128, 128, 32), (33, 9, 15),
+])
+def test_knn_kernel_shapes(n, m, k):
+    q, p, _, _ = _data(n, m, jnp.float32, seed=k)
+    out = knn_ops.knn_d2(p, q, k=k, tile_q=64, tile_d=128, interpret=True)
+    want = knn_ref.knn_d2_ref(p, q, k=k)
+    fin = np.isfinite(np.asarray(want))
+    np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(want)[fin],
+                               rtol=1e-5, atol=1e-7)
+    assert (np.isfinite(np.asarray(out)) == fin).all()
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 5e-2)])
+def test_knn_kernel_dtypes(dtype, tol):
+    q, p, _, _ = _data(200, 400, dtype, seed=9)
+    out = knn_ops.knn_d2(p, q, k=10, tile_q=64, tile_d=128, interpret=True)
+    want = knn_ref.knn_d2_ref(p, q, k=10)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_knn_kernel_duplicate_points():
+    """k-pass masked-min must handle exact duplicate distances."""
+    p = jnp.array([[0.5, 0.5]] * 20 + [[0.1, 0.1]] * 5, jnp.float32)
+    q = jnp.array([[0.5, 0.5]], jnp.float32)
+    out = knn_ops.knn_d2(p, q, k=21, tile_q=8, tile_d=128, interpret=True)
+    want = knn_ref.knn_d2_ref(p, q, k=21)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-7)
+
+
+def test_kernel_mean_distance_matches_core():
+    from repro.core import brute_knn
+
+    q, p, _, _ = _data(150, 350, jnp.float32, seed=11)
+    d2k = knn_ops.knn_d2(p, q, k=15, interpret=True)
+    d2c, _ = brute_knn(p, q, 15)
+    np.testing.assert_allclose(np.asarray(knn_ops.mean_nn_distance(d2k)),
+                               np.asarray(knn_ops.mean_nn_distance(d2c)),
+                               rtol=1e-5)

@@ -1,0 +1,94 @@
+"""Grid kNN: exactness vs brute force (the paper's central data structure)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bin_points, brute_knn, grid_knn, mean_nn_distance, plan_grid
+
+
+def _setup(pts, qs):
+    spec = plan_grid(pts[:, :2], qs)
+    table = bin_points(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1]),
+                       jnp.array(pts[:, 2]))
+    return spec, table
+
+
+def test_grid_knn_exact_matches_brute():
+    rng = np.random.default_rng(0)
+    pts = rng.random((3000, 3)).astype(np.float32)
+    qs = rng.random((700, 2)).astype(np.float32)
+    spec, table = _setup(pts, qs)
+    res = grid_knn(spec, table, jnp.array(qs), 15, None, 1024, 512, True)
+    bd2, _ = brute_knn(jnp.array(pts[:, :2]), jnp.array(qs), 15)
+    assert int(res.overflow.sum()) == 0
+    np.testing.assert_allclose(np.sort(np.asarray(res.d2), 1),
+                               np.sort(np.asarray(bd2), 1), atol=1e-6)
+
+
+def test_paper_heuristic_mode_close_but_flagged():
+    """exact=False is the paper's +1-ring heuristic: nearly exact on uniform
+    data (the paper's own test protocol) — mismatches are rare and small."""
+    rng = np.random.default_rng(1)
+    pts = rng.random((3000, 3)).astype(np.float32)
+    qs = rng.random((1000, 2)).astype(np.float32)
+    spec, table = _setup(pts, qs)
+    res = grid_knn(spec, table, jnp.array(qs), 15, None, 1024, 512, False)
+    bd2, _ = brute_knn(jnp.array(pts[:, :2]), jnp.array(qs), 15)
+    bad = (np.abs(np.sort(np.asarray(res.d2), 1)
+                  - np.sort(np.asarray(bd2), 1)).max(1) > 1e-6).sum()
+    assert bad <= 20  # < 2% of queries on uniform data
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(30, 500), st.integers(1, 25), st.integers(0, 10_000),
+       st.booleans())
+def test_grid_knn_exactness_property(m, k, seed, clustered):
+    rng = np.random.default_rng(seed)
+    if clustered:
+        centers = rng.random((3, 2))
+        xy = np.clip(centers[rng.integers(0, 3, m)]
+                     + rng.normal(0, 0.05, (m, 2)), 0, 1)
+    else:
+        xy = rng.random((m, 2))
+    pts = np.concatenate([xy, rng.random((m, 1))], 1).astype(np.float32)
+    qs = rng.random((64, 2)).astype(np.float32)
+    spec, table = _setup(pts, qs)
+    res = grid_knn(spec, table, jnp.array(qs), k, None, 4096, 64, True)
+    bd2, _ = brute_knn(jnp.array(pts[:, :2]), jnp.array(qs), k)
+    no_ovf = ~np.asarray(res.overflow)
+    got = np.sort(np.asarray(res.d2), 1)[no_ovf]
+    want = np.sort(np.asarray(bd2), 1)[no_ovf]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_k_larger_than_m():
+    rng = np.random.default_rng(3)
+    pts = rng.random((8, 3)).astype(np.float32)
+    qs = rng.random((5, 2)).astype(np.float32)
+    spec, table = _setup(pts, qs)
+    res = grid_knn(spec, table, jnp.array(qs), 15, None, 64, 8, True)
+    # first 8 finite, rest inf
+    d2 = np.sort(np.asarray(res.d2), 1)
+    assert np.isfinite(d2[:, :8]).all()
+    assert np.isinf(d2[:, 8:]).all()
+
+
+def test_mean_nn_distance_defers_sqrt():
+    d2 = jnp.array([[4.0, 9.0, 16.0]])
+    assert float(mean_nn_distance(d2)[0]) == (2 + 3 + 4) / 3
+
+
+def test_knn_indices_point_to_true_neighbors():
+    rng = np.random.default_rng(4)
+    pts = rng.random((500, 3)).astype(np.float32)
+    qs = rng.random((50, 2)).astype(np.float32)
+    spec, table = _setup(pts, qs)
+    res = grid_knn(spec, table, jnp.array(qs), 5, None, 512, 64, True)
+    idx = np.asarray(res.idx)
+    d2 = np.asarray(res.d2)
+    for i in range(len(qs)):
+        d = (pts[idx[i], 0] - qs[i, 0]) ** 2 + (pts[idx[i], 1] - qs[i, 1]) ** 2
+        np.testing.assert_allclose(np.sort(d), np.sort(d2[i]), rtol=1e-5)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward /
+train step on CPU, shape + finiteness asserts (the FULL configs are exercised
+only via the dry-run)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import api
+from repro.nn.param import count_params, init_params
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, kind="train"):
+    s_txt = S - cfg.n_vis_tokens if cfg.family == "vlm" else S
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, s_txt)),
+                                   jnp.int32)}
+    if kind == "train":
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, s_txt)),
+                                      jnp.int32)
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.n_vis_tokens, cfg.d_model)), jnp.float32)
+    if cfg.enc_dec:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.enc_len, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    """One gradient step on the reduced config: finite loss, grads flow."""
+    from repro.optim import adamw
+    from repro.training import trainer
+
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(hash(arch) % 2**31)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = trainer.init_opt_state(opt_cfg, params)
+    step = jax.jit(trainer.make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg, rng)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda acc, pair: acc or bool(jnp.any(pair)),
+        jax.tree.map(lambda a, b: jnp.any(a != b), params, new_params), False)
+    assert moved
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_shapes(arch):
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(0)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(1))
+    loss = api.loss_fn(cfg)(params, _batch(cfg, rng))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    logits, cache = api.prefill_fn(cfg)(params, _batch(cfg, rng, "prefill"))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert cache  # non-empty
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen3-moe-30b-a3b",
+                                  "mamba2-130m", "zamba2-2.7b",
+                                  "whisper-medium", "internvl2-76b"])
+def test_arch_decode_consistency(arch):
+    """decode(prefill(S-1)) logits == forward(S) last-position logits."""
+    cfg = reduced(get_config(arch))
+    rng = np.random.default_rng(1)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(2))
+    batch = _batch(cfg, rng, "prefill")
+    toks = batch["tokens"]
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :-1]
+    _, cache = api.prefill_fn(cfg)(params, pre)
+    cache = dict(cache)
+    for kk in ("k", "v"):
+        if kk in cache:
+            pad = [(0, 0)] * cache[kk].ndim
+            pad[2] = (0, 1)
+            cache[kk] = jnp.pad(cache[kk], pad)
+    n_vis = cfg.n_vis_tokens if cfg.family == "vlm" else 0
+    pos = jnp.int32(toks.shape[1] - 1 + n_vis)
+    got, _ = api.decode_fn(cfg)(params, cache,
+                                {"tokens": toks[:, -1:], "pos": pos})
+    if cfg.enc_dec:
+        from repro.models import encdec
+        from repro.nn import layers as L
+
+        enc_out = encdec.encode(params, cfg, batch["enc_embeds"])
+        Bq, Sq = toks.shape
+        x = L.embed(toks, params["embed"]) + \
+            encdec.sinusoid_pos(Sq, cfg.d_model).astype(cfg.dtype)
+        p = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (Bq, Sq))
+        xf, _ = encdec._run_decoder(params, cfg, x, enc_out, q_pos=p, k_pos=p,
+                                    k_valid=jnp.ones((Bq, Sq), bool), mode="train")
+        want = encdec._dec_logits(params, cfg, xf)[:, -1]
+    else:
+        from repro.models import lm
+
+        want = lm.forward(params, cfg, batch)[:, -1]
+    tol = 2e-2 if cfg.is_moe else 1e-4  # MoE: capacity-dropping nondeterminism
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_param_counts_match_analytic():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        defs = api.param_defs(cfg)
+        assert count_params(defs) == cfg.param_count(), arch
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    c = get_config("command-r-plus-104b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (64, 12288, 96, 8, 33792, 256000)
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.top_k, q.moe_d_ff, q.vocab) == (128, 8, 768, 151936)
+    m = get_config("mamba2-130m")
+    assert (m.n_layers, m.d_model, m.ssm_state, m.vocab) == (24, 768, 128, 50280)
+    z = get_config("zamba2-2.7b")
+    assert (z.n_layers, z.d_model, z.attn_every, z.ssm_state) == (54, 2560, 6, 64)
+    w = get_config("whisper-medium")
+    assert w.enc_dec and (w.n_layers, w.n_enc_layers, w.d_model) == (24, 24, 1024)
+
+
+def test_shape_applicability_policy():
+    from repro.models.api import SHAPES, applicable
+
+    long = SHAPES["long_500k"]
+    assert applicable(get_config("mamba2-130m"), long)[0]
+    assert applicable(get_config("zamba2-2.7b"), long)[0]
+    assert not applicable(get_config("deepseek-7b"), long)[0]
+    assert not applicable(get_config("whisper-medium"), long)[0]
+    for arch in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(get_config(arch), SHAPES[s])[0]

@@ -1,0 +1,161 @@
+"""nn substrate oracles: attention chunking, MoE dispatch, SSD scan."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.nn.attention import gqa_attention
+from repro.nn.moe import moe_apply, moe_capacity
+from repro.nn.ssm import SsmDims, causal_conv, ssd_chunked, ssd_decode_step
+
+
+def test_attention_chunked_equals_unchunked(rng):
+    B, S, Hq, Hkv, dh = 2, 48, 8, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = gqa_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True, q_chunk=10**9)
+    for chunk in (8, 16, 17):  # incl. non-dividing chunk (padding path)
+        out = gqa_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True,
+                            q_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full), atol=2e-6)
+
+
+def test_attention_causality(rng):
+    B, S, H, dh = 1, 16, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    base = gqa_attention(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+    k2 = k.at[:, 8:].set(jnp.asarray(rng.normal(0, 1, (B, 8, H, dh)), jnp.float32))
+    v2 = v.at[:, 8:].set(jnp.asarray(rng.normal(0, 1, (B, 8, H, dh)), jnp.float32))
+    out = gqa_attention(q, k2, v2, q_pos=pos, k_pos=pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, :8]), np.asarray(base[:, :8]),
+                               atol=1e-6)  # prefix unaffected by future keys
+    assert not np.allclose(np.asarray(out[:, 9:]), np.asarray(base[:, 9:]))
+
+
+def test_attention_kv_validity_mask(rng):
+    B, S, H, dh = 2, 12, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    qp = jnp.full((B, 1), S - 1, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = jnp.asarray(np.random.default_rng(1).random((B, S)) > 0.5)
+    mask = mask.at[:, -1].set(True)
+    out_masked = gqa_attention(q, k, v, q_pos=qp, k_pos=kp, k_valid=mask,
+                               causal=True)
+    # equivalent: physically remove masked keys (per batch row)
+    for b in range(B):
+        sel = np.asarray(mask[b])
+        ref = gqa_attention(q[b:b+1], k[b:b+1, sel], v[b:b+1, sel],
+                            q_pos=qp[b:b+1], k_pos=kp[b:b+1, sel], causal=True)
+        np.testing.assert_allclose(np.asarray(out_masked[b]),
+                                   np.asarray(ref[0]), atol=1e-6)
+
+
+def test_moe_matches_dense_reference(rng):
+    T, Dm, E, F, topk = 64, 16, 4, 32, 2
+    x = jnp.asarray(rng.normal(0, 1, (2, 32, Dm)), jnp.float32)
+    wr = jnp.asarray(rng.normal(0, 0.5, (Dm, E)), jnp.float32)
+    wg = jnp.asarray(rng.normal(0, 0.1, (E, Dm, F)), jnp.float32)
+    wu = jnp.asarray(rng.normal(0, 0.1, (E, Dm, F)), jnp.float32)
+    wd = jnp.asarray(rng.normal(0, 0.1, (E, F, Dm)), jnp.float32)
+    out = moe_apply(x, wr, wg, wu, wd, top_k=topk, capacity_factor=16.0)
+
+    xt = np.asarray(x).reshape(T, Dm)
+    pr = jax.nn.softmax(jnp.asarray(xt @ np.asarray(wr)), -1)
+    w, eidx = jax.lax.top_k(pr, topk)
+    w = np.asarray(w / w.sum(-1, keepdims=True))
+    eidx = np.asarray(eidx)
+    ref = np.zeros((T, Dm), np.float32)
+    for t in range(T):
+        for j in range(topk):
+            e = eidx[t, j]
+            g = xt[t] @ np.asarray(wg)[e]
+            u = xt[t] @ np.asarray(wu)[e]
+            ref[t] += w[t, j] * ((g / (1 + np.exp(-g))) * u) @ np.asarray(wd)[e]
+    np.testing.assert_allclose(np.asarray(out).reshape(T, Dm), ref, atol=2e-5)
+
+
+def test_moe_capacity_dropping(rng):
+    """With capacity_factor << 1 most assignments drop -> output shrinks."""
+    x = jnp.asarray(rng.normal(0, 1, (2, 32, 16)), jnp.float32)
+    wr = jnp.asarray(rng.normal(0, 0.5, (16, 4)), jnp.float32)
+    we = [jnp.asarray(rng.normal(0, 0.1, s), jnp.float32)
+          for s in [(4, 16, 32), (4, 16, 32), (4, 32, 16)]]
+    full = moe_apply(x, wr, *we, top_k=2, capacity_factor=16.0)
+    tight = moe_apply(x, wr, *we, top_k=2, capacity_factor=0.25)
+    assert float(jnp.abs(tight).sum()) < float(jnp.abs(full).sum())
+
+
+def test_moe_capacity_rounding():
+    assert moe_capacity(1024, 8, 2, 1.25) % 8 == 0
+    assert moe_capacity(10, 128, 8, 1.0) >= 8
+
+
+def _ssd_seq_ref(xh, Bg, Cg, dt, A, D, dims):
+    B, S, H, P = xh.shape
+    N = dims.d_state
+    Bh = np.repeat(np.asarray(Bg), H // dims.n_groups, 2)
+    Ch = np.repeat(np.asarray(Cg), H // dims.n_groups, 2)
+    h = np.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        a = np.exp(np.asarray(dt)[:, t] * np.asarray(A))
+        h = a[:, :, None, None] * h + np.einsum(
+            "bh,bhn,bhp->bhnp", np.asarray(dt)[:, t], Bh[:, t], np.asarray(xh)[:, t])
+        ys.append(np.einsum("bhn,bhnp->bhp", Ch[:, t], h)
+                  + np.asarray(D)[None, :, None] * np.asarray(xh)[:, t])
+    return np.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64, 60])
+def test_ssd_chunked_vs_sequential(rng, chunk):
+    B, S, H, P, N, G = 2, 60, 4, 8, 16, 1
+    dims = SsmDims(32, H * P, H, P, N, G, 4)
+    xh = jnp.asarray(rng.normal(0, 1, (B, S, H, P)), jnp.float32)
+    Bg = jnp.asarray(rng.normal(0, 1, (B, S, G, N)), jnp.float32)
+    Cg = jnp.asarray(rng.normal(0, 1, (B, S, G, N)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (H,)), jnp.float32)
+    D = jnp.asarray(rng.normal(0, 1, (H,)), jnp.float32)
+    y, hf = ssd_chunked(xh, Bg, Cg, dt, A, D, dims, chunk=chunk)
+    yr, hr = _ssd_seq_ref(xh, Bg, Cg, dt, A, D, dims)
+    np.testing.assert_allclose(np.asarray(y), yr, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(hf), hr, atol=5e-5)
+
+
+def test_ssd_decode_continues_prefill(rng):
+    B, S, H, P, N, G = 2, 33, 4, 8, 16, 1
+    dims = SsmDims(32, H * P, H, P, N, G, 4)
+    mk = lambda s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    xh, Bg, Cg = mk((B, S, H, P)), mk((B, S, G, N)), mk((B, S, G, N))
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (H,)), jnp.float32)
+    D = mk((H,))
+    _, h1 = ssd_chunked(xh[:, :-1], Bg[:, :-1], Cg[:, :-1], dt[:, :-1],
+                        A, D, dims, chunk=16)
+    yd, hd = ssd_decode_step(xh[:, -1:], Bg[:, -1:], Cg[:, -1:], dt[:, -1:],
+                             A, D, h1, dims)
+    yf, hf = ssd_chunked(xh, Bg, Cg, dt, A, D, dims, chunk=16)
+    np.testing.assert_allclose(np.asarray(yd[:, 0]), np.asarray(yf[:, -1]), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hf), atol=5e-5)
+
+
+def test_causal_conv_decode_matches_full(rng):
+    B, S, C, K = 2, 20, 6, 4
+    x = jnp.asarray(rng.normal(0, 1, (B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (K, C)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (C,)), jnp.float32)
+    full, _ = causal_conv(x, w, b)
+    y1, st = causal_conv(x[:, :-1], w, b)
+    y2, _ = causal_conv(x[:, -1:], w, b, state=st)
+    np.testing.assert_allclose(np.asarray(y2[:, 0]), np.asarray(full[:, -1]),
+                               atol=1e-5)

@@ -1,0 +1,62 @@
+"""Fault-tolerance policies: stragglers, heartbeats, elastic plans, spikes."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.runtime import (ElasticPlanner, HeartbeatMonitor, SpikeGuard,
+                           StragglerDetector)
+
+
+def test_straggler_detection():
+    det = StragglerDetector(["w0", "w1", "w2", "w3"], threshold=1.5, patience=2)
+    for step in range(5):
+        for w in ("w0", "w1", "w2"):
+            det.observe(w, 1.0)
+        det.observe("w3", 3.0)  # persistent straggler
+        flagged = det.end_step()
+    assert flagged == ["w3"]
+
+
+def test_straggler_recovers():
+    det = StragglerDetector(["w0", "w1"], threshold=1.5, patience=3)
+    for _ in range(3):
+        det.observe("w0", 1.0)
+        det.observe("w1", 5.0)
+        det.end_step()
+    for _ in range(12):
+        det.observe("w0", 1.0)
+        det.observe("w1", 1.0)   # back to normal -> strikes reset
+        flagged = det.end_step()
+    assert flagged == []
+
+
+def test_heartbeat_monitor():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.beat("h0")
+    t[0] = 12.0
+    assert mon.dead_hosts() == ["h1"]
+    assert mon.alive_hosts() == ["h0"]
+
+
+def test_elastic_planner_keeps_model_axis():
+    pl = ElasticPlanner(model_parallel=16)
+    plan = pl.plan(surviving_chips=512 - 16)   # lost one model group
+    assert plan.mesh_shape == (31, 16)
+    assert plan.n_chips == 496 and plan.dropped_chips == 0
+    plan = pl.plan(surviving_chips=250)        # ragged survivors
+    assert plan.mesh_shape == (15, 16)
+    assert plan.n_chips == 240 and plan.dropped_chips == 10
+    with pytest.raises(RuntimeError):
+        pl.plan(surviving_chips=7)
+
+
+def test_spike_guard():
+    g = SpikeGuard(window=10, factor=10.0)
+    for _ in range(10):
+        assert not g.observe(1.0)
+    assert g.observe(50.0)          # 50x the median
+    assert g.observe(float("nan"))  # non-finite always trips
+    assert not g.observe(1.2)

@@ -1,0 +1,61 @@
+"""End-to-end behaviour + dry-run artifact validation.
+
+The dry-run itself (512 forced host devices) runs via
+``python -m repro.launch.dryrun``; these tests validate the committed
+artifacts cover the full matrix and that every cell compiled.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+_have_artifacts = ART.exists() and len(list(ART.glob("*.json"))) > 0
+
+
+@pytest.mark.skipif(not _have_artifacts, reason="run repro.launch.dryrun first")
+@pytest.mark.parametrize("mesh", ["pod", "multipod"])
+def test_dryrun_matrix_complete_and_green(mesh):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in api.SHAPES.items():
+            p = ART / f"{arch}__{shape_name}__{mesh}.json"
+            assert p.exists(), f"missing dry-run cell {p.name}"
+            rec = json.loads(p.read_text())
+            ok, _ = api.applicable(cfg, shape)
+            if not ok:
+                assert rec["status"] == "skipped", p.name
+            else:
+                assert rec["status"] == "ok", (p.name, rec.get("error"))
+                assert rec["n_chips"] == (512 if mesh == "multipod" else 256)
+                assert rec["memory"]["peak_bytes_per_device"] > 0
+                assert rec["per_chip"]["flops"] > 0
+
+
+@pytest.mark.skipif(not _have_artifacts, reason="run repro.launch.dryrun first")
+def test_dryrun_records_collective_schedule():
+    rec = json.loads((ART / "command-r-plus-104b__train_4k__pod.json").read_text())
+    colls = rec["collectives"]
+    assert set(colls) == {"all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute"}
+    assert sum(c["count"] for c in colls.values()) > 0
+
+
+def test_quickstart_example_runs():
+    import subprocess
+    import sys
+    import os
+
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    r = subprocess.run([sys.executable, str(repo / "examples" / "quickstart.py")],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    assert "prediction" in r.stdout.lower() or "aidw" in r.stdout.lower()
