@@ -1,8 +1,11 @@
 """Benchmark harness — one function per paper table/figure + roofline readers.
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper] [--skip-roofline]``
+``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
+[--skip-roofline] [--skip-session]``
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
+cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
+throughput (Stage-1 rebuild excluded) and verify the fused Stage-2 path.
 """
 
 from __future__ import annotations
@@ -13,9 +16,11 @@ import sys
 
 def main() -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("--full", action="store_true", help="add the 64K size")
+    p.add_argument("--full", action="store_true",
+                   help="add the 64K size; serving shape becomes 1Mx64K")
     p.add_argument("--skip-paper", action="store_true")
     p.add_argument("--skip-roofline", action="store_true")
+    p.add_argument("--skip-session", action="store_true")
     args = p.parse_args()
 
     rows: list[tuple] = []
@@ -28,6 +33,12 @@ def main() -> None:
         rows += T.table2_stage_split(sizes)
         rows += T.table3_knn_compare(sizes)
         rows += T.accuracy_check()
+
+    if not args.skip_session:
+        from . import session_bench as S
+
+        rows += S.session_rows(S.FULL_SIZES if args.full else S.SIZES)
+        rows += S.fused_rows()
 
     if not args.skip_roofline:
         from . import roofline as R

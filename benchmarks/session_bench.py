@@ -1,0 +1,105 @@
+"""Cold-plan vs warm-session AIDW throughput (the serving amortization story).
+
+Workload model: heavy repeated query traffic over a mostly-static dataset.
+Real traffic arrives in odd-sized batches, which is the worst case for the
+one-shot pipeline: every distinct batch shape retraces + recompiles Stage-1
+and Stage-2, and every call re-plans and re-bins the even grid.  The
+InterpolationSession amortizes both — the grid build runs once and
+power-of-two query bucketing keeps all batches on one compiled executable.
+
+Reported rows (CSV schema name,us_per_call,derived):
+
+* ``session/plan_build``        — one-time Stage-1 build (grid + CSR binning)
+* ``session/cold_per_batch``    — ``aidw_improved`` per odd-sized batch
+                                  (re-plan + re-bin + retrace per shape)
+* ``session/warm_per_batch``    — ``session.query`` per batch, Stage-1 rebuild
+                                  EXCLUDED by construction (plan is resident)
+* ``session/warm_speedup``      — cold / warm throughput ratio
+* ``session/fused_maxerr``      — fused (alpha-in-kernel) vs unfused Stage-2
+
+Paper-table conventions apply (benchmarks/paper_tables.py): this container is
+CPU-only, so the default sizes scale down; ``--full`` restores the paper-scale
+serving shape (1M data points, 64K-query batches).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AidwConfig, InterpolationSession, aidw_improved
+from repro.data.pipeline import spatial_points, spatial_queries
+
+# (m data points, base batch, number of traffic batches)
+SIZES = (16384, 2048, 3)
+FULL_SIZES = (1_048_576, 65536, 3)
+
+
+def _batches(base: int, n_batches: int):
+    """Odd-sized batches around ``base`` — realistic (non-padded) traffic."""
+    return [spatial_queries(base - 17 * i - 1, seed=100 + i)
+            for i in range(n_batches)]
+
+
+def session_rows(sizes=SIZES) -> list[tuple]:
+    m, base, n_batches = sizes
+    pts = spatial_points(m, seed=0)
+    traffic = _batches(base, n_batches)
+    cfg = AidwConfig()
+    rows: list[tuple] = []
+
+    # -- cold: one-shot pipeline per batch (re-plan/re-bin/retrace each) -----
+    aidw_improved(pts, traffic[0], cfg).values.block_until_ready()  # warm libs
+    cold = []
+    for qs in traffic:
+        t0 = time.perf_counter()
+        aidw_improved(pts, qs, cfg).values.block_until_ready()
+        cold.append(time.perf_counter() - t0)
+    cold_us = float(np.mean(cold)) * 1e6
+
+    # -- warm: session with resident plan + bucketed executables -------------
+    sess = InterpolationSession(pts, cfg, query_domain=traffic[0])
+    plan_us = sess.stats["last_plan_s"] * 1e6
+    sess.query(traffic[0]).values.block_until_ready()   # compile the bucket
+    warm = []
+    for qs in traffic:
+        t0 = time.perf_counter()
+        sess.query(qs).values.block_until_ready()
+        warm.append(time.perf_counter() - t0)
+    warm_us = float(np.mean(warm)) * 1e6
+
+    qps_cold = base / (cold_us / 1e6)
+    qps_warm = base / (warm_us / 1e6)
+    rows.append((f"session/plan_build/{m}", plan_us, "one-time Stage-1 build"))
+    rows.append((f"session/cold_per_batch/{m}x{base}", cold_us,
+                 f"{qps_cold:.0f} q/s (re-plan+retrace per odd batch)"))
+    rows.append((f"session/warm_per_batch/{m}x{base}", warm_us,
+                 f"{qps_warm:.0f} q/s (Stage-1 rebuild excluded)"))
+    rows.append((f"session/warm_speedup/{m}x{base}", 0.0,
+                 f"{cold_us / warm_us:.1f}x warm-vs-cold throughput"))
+    assert sess.stats["stage1_builds"] == 1, sess.stats
+    return rows
+
+
+def fused_rows(m: int = 4096, n: int = 1024) -> list[tuple]:
+    """Exercise the fused alpha-in-kernel Stage-2 path and bound its error.
+
+    Pallas interpret mode on CPU (correctness vehicle); on a TPU the fused
+    path is one kernel launch for the whole Stage 2.
+    """
+    pts = spatial_points(m, seed=7)
+    qs = spatial_queries(n, seed=8)
+    kw = dict(tile_q=256, tile_d=512, interpret=True)
+    unfused = InterpolationSession(pts, AidwConfig(), query_domain=qs)
+    fused = InterpolationSession(
+        pts, AidwConfig(stage2="tiled", fused=True, **kw), query_domain=qs)
+
+    ref = np.asarray(unfused.query(qs).values)
+    t0 = time.perf_counter()
+    got = np.asarray(fused.query(qs).values)
+    fused_us = (time.perf_counter() - t0) * 1e6
+    err = float(np.abs(got - ref).max())
+    assert err < 1e-5, f"fused Stage-2 diverged from unfused: {err}"
+    return [(f"session/fused_stage2_interpret/{m}x{n}", fused_us,
+             f"maxerr={err:.1e} vs unfused (tol 1e-5)")]

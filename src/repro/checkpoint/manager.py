@@ -43,7 +43,13 @@ _VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
 
 
 def _leaf_name(path) -> str:
-    return jax.tree_util.keystr(path, simple=True, separator="__")
+    try:
+        return jax.tree_util.keystr(path, simple=True, separator="__")
+    except TypeError:  # jax 0.4.x keystr has no simple/separator kwargs;
+        # reproduce simple=True output so checkpoints stay cross-version
+        return "__".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
 
 
 class CheckpointManager:

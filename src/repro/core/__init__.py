@@ -12,7 +12,17 @@ from .aidw import (
 )
 from .grid import CellTable, GridSpec, bin_points, cell_ids, plan_grid
 from .knn import KnnResult, brute_knn, grid_knn, mean_nn_distance
-from .pipeline import AidwConfig, AidwResult, aidw_improved, aidw_original, idw_standard
+from .pipeline import (
+    AidwConfig,
+    AidwPlan,
+    AidwResult,
+    aidw_improved,
+    aidw_original,
+    execute,
+    idw_standard,
+    plan,
+)
+from .session import InterpolationSession, bucket_size
 
 __all__ = [
     "DEFAULT_ALPHAS", "adaptive_alpha", "alpha_from_membership",
@@ -20,5 +30,7 @@ __all__ = [
     "nn_statistic", "weighted_interpolate",
     "CellTable", "GridSpec", "bin_points", "cell_ids", "plan_grid",
     "KnnResult", "brute_knn", "grid_knn", "mean_nn_distance",
-    "AidwConfig", "AidwResult", "aidw_improved", "aidw_original", "idw_standard",
+    "AidwConfig", "AidwPlan", "AidwResult", "aidw_improved", "aidw_original",
+    "execute", "idw_standard", "plan",
+    "InterpolationSession", "bucket_size",
 ]

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import aidw as A
+from .jax_compat import pvary, shard_map
 
 PAD_COORD = 1e30
 
@@ -154,7 +155,7 @@ def make_ring_aidw(
                                        q_block)
             return (topk, blk), None
 
-        topk0 = jax.lax.pvary(
+        topk0 = pvary(
             jnp.full((queries.shape[0], k), jnp.inf, points.dtype),
             all_axes)  # carry inherits the queries' full varying-axes set
         (topk, _), _ = jax.lax.scan(knn_step, (topk0, points), None,
@@ -177,7 +178,7 @@ def make_ring_aidw(
 
     data_spec = P(ring_axis, None)
     query_spec = P(all_axes, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(data_spec, query_spec, P(), P()),
         out_specs=P(all_axes),

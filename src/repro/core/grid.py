@@ -102,6 +102,17 @@ def cell_ids(spec: GridSpec, x: jax.Array, y: jax.Array) -> jax.Array:
     return row * spec.n_cols + col
 
 
+# Trace-time counter: bin_points is jitted, so this increments only when the
+# binning computation is (re)traced — a stable count across repeated session
+# queries proves Stage-1 is never rebuilt (see tests/test_session.py).
+_BIN_TRACES = [0]
+
+
+def bin_traces() -> int:
+    """How many times :func:`bin_points` has been (re)traced."""
+    return _BIN_TRACES[0]
+
+
 @partial(jax.jit, static_argnums=0)
 def bin_points(spec: GridSpec, x: jax.Array, y: jax.Array, z: jax.Array) -> CellTable:
     """Sort points by cell id and build the CSR cell table.
@@ -110,6 +121,7 @@ def bin_points(spec: GridSpec, x: jax.Array, y: jax.Array, z: jax.Array) -> Cell
     thrust::reduce_by_key (count) -> cell_start[c+1] - cell_start[c]
     thrust::unique_by_key (head)  -> cell_start[c]
     """
+    _BIN_TRACES[0] += 1
     ids = cell_ids(spec, x, y)
     order = jnp.argsort(ids).astype(jnp.int32)
     sorted_ids = ids[order]

@@ -1,0 +1,61 @@
+"""Version-compat shims over multi-device jax APIs (0.4.x <-> 0.5+).
+
+Sibling of ``repro.kernels.pallas_compat``: the distributed layer imports
+these symbols from here so it runs unmodified on both sides of the API moves.
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to a top-level
+  ``jax.shard_map`` after 0.4.x.
+* ``pvary``     — introduced alongside the varying-manual-axes (check_vma)
+  rework; on 0.4.x shard_map there is no varying-axes tracking to annotate,
+  so the shim is the identity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+
+def pvary(x, axis_name):
+    """``jax.lax.pvary`` where it exists; identity on 0.4.x."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_name) if fn is not None else x
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the
+    ``jax.sharding.AxisType`` enum exists; 0.4.x meshes are always Auto."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:  # jax 0.4.x
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager: ``jax.set_mesh`` where it exists; on
+    0.4.x the classic ``with mesh:`` enters the same thread-local context."""
+    fn = getattr(jax, "set_mesh", None)
+    return fn(mesh) if fn is not None else mesh
+
+
+def get_ambient_mesh():
+    """The mesh installed by :func:`set_mesh`, or None/empty outside one.
+
+    ``jax.sharding.get_abstract_mesh`` where it exists; the thread-local
+    physical mesh on 0.4.x (same emptiness/axis_names surface).
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+__all__ = ["shard_map", "pvary", "make_auto_mesh", "set_mesh",
+           "get_ambient_mesh"]

@@ -9,6 +9,39 @@ Variants (all numerically equivalent modulo accumulation order):
 * :func:`aidw_original`  — the authors' previous algorithm (Mei et al. 2015):
   brute-force global kNN + the same Stage 2.  This is the paper's baseline.
 * :func:`idw_standard`   — Shepard (1968) constant-alpha IDW.
+
+Plan/execute contract (serving-scale API; see also ``repro.core.session``):
+
+The paper splits the improved algorithm into a one-time grid build and a
+per-query pass, but a naive ``aidw_improved`` call re-plans and re-bins on
+every invocation.  For repeated queries over a mostly-static dataset the
+pipeline is therefore factored into:
+
+* :func:`plan` — HOST-side grid planning (static ``GridSpec``) plus the
+  device-resident CSR cell table (:class:`repro.core.grid.CellTable`), the
+  study-area constants for Eq. (2), and the pipeline config, bundled into an
+  :class:`AidwPlan`.  Runs once per dataset (or per ``update``).  Because the
+  grid spec determines downstream array SHAPES, ``plan`` must run eagerly;
+  everything after it is shape-static and jit-safe.
+* :func:`execute` — the per-query Stage-1 (grid kNN + mean NN distance) and
+  Stage-2 (adaptive alpha + Eq. (1) weighting) over a prebuilt plan.  Pure in
+  the plan arrays and queries: safe to wrap in ``jax.jit`` with the plan's
+  static fields (``spec``, ``cfg``, ``n_points``, ``area``) as static args —
+  :data:`_session_execute` below is exactly that jit, shared by every
+  :class:`repro.core.session.InterpolationSession`.
+
+Padding rules: callers may pad the query batch to a bucketed shape (power of
+two) so repeated odd-sized batches reuse one compiled executable.  Padded
+queries are ordinary coordinates (pad with an EDGE query, not zeros, so the
+padded lanes stay in a dense, cheap-to-search cell); all per-query outputs
+are independent, so slicing ``[:n]`` recovers results bit-identical to an
+unpadded call.  Per-query reductions never cross the query axis, which is
+what makes bucketed results match unbucketed ones bitwise.
+
+Donation rules: the padded query buffer is created by the caller expressly
+for one ``execute`` call, so sessions donate it (``donate_argnums``) on
+backends that support buffer donation (not CPU); plan arrays are long-lived
+and must NEVER be donated — they are reused by every subsequent query.
 """
 
 from __future__ import annotations
@@ -38,7 +71,9 @@ class AidwConfig:
     exact: bool = True             # certified 2-pass kNN (False = paper heuristic)
     knn_block: int = 4096
     interp_block: int = 1024
+    interp_data_block: int = 0     # chunk Stage-2 data axis (0 = whole dataset)
     stage2: Literal["naive", "tiled"] = "naive"
+    fused: bool = False            # tiled only: alpha-in-kernel single launch
     tile_q: int = 256              # Pallas query-block
     tile_d: int = 512              # Pallas data-block
     interpret: bool = True         # CPU container: run Pallas in interpret mode
@@ -53,8 +88,66 @@ class AidwResult:
     timings: dict = field(default_factory=dict)   # stage -> seconds
 
 
+@dataclass(frozen=True)
+class AidwPlan:
+    """Reusable Stage-1 build: everything that depends only on the dataset.
+
+    ``spec``/``cfg``/``n_points``/``area`` are static (hashable) and safe as
+    jit static args; ``table``/``points_xy``/``values`` are device-resident
+    arrays reused — never donated — across queries.
+    """
+
+    spec: G.GridSpec
+    table: G.CellTable
+    points_xy: jax.Array           # (m, 2)
+    values: jax.Array              # (m,)
+    n_points: int
+    area: float
+    cfg: AidwConfig
+
+
 def _study_area(spec: G.GridSpec) -> float:
     return (spec.n_cols * spec.cell_width) * (spec.n_rows * spec.cell_width)
+
+
+# Python-invocation counter for the execute body: under jit this increments at
+# TRACE time only, so a stable count across repeated calls proves the
+# compilation cache was hit (see tests/test_session.py).
+_EXECUTE_TRACES = [0]
+
+
+def execute_traces() -> int:
+    """How many times the execute body has been (re)traced or run eagerly."""
+    return _EXECUTE_TRACES[0]
+
+
+def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
+         query_domain=None) -> AidwPlan:
+    """One-time Stage-1 build: grid planning + CSR binning for a dataset.
+
+    ``query_domain`` optionally extends the grid's bounding box to cover
+    queries that lie outside the data points' hull (pass the query array, or
+    any (n, 2) sample of the expected query region).  Queries outside the
+    planned grid are clamped to the border cells; their kNN is still correct
+    whenever the expansion level covers the true neighbours, and the
+    per-query ``overflow`` flag reports when it could not be certified.
+    """
+    points_xyz = jnp.asarray(points_xyz)
+    px, py, pz = points_xyz[:, 0], points_xyz[:, 1], points_xyz[:, 2]
+    qd = None if query_domain is None else np.asarray(query_domain)
+    spec = G.plan_grid(np.asarray(points_xyz[:, :2]), qd,
+                       cell_factor=cfg.cell_factor)
+    table = G.bin_points(spec, px, py, pz)
+    return AidwPlan(spec=spec, table=table, points_xy=points_xyz[:, :2],
+                    values=pz, n_points=points_xyz.shape[0],
+                    area=_study_area(spec), cfg=cfg)
+
+
+def _stage1(spec: G.GridSpec, cfg: AidwConfig, table: G.CellTable, queries_xy):
+    block = min(cfg.knn_block, max(queries_xy.shape[0], 1))
+    res = K.grid_knn(spec, table, queries_xy, cfg.k, cfg.max_level,
+                     cfg.window, block, cfg.exact)
+    return res, K.mean_nn_distance(res.d2)
 
 
 def _stage2(queries_xy, points_xy, values, alpha, cfg: AidwConfig):
@@ -66,30 +159,70 @@ def _stage2(queries_xy, points_xy, values, alpha, cfg: AidwConfig):
             tile_q=cfg.tile_q, tile_d=cfg.tile_d, interpret=cfg.interpret,
         )
     return A.weighted_interpolate(queries_xy, points_xy, values, alpha,
-                                  cfg.interp_block)
+                                  cfg.interp_block, cfg.interp_data_block)
 
 
-def aidw_improved(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),
-                  *, timings: bool = False) -> AidwResult:
-    """The paper's improved algorithm: grid kNN -> adaptive alpha -> Eq. (1)."""
-    points_xyz = jnp.asarray(points_xyz)
+def _stage2_fused(queries_xy, points_xy, values, r_obs, n_points, area,
+                  cfg: AidwConfig):
+    """Alpha-in-kernel Stage 2: Eqs. (2)/(4)/(5)/(6) + Eq. (1) in ONE launch."""
+    from repro.kernels.aidw import ops as aidw_ops
+
+    return aidw_ops.fused_stage2(
+        queries_xy, points_xy, values, r_obs,
+        n_points=float(n_points), area=float(area), alphas=tuple(cfg.alphas),
+        r_min=cfg.r_min, r_max=cfg.r_max,
+        tile_q=cfg.tile_q, tile_d=cfg.tile_d, interpret=cfg.interpret,
+    )
+
+
+def _execute_core(spec: G.GridSpec, cfg: AidwConfig, n_points: int,
+                  area: float, table: G.CellTable, points_xy, values,
+                  queries_xy):
+    """Stage 1 + Stage 2 over a prebuilt plan (jit-safe; spec/cfg static)."""
+    _EXECUTE_TRACES[0] += 1
+    res, r_obs = _stage1(spec, cfg, table, queries_xy)
+    alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=cfg.alphas,
+                             r_min=cfg.r_min, r_max=cfg.r_max)
+    if cfg.fused and cfg.stage2 == "tiled":
+        out = _stage2_fused(queries_xy, points_xy, values, r_obs,
+                            n_points, area, cfg)
+    else:
+        out = _stage2(queries_xy, points_xy, values, alpha, cfg)
+    return out, alpha, r_obs, res.overflow
+
+
+# The session entry points: one compiled executable per (spec, cfg, n_points,
+# area, array shapes).  Bucketed query padding makes the shape key coarse, so
+# repeated odd-sized batches all hit the same executable.  The donating
+# variant gives up the padded query buffer (argnums 7) — see the module
+# docstring's donation rules.
+_session_execute = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3))
+_session_execute_donate = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3),
+                                  donate_argnums=(7,))
+
+
+def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:
+    """Per-query pass over a prebuilt :class:`AidwPlan` (eager staging).
+
+    For the jitted, shape-bucketed, donation-aware path use
+    :class:`repro.core.session.InterpolationSession`.
+    """
     queries_xy = jnp.asarray(queries_xy)
-    px, py, pz = points_xyz[:, 0], points_xyz[:, 1], points_xyz[:, 2]
+    cfg = pln.cfg
 
     t0 = time.perf_counter()
-    spec = G.plan_grid(np.asarray(points_xyz[:, :2]), np.asarray(queries_xy),
-                       cell_factor=cfg.cell_factor)
-    table = G.bin_points(spec, px, py, pz)
-    res = K.grid_knn(spec, table, queries_xy, cfg.k, cfg.max_level,
-                     cfg.window, cfg.knn_block, cfg.exact)
-    r_obs = K.mean_nn_distance(res.d2)
+    res, r_obs = _stage1(pln.spec, cfg, pln.table, queries_xy)
     if timings:
         r_obs.block_until_ready()
     t1 = time.perf_counter()
 
-    alpha = A.adaptive_alpha(r_obs, points_xyz.shape[0], _study_area(spec),
-                             alphas=cfg.alphas, r_min=cfg.r_min, r_max=cfg.r_max)
-    values = _stage2(queries_xy, points_xyz[:, :2], pz, alpha, cfg)
+    alpha = A.adaptive_alpha(r_obs, pln.n_points, pln.area, alphas=cfg.alphas,
+                             r_min=cfg.r_min, r_max=cfg.r_max)
+    if cfg.fused and cfg.stage2 == "tiled":
+        values = _stage2_fused(queries_xy, pln.points_xy, pln.values, r_obs,
+                               pln.n_points, pln.area, cfg)
+    else:
+        values = _stage2(queries_xy, pln.points_xy, pln.values, alpha, cfg)
     if timings:
         values.block_until_ready()
     t2 = time.perf_counter()
@@ -99,6 +232,25 @@ def aidw_improved(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),
         overflow=int(jnp.sum(res.overflow)),
         timings={"knn": t1 - t0, "interp": t2 - t1} if timings else {},
     )
+
+
+def aidw_improved(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),
+                  *, timings: bool = False) -> AidwResult:
+    """The paper's improved algorithm: grid kNN -> adaptive alpha -> Eq. (1).
+
+    One-shot convenience: plans (grid build + binning) on EVERY call.  For
+    repeated queries over a static dataset build the plan once — see
+    :func:`plan`/:func:`execute` and ``repro.core.session``.
+    """
+    t0 = time.perf_counter()
+    pln = plan(points_xyz, cfg, query_domain=np.asarray(queries_xy))
+    res = execute(pln, queries_xy, timings=timings)
+    if timings:
+        # keep the historical split: 'knn' covers plan+bin+Stage-1
+        res.timings["plan"] = time.perf_counter() - t0 \
+            - res.timings["knn"] - res.timings["interp"]
+        res.timings["knn"] += res.timings["plan"]
+    return res
 
 
 def aidw_original(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),

@@ -38,6 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from . import aidw as A
 from . import grid as G
 from . import knn as K
+from .jax_compat import shard_map
 from .distributed import PAD_COORD, _ring_interp_step
 
 
@@ -151,7 +152,7 @@ def make_slab_aidw(
                                          length=p_ring)
         return swz / sw, res.overflow
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(ring_axis, None), P(ring_axis, None), P(), P()),
         out_specs=(P(ring_axis), P(ring_axis)),

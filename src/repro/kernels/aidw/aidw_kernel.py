@@ -35,6 +35,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import aidw as A
+from repro.kernels.pallas_compat import CompilerParams
 
 DEFAULT_TILE_Q = 256
 DEFAULT_TILE_D = 512
@@ -123,7 +124,7 @@ def tiled_interpolate_kernel(
             pltpu.VMEM((tile_q, 1), jnp.float32),
             pltpu.VMEM((tile_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

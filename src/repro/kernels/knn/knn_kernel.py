@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 DEFAULT_TILE_Q = 256
 DEFAULT_TILE_D = 512
 
@@ -90,7 +92,7 @@ def knn_kernel(
         out_specs=pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, k), qx.dtype),
         scratch_shapes=[pltpu.VMEM((tile_q, k), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,20 @@
+"""Version-compat shims over ``jax.experimental.pallas.tpu``.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and kept
+the old name as a deprecated alias for a while).  Kernels import the symbol
+from here so they run unmodified on both sides of the rename:
+
+* jax >= 0.5.x : ``pltpu.CompilerParams``
+* jax  0.4.x  : ``pltpu.TPUCompilerParams``
+
+Both accept the same ``dimension_semantics=...`` constructor arguments used by
+this repo's kernels.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

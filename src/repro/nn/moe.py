@@ -23,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.jax_compat import pvary, shard_map
+
 from .layers import dense
 
 
@@ -120,7 +122,7 @@ def _psum_ig_fwd(x, axis):
 def _psum_ig_bwd(axis, _, g):
     # cotangent is replicated across ``axis``; mark it varying to match the
     # primal input's manual-axes type (identity is the true psum backward).
-    return (jax.lax.pvary(g, axis),)
+    return (pvary(g, axis),)
 
 
 _psum_identity_grad.defvjp(_psum_ig_fwd, _psum_ig_bwd)
@@ -139,7 +141,9 @@ def moe_apply_ep(x, w_router, w_gate, w_up, w_down, *, top_k: int,
     """
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.core.jax_compat import get_ambient_mesh
+
+    mesh = get_ambient_mesh()
     if mesh is None or mesh.empty or axis not in mesh.axis_names:
         # no mesh context (single-device unit tests): plain dispatch
         return moe_apply(x, w_router, w_gate, w_up, w_down, top_k=top_k,
@@ -193,7 +197,7 @@ def moe_apply_ep(x, w_router, w_gate, w_up, w_down, *, top_k: int,
         out = _psum_identity_grad(partial.astype(jnp.float32), axis)
         return out.astype(x.dtype).reshape(B, S, D)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(b_axes, None, None), P(None, None),

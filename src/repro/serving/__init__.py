@@ -1,1 +1,5 @@
-"""Batched serving: slot-based continuous batching engine."""
+"""Batched serving: LM continuous batching + session-backed AIDW serving."""
+
+from .engine import AidwEngine, InterpolationRequest, Request, ServingEngine
+
+__all__ = ["AidwEngine", "InterpolationRequest", "Request", "ServingEngine"]

@@ -1,15 +1,27 @@
-"""Batched serving engine: slot-based continuous batching over prefill/decode.
+"""Batched serving engines.
 
-A fixed pool of ``batch_size`` slots decodes in lockstep (the jitted decode
-step is one token for the whole pool).  When a slot finishes (EOS/max_tokens)
-it is refilled from the request queue by re-prefilling JUST that slot's
-sequence and splicing its cache into the pool — the classic
-continuous-batching slot swap, expressed with pure-functional cache updates.
+Two workloads share this module:
+
+* :class:`ServingEngine` — LM slot-based continuous batching over
+  prefill/decode.  A fixed pool of ``batch_size`` slots decodes in lockstep
+  (the jitted decode step is one token for the whole pool).  When a slot
+  finishes (EOS/max_tokens) it is refilled from the request queue by
+  re-prefilling JUST that slot's sequence and splicing its cache into the
+  pool — the classic continuous-batching slot swap, expressed with
+  pure-functional cache updates.
+
+* :class:`AidwEngine` — spatial-interpolation serving over a persistent
+  :class:`repro.core.session.InterpolationSession`.  The Stage-1 grid build
+  is amortized across the session; incoming requests are coalesced FIFO into
+  microbatches of at most ``max_batch`` queries, and the session's
+  power-of-two bucketing keeps a stream of odd-sized microbatches on one
+  compiled executable.
 
 Simplifications vs. a production stack (documented): synchronized position
 counter per slot via per-slot start offsets is folded into the attention
 validity mask; prompts within one engine share a maximum prompt length
-(length-classed queues).
+(length-classed queues); the AIDW engine is synchronous (no admission queue
+thread) — callers hand it a request list per step.
 """
 
 from __future__ import annotations
@@ -154,3 +166,78 @@ class ServingEngine:
                 (tok is not None and tok == self.eos_id):
             r.done = True
         return r.done
+
+
+# ---------------------------------------------------------------------------
+# AIDW interpolation serving
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class InterpolationRequest:
+    uid: int
+    queries_xy: np.ndarray          # (n, 2)
+    values: np.ndarray | None = None
+    done: bool = False
+
+
+class AidwEngine:
+    """Microbatched AIDW serving over one InterpolationSession.
+
+    Requests are coalesced in arrival order into batches of at most
+    ``max_batch`` queries (a request larger than ``max_batch`` forms its own
+    batch), interpolated with ONE ``session.query`` per coalesced batch, and
+    scattered back to their requests — so p requests of n queries each cost
+    ceil(p*n / max_batch) jitted launches instead of p, and zero Stage-1
+    rebuilds.
+    """
+
+    def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
+                 query_domain=None, min_bucket: int = 64):
+        from repro.core import AidwConfig
+        from repro.core.session import InterpolationSession
+
+        self.session = InterpolationSession(
+            points_xyz, cfg or AidwConfig(), query_domain=query_domain,
+            min_bucket=min_bucket)
+        self.max_batch = int(max_batch)
+        self.stats = {"requests": 0, "batches": 0, "queries": 0,
+                      "overflow": 0}
+
+    def update_dataset(self, points_xyz) -> None:
+        """Refresh the served dataset (one Stage-1 rebuild, executables kept)."""
+        self.session.update(points_xyz)
+
+    def run(self, requests: list[InterpolationRequest]) -> dict:
+        """Serve all requests; returns throughput stats (for THIS call;
+        the cumulative counters live on ``self.stats``)."""
+        t0 = time.perf_counter()
+        served = 0
+        i = 0                       # cursor: O(p) coalescing, no list shifts
+        while i < len(requests):
+            group = [requests[i]]
+            size = group[0].queries_xy.shape[0]
+            i += 1
+            while i < len(requests) and \
+                    size + requests[i].queries_xy.shape[0] <= self.max_batch:
+                group.append(requests[i])
+                size += requests[i].queries_xy.shape[0]
+                i += 1
+            batch = np.concatenate([r.queries_xy for r in group], axis=0)
+            res = self.session.query(batch)
+            vals = np.asarray(res.values)
+            off = 0
+            for r in group:
+                n = r.queries_xy.shape[0]
+                r.values = vals[off:off + n]
+                r.done = True
+                off += n
+            self.stats["batches"] += 1
+            self.stats["queries"] += size
+            self.stats["overflow"] += res.overflow
+            served += size
+        self.stats["requests"] += len(requests)
+        dt = time.perf_counter() - t0
+        self.stats["wall_s"] = dt
+        self.stats["queries_per_s"] = served / max(dt, 1e-9)
+        return dict(self.stats)

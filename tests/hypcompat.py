@@ -1,0 +1,51 @@
+"""Optional-hypothesis guard shared by the test modules.
+
+Minimal containers ship without dev dependencies; a bare
+``from hypothesis import given`` at module scope then kills pytest at
+COLLECTION time, taking every non-property test in the module down with it.
+Importing the three names from here instead gives:
+
+* hypothesis installed (CI, ``pip install -r requirements-dev.txt``):
+  the real ``given``/``settings``/``st`` — property tests run normally.
+* hypothesis missing: stand-ins that turn each ``@given`` test into an
+  individual runtime skip (the per-test equivalent of
+  ``pytest.importorskip("hypothesis")``), while plain tests in the same
+  module still collect and run.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal container — see requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # plain *args signature: pytest must not mistake the wrapped
+            # test's parameters for fixtures (so no functools.wraps)
+            def skipper(*args, **kwargs):
+                pytest.skip(
+                    "hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """st.floats/st.integers/... placeholders; args are never drawn."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -3,7 +3,13 @@ sharded train step, production-mesh construction."""
 
 from __future__ import annotations
 
+import pytest
+
 from conftest import run_multidevice
+
+# subprocess-spawning (8 forced host devices per test); moe-ep additionally
+# needs the explicit-mesh API (ROADMAP 'Open items')
+pytestmark = pytest.mark.slow
 
 
 def test_ring_aidw_matches_single_device():
@@ -103,7 +109,8 @@ print("mesh-ok")
 def test_expert_parallel_moe_matches_pjit_dispatch():
     out = run_multidevice("""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.jax_compat import make_auto_mesh
 from repro.nn.moe import moe_apply, moe_apply_ep
 
 rng = np.random.default_rng(0)
@@ -113,9 +120,9 @@ wr = jnp.asarray(rng.normal(0,0.5,(D,E)), jnp.float32)
 wg = jnp.asarray(rng.normal(0,0.1,(E,D,F)), jnp.float32)
 wu = jnp.asarray(rng.normal(0,0.1,(E,D,F)), jnp.float32)
 wd = jnp.asarray(rng.normal(0,0.1,(E,F,D)), jnp.float32)
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_auto_mesh((2,4), ("data","model"))
 ref = moe_apply(x, wr, wg, wu, wd, top_k=topk, capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with mesh:
     sh = lambda a: jax.device_put(a, NamedSharding(mesh, P("model")))
     out = jax.jit(lambda *a: moe_apply_ep(*a, top_k=topk, capacity_factor=8.0))(
         x, wr, sh(wg), sh(wu), sh(wd))
@@ -133,13 +140,13 @@ print("ep-ok")
 def test_ring_aidw_query_blocking():
     out = run_multidevice("""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.core import aidw_improved
 from repro.core.distributed import make_ring_aidw
+from repro.core.jax_compat import make_auto_mesh
 rng = np.random.default_rng(0)
 pts = rng.random((1024, 3)).astype(np.float32)
 q = rng.random((512, 2)).astype(np.float32)
-mesh = jax.make_mesh((8,), ("ring",), axis_types=(AxisType.Auto,))
+mesh = make_auto_mesh((8,), ("ring",))
 ref = np.asarray(aidw_improved(pts, q).values)
 for qb in (0, 17, 64):
     fn = make_ring_aidw(mesh, "ring", q_block=qb)
@@ -153,14 +160,14 @@ print("qblock-ok")
 def test_slab_aidw_matches_single_device():
     out = run_multidevice("""
 import numpy as np, jax
-from jax.sharding import AxisType
 from repro.core import aidw_improved, AidwConfig
+from repro.core.jax_compat import make_auto_mesh
 from repro.core.slab import slab_aidw
 
 rng = np.random.default_rng(3)
 pts = rng.random((8192, 3)).astype(np.float32)
 q = rng.random((2048, 2)).astype(np.float32)
-mesh = jax.make_mesh((8,), ("ring",), axis_types=(AxisType.Auto,))
+mesh = make_auto_mesh((8,), ("ring",))
 ref = np.asarray(aidw_improved(pts, q, AidwConfig(k=15, cell_factor=4.0)).values)
 out, ovf = slab_aidw(mesh, "ring", pts, q, k=15, cell_factor=4.0, window=512)
 assert ovf == 0

@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # guarded: skips, never dies, without hypothesis
 
 from repro.core import bin_points, cell_ids, plan_grid
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # guarded: skips, never dies, without hypothesis
 
 from repro.core import bin_points, brute_knn, grid_knn, mean_nn_distance, plan_grid
 

@@ -1,0 +1,98 @@
+"""Property tests (hypothesis): kNN exactness on adversarial point clouds,
+CSR cell-table invariants, and fused-vs-unfused Stage-2 agreement.
+
+Runs wherever dev deps are installed (``pip install -r requirements-dev.txt``,
+e.g. the CI gate); skips cleanly on minimal containers.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (adaptive_alpha, bin_points, brute_knn, cell_ids,
+                        grid_knn, plan_grid)
+
+CLOUDS = ("uniform", "duplicates", "collinear", "single_cell")
+
+
+def _cloud(mode: str, m: int, rng) -> np.ndarray:
+    """Random (m, 2) point cloud, including degenerate configurations."""
+    if mode == "duplicates":        # heavy exact-tie pressure on the top-k
+        base = rng.random((max(m // 4, 1), 2))
+        xy = base[rng.integers(0, len(base), m)]
+    elif mode == "collinear":       # all points on one line
+        t = rng.random(m)
+        xy = np.stack([t, 0.2 + 0.6 * t], axis=1)
+    elif mode == "single_cell":     # all points inside one grid cell
+        xy = 0.5 + rng.random((m, 2)) * 1e-4
+    else:
+        xy = rng.random((m, 2))
+    return xy.astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(20, 300), st.integers(1, 20), st.integers(0, 10_000),
+       st.sampled_from(CLOUDS))
+def test_grid_knn_exact_matches_brute(m, k, seed, mode):
+    """grid_knn(exact=True) == brute_knn wherever exactness was certified."""
+    rng = np.random.default_rng(seed)
+    xy = _cloud(mode, m, rng)
+    pts = np.concatenate([xy, rng.random((m, 1), np.float64)], 1).astype(np.float32)
+    qs = rng.random((32, 2)).astype(np.float32)
+    spec = plan_grid(pts[:, :2], qs)
+    table = bin_points(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1]),
+                       jnp.array(pts[:, 2]))
+    res = grid_knn(spec, table, jnp.array(qs), k, None, 4096, 32, True)
+    bd2, _ = brute_knn(jnp.array(pts[:, :2]), jnp.array(qs), k)
+    certified = ~np.asarray(res.overflow)
+    assert certified.any()          # the window must be generous enough here
+    got = np.sort(np.asarray(res.d2), 1)[certified]
+    want = np.sort(np.asarray(bd2), 1)[certified]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 10_000), st.floats(0.3, 3.0),
+       st.sampled_from(CLOUDS))
+def test_cell_table_csr_invariants(m, seed, cell_factor, mode):
+    """cell_start is a monotone CSR: starts at 0, ends at m, diffs = counts."""
+    rng = np.random.default_rng(seed)
+    xy = _cloud(mode, m, rng)
+    z = rng.random(m).astype(np.float32)
+    spec = plan_grid(xy, cell_factor=cell_factor)
+    table = bin_points(spec, jnp.array(xy[:, 0]), jnp.array(xy[:, 1]),
+                       jnp.array(z))
+    cs = np.asarray(table.cell_start)
+    assert cs.shape == (spec.n_cells + 1,)
+    assert (np.diff(cs) >= 0).all()                 # monotone
+    assert cs[0] == 0
+    assert cs[-1] == m                              # every point binned once
+    ids = np.asarray(cell_ids(spec, jnp.array(xy[:, 0]), jnp.array(xy[:, 1])))
+    counts = np.bincount(ids, minlength=spec.n_cells)
+    assert (np.diff(cs) == counts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(50, 400), st.integers(1, 200), st.integers(0, 1000))
+def test_fused_stage2_matches_unfused(m, n, seed):
+    """Alpha-in-kernel fused Stage 2 == alpha-outside + tiled weighting."""
+    from repro.kernels.aidw import ops as aidw_ops
+
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.random((n, 2)), jnp.float32)
+    p = jnp.asarray(rng.random((m, 2)), jnp.float32)
+    z = jnp.asarray(np.sin(rng.random(m) * 7), jnp.float32)
+    r_obs = jnp.asarray(rng.uniform(0.0, 0.2, n), jnp.float32)
+    kw = dict(tile_q=8, tile_d=128, interpret=True)
+    fused = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=float(m), area=1.0,
+                                  **kw)
+    alpha = adaptive_alpha(r_obs, float(m), 1.0)
+    unfused = aidw_ops.tiled_interpolate(q, p, z, alpha, **kw)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)

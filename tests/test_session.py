@@ -1,0 +1,139 @@
+"""InterpolationSession: amortization counters, bucketing, bit-identity,
+dataset refresh, fused Stage-2, and the session-backed serving engine."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (AidwConfig, InterpolationSession, aidw_improved,
+                        bucket_size, execute)
+from repro.core import grid as G
+from repro.core import pipeline as P
+from repro.data.pipeline import spatial_points, spatial_queries
+
+
+def test_bucket_size_powers_of_two():
+    assert bucket_size(1) == 64          # floor
+    assert bucket_size(63) == 64
+    assert bucket_size(64) == 64
+    assert bucket_size(65) == 128
+    assert bucket_size(2048) == 2048
+    assert bucket_size(2049) == 4096
+    assert bucket_size(5, min_bucket=8) == 8
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+def test_warm_query_bit_identical_to_cold(spatial_data):
+    """Core acceptance: session.query == one-shot aidw_improved, bitwise."""
+    pts, qs = spatial_data
+    cold = aidw_improved(pts, qs)
+    sess = InterpolationSession(pts, query_domain=qs)
+    warm = sess.query(qs)
+    assert np.array_equal(np.asarray(cold.values), np.asarray(warm.values))
+    assert np.array_equal(np.asarray(cold.alpha), np.asarray(warm.alpha))
+    assert np.array_equal(np.asarray(cold.r_obs), np.asarray(warm.r_obs))
+    assert cold.overflow == warm.overflow == 0
+
+
+def test_no_rebuild_or_retrace_across_same_bucket_queries(spatial_data):
+    """Repeated odd-sized batches in one bucket: the jit cache is hit and
+    Stage-1 (bin_points) is neither re-traced nor re-run."""
+    pts, _ = spatial_data
+    sess = InterpolationSession(pts, min_bucket=64)
+    sess.query(spatial_queries(512, seed=2))        # compile the 512 bucket
+    traces0, bins0 = P.execute_traces(), G.bin_traces()
+    builds0 = sess.stats["stage1_builds"]
+    for i in range(5):
+        n = 512 - 3 * i
+        res = sess.query(spatial_queries(n, seed=10 + i))
+        assert res.values.shape == (n,)
+    assert P.execute_traces() == traces0            # zero execute retraces
+    assert G.bin_traces() == bins0                  # zero Stage-1 rebinning
+    assert sess.stats["stage1_builds"] == builds0 == 1
+    assert sess.stats["bucket_misses"] == 1
+    assert sess.stats["bucket_hits"] == 5
+
+
+def test_new_bucket_traces_exactly_once(spatial_data):
+    pts, _ = spatial_data
+    sess = InterpolationSession(pts, min_bucket=64)
+    sess.query(spatial_queries(100, seed=0))        # 128 bucket
+    t0 = P.execute_traces()
+    sess.query(spatial_queries(200, seed=1))        # 256 bucket: one trace
+    assert P.execute_traces() == t0 + 1
+    sess.query(spatial_queries(255, seed=2))        # 256 again: cache hit
+    assert P.execute_traces() == t0 + 1
+
+
+def test_bucket_boundary_shapes_roundtrip(spatial_data):
+    """n in {1, block-1, block, block+1} all pad, execute, and un-pad to
+    results bit-identical to an unpadded execute on the same plan."""
+    pts, qs = spatial_data
+    block = 64
+    sess = InterpolationSession(pts, min_bucket=block, query_domain=qs)
+    for n in (1, block - 1, block, block + 1):
+        warm = sess.query(qs[:n])
+        want = execute(sess.plan, qs[:n])
+        assert warm.values.shape == (n,)
+        assert np.array_equal(np.asarray(warm.values), np.asarray(want.values))
+        assert np.array_equal(np.asarray(warm.alpha), np.asarray(want.alpha))
+        assert warm.overflow == want.overflow
+
+
+def test_update_refreshes_dataset(spatial_data):
+    pts, qs = spatial_data
+    sess = InterpolationSession(pts, query_domain=qs)
+    v_old = np.asarray(sess.query(qs).values)
+    pts2 = spatial_points(pts.shape[0], seed=9)
+    sess.update(pts2)
+    v_new = np.asarray(sess.query(qs).values)
+    cold2 = np.asarray(aidw_improved(pts2, qs).values)
+    assert np.array_equal(v_new, cold2)             # serving == one-shot
+    assert not np.array_equal(v_new, v_old)         # dataset really changed
+    assert sess.stats["stage1_builds"] == 2
+
+
+def test_fused_session_matches_unfused(spatial_data):
+    """AidwConfig(fused=True) routes Stage 2 through the alpha-in-kernel
+    Pallas path; predictions agree with the two-launch path within 1e-5."""
+    pts, qs = spatial_data
+    unfused = InterpolationSession(pts, query_domain=qs)
+    fused_cfg = AidwConfig(stage2="tiled", fused=True, interpret=True,
+                           tile_q=128, tile_d=256)
+    fused = InterpolationSession(pts, fused_cfg, query_domain=qs)
+    ref = np.asarray(unfused.query(qs).values)
+    got = np.asarray(fused.query(qs).values)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_aidw_engine_coalesces_and_matches(spatial_data):
+    from repro.serving import AidwEngine, InterpolationRequest
+
+    pts, qs = spatial_data
+    eng = AidwEngine(pts, max_batch=256, query_domain=qs)
+    reqs = [InterpolationRequest(uid=i, queries_xy=qs[64 * i:64 * (i + 1)])
+            for i in range(6)]
+    stats = eng.run(reqs)
+    assert all(r.done for r in reqs)
+    got = np.concatenate([r.values for r in reqs])
+    want = np.asarray(execute(eng.session.plan, qs[:384]).values)
+    assert np.array_equal(got, want)
+    assert stats["batches"] < len(reqs)             # FIFO coalescing happened
+    assert stats["queries"] == 384
+    assert eng.session.stats["stage1_builds"] == 1  # zero per-request rebuilds
+
+
+def test_aidw_engine_dataset_refresh(spatial_data):
+    from repro.serving import AidwEngine, InterpolationRequest
+
+    pts, qs = spatial_data
+    eng = AidwEngine(pts, query_domain=qs)
+    r1 = InterpolationRequest(uid=0, queries_xy=qs[:128])
+    eng.run([r1])
+    eng.update_dataset(spatial_points(pts.shape[0], seed=11))
+    r2 = InterpolationRequest(uid=1, queries_xy=qs[:128])
+    eng.run([r2])
+    assert eng.session.stats["stage1_builds"] == 2
+    assert not np.array_equal(r1.values, r2.values)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.data.pipeline import LMStreamConfig, lm_batch
@@ -12,6 +13,10 @@ from repro.models import api
 from repro.nn.param import init_params
 from repro.optim import adamw
 from repro.training import trainer
+
+# full training loops + train-driver subprocess; compressed-training
+# convergence still open on jax 0.4.x (ROADMAP 'Open items')
+pytestmark = pytest.mark.slow
 
 
 def _setup(arch="granite-3-2b", lr=2e-3, **kw):
