@@ -5,7 +5,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
-throughput (Stage-1 rebuild excluded) and verify the fused Stage-2 path.
+throughput (Stage-1 rebuild excluded), verify the fused Stage-2 path, report
+warm SHARDED-session throughput on a mesh over every visible device
+(bit-identity checked), and time incremental ``update(deltas=...)`` against
+the full re-plan it replaces — the whole speedup story in one command.
 """
 
 from __future__ import annotations
@@ -37,8 +40,11 @@ def main() -> None:
     if not args.skip_session:
         from . import session_bench as S
 
-        rows += S.session_rows(S.FULL_SIZES if args.full else S.SIZES)
+        sizes = S.FULL_SIZES if args.full else S.SIZES
+        rows += S.session_rows(sizes)
         rows += S.fused_rows()
+        rows += S.sharded_rows(sizes)   # mesh over every visible device
+        rows += S.delta_rows()          # incremental vs full dataset refresh
 
     if not args.skip_roofline:
         from . import roofline as R

@@ -16,10 +16,22 @@ Reported rows (CSV schema name,us_per_call,derived):
                                   EXCLUDED by construction (plan is resident)
 * ``session/warm_speedup``      — cold / warm throughput ratio
 * ``session/fused_maxerr``      — fused (alpha-in-kernel) vs unfused Stage-2
+* ``session/sharded_per_batch`` — warm ``session.query`` on a mesh over every
+                                  visible device (run under
+                                  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+                                  to exercise a real mesh on CPU); verified
+                                  bit-identical to the single-device session
+* ``session/update_full``       — full ``session.update`` (re-plan + re-bin)
+* ``session/update_delta``      — incremental ``update(deltas=...)`` for a
+                                  1% churn (rebin_delta, spec + executables
+                                  kept) + the full/delta speedup ratio
 
 Paper-table conventions apply (benchmarks/paper_tables.py): this container is
 CPU-only, so the default sizes scale down; ``--full`` restores the paper-scale
 serving shape (1M data points, 64K-query batches).
+
+Standalone: ``python benchmarks/session_bench.py [--full] [--json]`` (the CI
+mesh job uploads the ``--json`` output as the perf-trajectory artifact).
 """
 
 from __future__ import annotations
@@ -103,3 +115,103 @@ def fused_rows(m: int = 4096, n: int = 1024) -> list[tuple]:
     assert err < 1e-5, f"fused Stage-2 diverged from unfused: {err}"
     return [(f"session/fused_stage2_interpret/{m}x{n}", fused_us,
              f"maxerr={err:.1e} vs unfused (tol 1e-5)")]
+
+
+def sharded_rows(sizes=SIZES) -> list[tuple]:
+    """Warm SHARDED session throughput over a mesh of every visible device.
+
+    On a 1-device host this degenerates to the shard_map-wrapped single-device
+    path (still a correctness check); under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` it exercises the
+    real 8-lane mesh partition.  Results are asserted bit-identical to the
+    single-device session on the same dataset.
+    """
+    import jax
+
+    from repro.core.jax_compat import make_auto_mesh
+
+    m, base, n_batches = sizes
+    n_dev = len(jax.devices())
+    mesh = make_auto_mesh((n_dev,), ("q",))
+    pts = spatial_points(m, seed=0)
+    traffic = _batches(base, n_batches)
+
+    single = InterpolationSession(pts, query_domain=traffic[0])
+    sess = InterpolationSession(pts, query_domain=traffic[0], mesh=mesh)
+    ref = np.asarray(single.query(traffic[0]).values)
+    got = np.asarray(sess.query(traffic[0]).values)   # also compiles bucket
+    assert np.array_equal(got, ref), \
+        f"sharded != single-device: {np.abs(got - ref).max()}"
+    warm = []
+    for qs in traffic:
+        t0 = time.perf_counter()
+        sess.query(qs).values.block_until_ready()
+        warm.append(time.perf_counter() - t0)
+    warm_us = float(np.mean(warm)) * 1e6
+    qps = base / (warm_us / 1e6)
+    return [(f"session/sharded_per_batch/{m}x{base}", warm_us,
+             f"{qps:.0f} q/s on {n_dev} device(s), bit-identical")]
+
+
+def delta_rows(m: int = 100_000, churn: float = 0.01) -> list[tuple]:
+    """Incremental ``update(deltas=...)`` vs full re-plan on a 100k dataset.
+
+    A balanced 1% churn (equal inserts and deletes, so ``n_points`` and every
+    compiled executable survive unchanged) through ``rebin_delta`` vs the
+    full grid re-plan + re-bin the same refresh would otherwise cost.
+    """
+    d = max(int(m * churn), 1)
+    pts = spatial_points(m, seed=3)
+    sess = InterpolationSession(pts, query_domain=spatial_queries(256, seed=4))
+    rng = np.random.default_rng(5)
+
+    refreshes = [spatial_points(m, seed=10 + i) for i in range(3)]
+    full = []
+    for new_pts in refreshes:                # full re-plan of the same m
+        t0 = time.perf_counter()
+        sess.update(new_pts)
+        full.append(time.perf_counter() - t0)
+    full_us = float(np.mean(full)) * 1e6
+
+    n_now = sess.plan.n_points
+    churns = [(spatial_points(d, seed=20 + i),
+               rng.choice(n_now, d, replace=False)) for i in range(3)]
+    delta = []
+    for ins, dels in churns:                 # balanced churn: delete d, add d
+        t0 = time.perf_counter()
+        sess.update(inserts=ins, deletes=dels)
+        delta.append(time.perf_counter() - t0)
+    delta_us = float(np.mean(delta)) * 1e6
+    assert sess.stats["delta_updates"] == 3, sess.stats
+    return [
+        (f"session/update_full/{m}", full_us, "re-plan + full re-bin"),
+        (f"session/update_delta/{m}x{d}", delta_us,
+         f"{full_us / delta_us:.1f}x vs full re-plan ({churn:.0%} churn, "
+         "spec + executables kept)"),
+    ]
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--json", action="store_true",
+                   help="emit a JSON array instead of CSV (CI artifact)")
+    args = p.parse_args()
+
+    sizes = FULL_SIZES if args.full else SIZES
+    rows = session_rows(sizes) + fused_rows() + sharded_rows(sizes) \
+        + delta_rows()
+    if args.json:
+        print(json.dumps([{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in rows], indent=2))
+    else:
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ import jax
 
 from repro.core import InterpolationSession
 from repro.core.distributed import query_sharded_aidw, ring_aidw
+from repro.core.jax_compat import make_auto_mesh
 from repro.data.pipeline import spatial_points, spatial_queries
 
 
@@ -35,7 +36,24 @@ def main() -> None:
           f"{sess.stats['stage1_builds']} Stage-1 build(s), "
           f"{sess.stats['bucket_misses']} compiled bucket(s)")
 
+    # incremental churn: replace ~1% of the dataset without a Stage-1 rebuild
+    n_delta = pts.shape[0] // 100
+    sess.update(inserts=spatial_points(n_delta, seed=5),
+                deletes=np.random.default_rng(6).choice(
+                    pts.shape[0], n_delta, replace=False))
+    sess.query(qs)
+    print(f"delta update: {sess.stats['delta_updates']} incremental / "
+          f"{sess.stats['stage1_builds']} full Stage-1 build(s)")
+
     if n_dev >= 2:
+        # ONE session serving the whole mesh: queries sharded over all axes,
+        # plan replicated — results bit-identical to the single-device path
+        smesh = make_auto_mesh((n_dev,), ("q",))
+        ssess = InterpolationSession(pts, query_domain=qs, mesh=smesh)
+        sharded = np.asarray(ssess.query(qs).values)
+        print(f"sharded session ({n_dev} devices): bit-identical to "
+              f"single-device = {np.array_equal(sharded, ref)}")
+
         axes = (n_dev // 2, 2)
         mesh = jax.make_mesh(axes, ("data", "model"))
         ring = np.asarray(ring_aidw(mesh, "data", pts, qs))

@@ -10,17 +10,27 @@ from .aidw import (
     nn_statistic,
     weighted_interpolate,
 )
-from .grid import CellTable, GridSpec, bin_points, cell_ids, plan_grid
+from .grid import (
+    CellTable,
+    GridSpec,
+    bin_points,
+    cell_ids,
+    plan_grid,
+    rebin_delta,
+)
 from .knn import KnnResult, brute_knn, grid_knn, mean_nn_distance
 from .pipeline import (
     AidwConfig,
     AidwPlan,
     AidwResult,
+    ShardedAidwPlan,
     aidw_improved,
     aidw_original,
     execute,
     idw_standard,
     plan,
+    plan_delta,
+    shard_plan,
 )
 from .session import InterpolationSession, bucket_size
 
@@ -29,8 +39,10 @@ __all__ = [
     "expected_nn_distance", "fuzzy_membership", "idw_weights_sq",
     "nn_statistic", "weighted_interpolate",
     "CellTable", "GridSpec", "bin_points", "cell_ids", "plan_grid",
+    "rebin_delta",
     "KnnResult", "brute_knn", "grid_knn", "mean_nn_distance",
-    "AidwConfig", "AidwPlan", "AidwResult", "aidw_improved", "aidw_original",
-    "execute", "idw_standard", "plan",
+    "AidwConfig", "AidwPlan", "AidwResult", "ShardedAidwPlan",
+    "aidw_improved", "aidw_original", "execute", "idw_standard", "plan",
+    "plan_delta", "shard_plan",
     "InterpolationSession", "bucket_size",
 ]

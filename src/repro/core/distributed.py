@@ -133,6 +133,7 @@ def make_ring_aidw(
     r_min: float = A.DEFAULT_R_MIN,
     r_max: float = A.DEFAULT_R_MAX,
     q_block: int = 0,
+    return_stats: bool = False,
 ):
     """Build the domain-decomposed AIDW step for ``mesh``.
 
@@ -140,6 +141,8 @@ def make_ring_aidw(
     on GLOBAL arrays whose leading dims are divisible by the mesh factors:
     data sharded along ``ring_axis`` only; queries sharded along every axis.
     ``n_points``/``area`` are the true (unpadded) study statistics for Eq.(2).
+    With ``return_stats=True`` the step returns ``(values, alpha, r_obs)``
+    instead — the per-query stats the sharded ring-layout session reports.
     """
     all_axes = tuple(mesh.axis_names)
     p_ring = mesh.shape[ring_axis]
@@ -174,7 +177,8 @@ def make_ring_aidw(
         acc0 = (jnp.zeros_like(qx), jnp.zeros_like(qx))
         ((sum_wz, sum_w), _), _ = jax.lax.scan(
             interp_step, (acc0, points), None, length=p_ring)
-        return sum_wz / sum_w
+        vals = sum_wz / sum_w
+        return (vals, alpha, r_obs) if return_stats else vals
 
     data_spec = P(ring_axis, None)
     query_spec = P(all_axes, None)

@@ -13,6 +13,18 @@ Paper mapping (Mei, Xu & Xu 2016, §3.2.1-§3.2.3):
 TPU adaptation: the CSR table is built with XLA's variadic sort and a
 vectorized binary search instead of thrust segmented primitives — no atomics,
 no dynamic allocation, identical result (see DESIGN.md §2).
+
+Incremental rebinning (serving-scale extension): a mostly-static dataset under
+high churn should not pay the full O(m log m) re-sort for a small delta.
+:func:`bin_points` is therefore factored into the id computation plus a
+reusable sort core (:func:`sort_core`), and :func:`rebin_delta` applies an
+(inserts, deletes) delta directly to an existing :class:`CellTable`: the Δ
+inserts are sorted alone (O(Δ log Δ)), merged into the sorted CSR arrays with
+one vectorized insert (O(m) memcpy, no comparison sort), deleted rows are
+tombstoned out, and the CSR offsets are rebuilt from per-cell delta counts
+(O(n_cells + Δ)).  The result is ELEMENT-IDENTICAL to a full
+:func:`bin_points` of the updated dataset on the same :class:`GridSpec`
+(both sorts are stable, so per-cell point order matches too).
 """
 
 from __future__ import annotations
@@ -113,6 +125,23 @@ def bin_traces() -> int:
     return _BIN_TRACES[0]
 
 
+def sort_core(n_cells: int, ids: jax.Array, x: jax.Array, y: jax.Array,
+              z: jax.Array) -> CellTable:
+    """Stable sort by cell id + CSR offsets: the reusable heart of binning.
+
+    Stability matters beyond determinism: it is what lets
+    :func:`rebin_delta` reproduce a full re-sort with a merge (points of one
+    cell keep their original relative order).
+    """
+    order = jnp.argsort(ids).astype(jnp.int32)
+    sorted_ids = ids[order]
+    # Vectorized binary search replaces segmented reduction/scan (Fig. 3).
+    cell_start = jnp.searchsorted(
+        sorted_ids, jnp.arange(n_cells + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return CellTable(x[order], y[order], z[order], cell_start, order)
+
+
 @partial(jax.jit, static_argnums=0)
 def bin_points(spec: GridSpec, x: jax.Array, y: jax.Array, z: jax.Array) -> CellTable:
     """Sort points by cell id and build the CSR cell table.
@@ -122,11 +151,100 @@ def bin_points(spec: GridSpec, x: jax.Array, y: jax.Array, z: jax.Array) -> Cell
     thrust::unique_by_key (head)  -> cell_start[c]
     """
     _BIN_TRACES[0] += 1
-    ids = cell_ids(spec, x, y)
-    order = jnp.argsort(ids).astype(jnp.int32)
-    sorted_ids = ids[order]
-    # Vectorized binary search replaces segmented reduction/scan (Fig. 3).
-    cell_start = jnp.searchsorted(
-        sorted_ids, jnp.arange(spec.n_cells + 1, dtype=jnp.int32), side="left"
-    ).astype(jnp.int32)
-    return CellTable(x[order], y[order], z[order], cell_start, order)
+    return sort_core(spec.n_cells, cell_ids(spec, x, y), x, y, z)
+
+
+def cell_ids_host(spec: GridSpec, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`cell_ids` (same f32 ops -> same ids bitwise)."""
+    x = np.asarray(x)
+    col = np.clip(((x - x.dtype.type(spec.min_x)) /
+                   x.dtype.type(spec.cell_width)).astype(np.int32),
+                  0, spec.n_cols - 1)
+    row = np.clip(((np.asarray(y) - x.dtype.type(spec.min_y)) /
+                   x.dtype.type(spec.cell_width)).astype(np.int32),
+                  0, spec.n_rows - 1)
+    return row.astype(np.int64) * spec.n_cols + col
+
+
+def sorted_cell_ids(table: CellTable) -> np.ndarray:
+    """Recover the sorted flattened cell ids from the CSR offsets (exact)."""
+    cs = np.asarray(table.cell_start, dtype=np.int64)
+    return np.repeat(np.arange(cs.shape[0] - 1, dtype=np.int64), np.diff(cs))
+
+
+# Invocation counter for the incremental path (sibling of bin_traces: the
+# session tests assert delta updates never touch the full sort core).
+_DELTA_REBINS = [0]
+
+
+def delta_rebins() -> int:
+    """How many times :func:`rebin_delta` has run."""
+    return _DELTA_REBINS[0]
+
+
+def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
+                deletes=None) -> CellTable:
+    """Apply an (inserts, deletes) delta to an existing CSR cell table.
+
+    ``inserts`` is an (Δ, 3) xyz array appended to the dataset; ``deletes``
+    is a list of ORIGINAL dataset indices (values of ``table.order``) to
+    remove.  Returns a table element-identical to
+    ``bin_points(spec, *updated_dataset)`` where the updated dataset is the
+    kept points in their original order followed by the inserts — including
+    ``order``, which is remapped to index that updated dataset.
+
+    Cost: O(Δ log Δ) insert sort + O(m) tombstone/merge memcpy +
+    O(n_cells + Δ) offset rebuild — no O(m log m) comparison sort.  Runs on
+    the host (numpy): binning is already a host-side planning step, and a
+    delta's data movement is memcpy-bound, not compute-bound.
+    """
+    _DELTA_REBINS[0] += 1
+    sx = np.asarray(table.sx)
+    sy = np.asarray(table.sy)
+    sz = np.asarray(table.sz)
+    order = np.asarray(table.order).astype(np.int64)
+    counts = np.diff(np.asarray(table.cell_start, dtype=np.int64))
+    m = sx.shape[0]
+
+    # -- tombstone deletes out of the sorted arrays --------------------------
+    if deletes is not None and np.size(deletes):
+        dels = np.unique(np.asarray(deletes, dtype=np.int64))
+        if dels[0] < 0 or dels[-1] >= m:
+            raise IndexError(f"delete index out of range [0, {m})")
+        drop = np.isin(order, dels)
+        ids_sorted = sorted_cell_ids(table)
+        counts = counts - np.bincount(ids_sorted[drop], minlength=spec.n_cells)
+        keep = ~drop
+        sx, sy, sz, ids_sorted = sx[keep], sy[keep], sz[keep], ids_sorted[keep]
+        # original index -> index in the compacted (post-delete) dataset
+        order = order[keep]
+        order -= np.searchsorted(dels, order)
+        m_kept = m - dels.size
+    else:
+        ids_sorted = None   # computed lazily; unneeded for pure appends
+        m_kept = m
+
+    # -- merge the sorted inserts --------------------------------------------
+    if inserts is not None and np.size(inserts):
+        ins = np.asarray(inserts)
+        ix = ins[:, 0].astype(sx.dtype)
+        iy = ins[:, 1].astype(sy.dtype)
+        iz = ins[:, 2].astype(sz.dtype)
+        iid = cell_ids_host(spec, ix, iy)
+        iorder = np.argsort(iid, kind="stable")
+        ix, iy, iz, iid = ix[iorder], iy[iorder], iz[iorder], iid[iorder]
+        if ids_sorted is None:
+            ids_sorted = sorted_cell_ids(table)
+        # side='right': within a cell, kept points (stable-sorted in original
+        # order) come first, inserts after — exactly a stable full re-sort.
+        pos = np.searchsorted(ids_sorted, iid, side="right")
+        sx = np.insert(sx, pos, ix)
+        sy = np.insert(sy, pos, iy)
+        sz = np.insert(sz, pos, iz)
+        order = np.insert(order, pos, m_kept + iorder)
+        counts = counts + np.bincount(iid, minlength=spec.n_cells)
+
+    cell_start = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(counts)]).astype(np.int32)
+    return CellTable(jnp.asarray(sx), jnp.asarray(sy), jnp.asarray(sz),
+                     jnp.asarray(cell_start), jnp.asarray(order, jnp.int32))

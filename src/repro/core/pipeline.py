@@ -42,21 +42,60 @@ Donation rules: the padded query buffer is created by the caller expressly
 for one ``execute`` call, so sessions donate it (``donate_argnums``) on
 backends that support buffer donation (not CPU); plan arrays are long-lived
 and must NEVER be donated — they are reused by every subsequent query.
+
+Sharding rules (mesh-parallel serving; see :func:`shard_plan`):
+
+The per-query pass is embarrassingly parallel, so one plan can serve a whole
+mesh.  A :class:`ShardedAidwPlan` places the plan for a mesh in one of two
+layouts:
+
+* ``replicated`` (default) — the CSR :class:`~repro.core.grid.CellTable`,
+  ``points_xy`` and ``values`` are REPLICATED on every device; queries are
+  partitioned over ALL mesh axes and each device runs :func:`_execute_core`
+  on its local shard inside ``shard_map``.  Because no per-query reduction
+  crosses the query axis, each lane computes exactly what the single-device
+  path computes for its queries: warm sharded results are BIT-IDENTICAL per
+  query to the single-device session on the same plan.  The bucketed-padding
+  and donation contracts above apply unchanged — the global bucket must be
+  divisible by the query-axis device product (the session rounds per-device).
+* ``ring`` — for datasets too large to replicate, data points are sharded
+  into blocks along a ring axis and both stages rotate the blocks via
+  collective-permute (:func:`repro.core.distributed.make_ring_aidw`).  The
+  ring path does brute-force kNN over rotating blocks, so results match the
+  grid path only to accumulation-order tolerance (~1e-5 f32), never bitwise.
+
+Incremental-binning rules (:func:`plan_delta` / ``session.update(deltas=...)``):
+
+A delta update (inserts + deletes) reuses the existing ``GridSpec`` — cell
+width, rows and cols are FROZEN so array shapes, the compiled executables and
+Eq. (2)'s study area all survive — and patches the CSR table in
+O(Δ log Δ + m memcpy + n_cells) via :func:`repro.core.grid.rebin_delta`
+instead of the full O(m log m) re-sort.  A delta update falls back to a full
+re-plan (fresh spec, full :func:`~repro.core.grid.bin_points`) when the
+incremental result would be invalid or degraded: any insert landing outside
+the planned grid's bounding box (it would be clamped to a border cell), or a
+delta larger than ``max_delta_frac`` of the dataset (grid density drifts off
+Eq. (2)).  Changing the point count retraces the execute jit once per new
+count (``n_points`` is a static arg); a balanced churn (equal inserts and
+deletes) retraces nothing.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from . import aidw as A
 from . import grid as G
 from . import knn as K
+from .jax_compat import shard_map
 
 
 @dataclass(frozen=True)
@@ -98,12 +137,61 @@ class AidwPlan:
     """
 
     spec: G.GridSpec
-    table: G.CellTable
+    table: G.CellTable | None      # None only for unbinned (ring-only) plans
     points_xy: jax.Array           # (m, 2)
     values: jax.Array              # (m,)
     n_points: int
     area: float
     cfg: AidwConfig
+
+
+@dataclass(frozen=True)
+class ShardedAidwPlan:
+    """An :class:`AidwPlan` placed on a mesh (module docstring, 'Sharding
+    rules').  ``replicated``: plan arrays replicated, queries partitioned over
+    all mesh axes, per-lane bit-identity with the single-device path.
+    ``ring``: ``ring_points`` holds the (padded, (m_pad, 3)) dataset sharded
+    along ``ring_axis``; execution rotates blocks via collective-permute.
+    """
+
+    base: AidwPlan
+    mesh: Mesh
+    layout: Literal["replicated", "ring"] = "replicated"
+    ring_axis: str | None = None
+    ring_points: jax.Array | None = None
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+
+def shard_plan(pln: AidwPlan, mesh: Mesh,
+               layout: Literal["auto", "replicated", "ring"] = "auto",
+               *, ring_axis: str | None = None,
+               ring_threshold: int = 4_000_000) -> ShardedAidwPlan:
+    """Place a plan on ``mesh``: replicate the CSR table + point arrays, or
+    ring-shard the points when ``m`` is large (``layout='auto'`` picks ring
+    at ``n_points >= ring_threshold``)."""
+    if layout == "auto":
+        layout = "ring" if pln.n_points >= ring_threshold else "replicated"
+    if layout == "replicated":
+        rep = NamedSharding(mesh, PartitionSpec())
+        pln = AidwPlan(
+            spec=pln.spec, table=jax.device_put(pln.table, rep),
+            points_xy=jax.device_put(pln.points_xy, rep),
+            values=jax.device_put(pln.values, rep),
+            n_points=pln.n_points, area=pln.area, cfg=pln.cfg)
+        return ShardedAidwPlan(base=pln, mesh=mesh, layout="replicated")
+    from .distributed import pad_to_multiple
+
+    ring_axis = ring_axis or mesh.axis_names[0]
+    pts = pad_to_multiple(
+        jnp.concatenate([pln.points_xy, pln.values[:, None]], axis=1),
+        mesh.shape[ring_axis])
+    pts = jax.device_put(
+        pts, NamedSharding(mesh, PartitionSpec(ring_axis, None)))
+    return ShardedAidwPlan(base=pln, mesh=mesh, layout="ring",
+                           ring_axis=ring_axis, ring_points=pts)
 
 
 def _study_area(spec: G.GridSpec) -> float:
@@ -122,7 +210,7 @@ def execute_traces() -> int:
 
 
 def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
-         query_domain=None) -> AidwPlan:
+         query_domain=None, bin: bool = True) -> AidwPlan:
     """One-time Stage-1 build: grid planning + CSR binning for a dataset.
 
     ``query_domain`` optionally extends the grid's bounding box to cover
@@ -131,13 +219,18 @@ def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
     planned grid are clamped to the border cells; their kNN is still correct
     whenever the expansion level covers the true neighbours, and the
     per-query ``overflow`` flag reports when it could not be certified.
+
+    ``bin=False`` skips the CSR build (``table=None``) for consumers that
+    only need the spec/area/point arrays — the ring layout's brute-force
+    executor never reads the table, and for the dataset sizes ring targets
+    the full sort is exactly the cost to avoid.
     """
     points_xyz = jnp.asarray(points_xyz)
     px, py, pz = points_xyz[:, 0], points_xyz[:, 1], points_xyz[:, 2]
     qd = None if query_domain is None else np.asarray(query_domain)
     spec = G.plan_grid(np.asarray(points_xyz[:, :2]), qd,
                        cell_factor=cfg.cell_factor)
-    table = G.bin_points(spec, px, py, pz)
+    table = G.bin_points(spec, px, py, pz) if bin else None
     return AidwPlan(spec=spec, table=table, points_xy=points_xyz[:, :2],
                     values=pz, n_points=points_xyz.shape[0],
                     area=_study_area(spec), cfg=cfg)
@@ -199,6 +292,120 @@ def _execute_core(spec: G.GridSpec, cfg: AidwConfig, n_points: int,
 _session_execute = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3))
 _session_execute_donate = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3),
                                   donate_argnums=(7,))
+
+
+# Mesh-parallel session entry points: one jitted shard_map wrapper per
+# (mesh, donate).  Queries are partitioned over ALL mesh axes; the plan
+# arrays are replicated (in_specs P()); every per-query output shards back
+# over the same axes.  Per-lane the body IS _execute_core, so warm sharded
+# queries are bit-identical per query to the single-device path (module
+# docstring, 'Sharding rules').
+_SHARDED_EXECUTE_CACHE: dict = {}
+
+
+def sharded_session_execute(mesh: Mesh, donate: bool = False):
+    """The ``shard_map``-wrapped :data:`_session_execute` for ``mesh``."""
+    key = (mesh, bool(donate))
+    fn = _SHARDED_EXECUTE_CACHE.get(key)
+    if fn is None:
+        axes = tuple(mesh.axis_names)
+
+        def run(spec, cfg, n_points, area, table, points_xy, values,
+                queries_xy):
+            body = shard_map(
+                partial(_execute_core, spec, cfg, n_points, area),
+                mesh=mesh,
+                in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
+                          PartitionSpec(axes, None)),
+                out_specs=PartitionSpec(axes),
+            )
+            return body(table, points_xy, values, queries_xy)
+
+        fn = jax.jit(run, static_argnums=(0, 1, 2, 3),
+                     donate_argnums=(7,) if donate else ())
+        _SHARDED_EXECUTE_CACHE[key] = fn
+    return fn
+
+
+_RING_EXECUTE_CACHE: dict = {}
+
+
+def ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig):
+    """The ring-rotation executor for a ``layout='ring'`` sharded plan.
+
+    Returns ``fn(points_xyz_padded, queries_xy, n_points, area) ->
+    (values, alpha, r_obs)``; brute-force ring kNN, so ~1e-5 of the grid
+    path, never bitwise (module docstring, 'Sharding rules')."""
+    from .distributed import make_ring_aidw
+
+    key = (mesh, ring_axis, cfg.k, tuple(cfg.alphas), cfg.r_min, cfg.r_max)
+    fn = _RING_EXECUTE_CACHE.get(key)
+    if fn is None:
+        fn = make_ring_aidw(mesh, ring_axis, k=cfg.k, alphas=cfg.alphas,
+                            r_min=cfg.r_min, r_max=cfg.r_max,
+                            return_stats=True)
+        _RING_EXECUTE_CACHE[key] = fn
+    return fn
+
+
+def plan_delta(pln: AidwPlan, inserts=None, deletes=None, *,
+               max_delta_frac: float = 0.25, host_points=None):
+    """Incrementally apply an (inserts, deletes) delta to a plan.
+
+    Returns ``(new_plan, updated_points_xyz)``.  ``new_plan`` keeps the
+    existing ``GridSpec`` and patches the CSR table via
+    :func:`repro.core.grid.rebin_delta`; it is ``None`` when the delta must
+    fall back to a full re-plan (out-of-bbox insert, or
+    ``len(delta) > max_delta_frac * m`` — module docstring,
+    'Incremental-binning rules'), in which case the caller re-plans from the
+    returned updated dataset.
+
+    ``host_points`` optionally supplies the current (m, 3) dataset as a host
+    array (the session keeps one as a mirror), avoiding the full
+    device-to-host pull of ``points_xy``/``values`` that the reconstruction
+    otherwise costs on accelerator backends.
+    """
+    ins = None if inserts is None else np.asarray(inserts)
+    dels = None if deletes is None else np.asarray(deletes, dtype=np.int64)
+    n_ins = 0 if ins is None else ins.shape[0]
+    n_del = 0 if dels is None else dels.shape[0]
+    if n_del and (dels.min() < 0 or dels.max() >= pln.n_points):
+        # reject before any fancy indexing: negative indices would silently
+        # wrap on the unbinned (ring) path that never reaches rebin_delta
+        raise IndexError(f"delete index out of range [0, {pln.n_points})")
+
+    # reconstruct the updated dataset in original order (kept + appended)
+    if host_points is not None:
+        old = np.asarray(host_points)
+    else:
+        old = np.concatenate([np.asarray(pln.points_xy),
+                              np.asarray(pln.values)[:, None]], axis=1)
+    keep = np.ones(pln.n_points, bool)
+    if n_del:
+        keep[dels] = False
+    parts = [old[keep]]
+    if n_ins:
+        parts.append(ins.astype(old.dtype, copy=False))
+    new_pts = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+    spec = pln.spec
+    in_bbox = n_ins == 0 or bool(
+        (ins[:, 0] >= spec.min_x).all() and
+        (ins[:, 1] >= spec.min_y).all() and
+        (ins[:, 0] <= spec.min_x + spec.n_cols * spec.cell_width).all() and
+        (ins[:, 1] <= spec.min_y + spec.n_rows * spec.cell_width).all())
+    if not in_bbox or n_ins + n_del > max_delta_frac * max(pln.n_points, 1):
+        return None, new_pts
+
+    # unbinned (ring-layout) plans skip the CSR patch — nothing reads it
+    table = None if pln.table is None else \
+        G.rebin_delta(spec, pln.table, inserts=ins, deletes=dels)
+    new_plan = AidwPlan(
+        spec=spec, table=table,
+        points_xy=jnp.asarray(new_pts[:, :2]),
+        values=jnp.asarray(new_pts[:, 2]),
+        n_points=new_pts.shape[0], area=pln.area, cfg=pln.cfg)
+    return new_plan, new_pts
 
 
 def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:

@@ -19,10 +19,26 @@ session keeps the build resident and makes the per-query path cheap:
 * ``fused Stage 2`` — with ``AidwConfig(stage2='tiled', fused=True)`` the
   adaptive-alpha determination runs inside the Pallas weighting kernel: one
   launch for the whole Stage 2.
+* ``mesh``        — with ``mesh=``, one session serves queries across every
+  device of the mesh ('Sharding rules'): the plan is placed once via
+  :func:`repro.core.pipeline.shard_plan` (CSR table + points replicated, or
+  ring-sharded with ``layout='ring'`` when the dataset is too large to
+  replicate) and each query batch is partitioned over all mesh axes.
+  Buckets are rounded per-device (power-of-two PER LANE times the device
+  product), and replicated-layout results stay bit-identical per query to
+  the single-device session on the same plan.
+* ``delta update`` — ``update(inserts=..., deletes=...)`` (or
+  ``deltas=(inserts, deletes)``) patches the resident CSR table in
+  O(Δ log Δ + memcpy) via :func:`repro.core.grid.rebin_delta` instead of
+  re-binning from scratch, keeping the grid spec and every compiled
+  executable alive ('Incremental-binning rules'; falls back to a full
+  re-plan on out-of-bbox inserts or oversized deltas).
 
 ``stats`` exposes the amortization counters the tests assert on:
-``stage1_builds`` (plan/update invocations), ``batches``/``queries`` served,
-and ``bucket_hits``/``bucket_misses`` (compile-cache behaviour).
+``stage1_builds`` (full plan/update invocations), ``delta_updates``
+(incremental updates that did NOT rebuild Stage 1), ``batches``/``queries``
+served, ``bucket_hits``/``bucket_misses`` (compile-cache behaviour), and
+``devices`` (mesh width; 1 for a single-device session).
 """
 
 from __future__ import annotations
@@ -31,6 +47,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import pipeline as P
 
@@ -38,10 +55,18 @@ __all__ = ["InterpolationSession", "bucket_size"]
 
 
 def bucket_size(n: int, min_bucket: int = 64) -> int:
-    """Smallest power-of-two >= n, floored at ``min_bucket``."""
+    """Smallest power-of-two >= n, floored at ``min_bucket``.
+
+    ``min_bucket`` is rounded UP to a power of two first, so every returned
+    bucket is a true power of two even for e.g. ``min_bucket=48`` (doubling
+    from a non-power floor would yield 96, 192, ... and silently break the
+    one-executable-per-bucket compile-cache story).
+    """
     if n <= 0:
         raise ValueError(f"query batch must be non-empty, got n={n}")
-    b = min_bucket
+    b = 1
+    while b < min_bucket:
+        b *= 2
     while b < n:
         b *= 2
     return b
@@ -54,22 +79,43 @@ class InterpolationSession:
     >>> out = sess.query(queries_xy)          # jitted Stage-1 + Stage-2
     >>> out2 = sess.query(more_queries_xy)    # same bucket -> zero retrace
     >>> sess.update(new_points_xyz)           # re-bin once, keep executables
+    >>> sess.update(inserts=new_rows, deletes=[3, 17])   # incremental re-bin
+
+    With ``mesh=`` the same API serves the whole mesh: queries are sharded
+    over every mesh axis and (replicated layout) results are bit-identical
+    per query to the single-device session.
     """
 
     def __init__(self, points_xyz, cfg: P.AidwConfig = P.AidwConfig(), *,
                  query_domain=None, min_bucket: int = 64,
-                 donate: bool | None = None):
+                 donate: bool | None = None, mesh=None,
+                 layout: str = "replicated", ring_axis: str | None = None,
+                 max_delta_frac: float = 0.25):
         self.cfg = cfg
         self.min_bucket = int(min_bucket)
         self._query_domain = query_domain
+        self._mesh = mesh
+        if mesh is not None and layout not in ("replicated", "ring"):
+            # no 'auto' here: the query path dispatches on the layout, so it
+            # must be pinned before the first plan is placed
+            raise ValueError(f"layout must be 'replicated' or 'ring', "
+                             f"got {layout!r}")
+        self._layout = layout if mesh is not None else "single"
+        self._ring_axis = ring_axis
+        self._n_dev = int(mesh.devices.size) if mesh is not None else 1
+        self.max_delta_frac = float(max_delta_frac)
         # CPU XLA cannot donate buffers; donating there only emits warnings.
         self._donate = (jax.default_backend() != "cpu") if donate is None \
             else bool(donate)
-        self.stats = {"stage1_builds": 0, "batches": 0, "queries": 0,
-                      "bucket_hits": 0, "bucket_misses": 0,
-                      "last_plan_s": 0.0}
+        self.stats = {"stage1_builds": 0, "delta_updates": 0, "batches": 0,
+                      "queries": 0, "bucket_hits": 0, "bucket_misses": 0,
+                      "last_plan_s": 0.0, "devices": self._n_dev}
         self._seen_buckets: set[int] = set()
         self._plan: P.AidwPlan | None = None
+        self._splan: P.ShardedAidwPlan | None = None
+        # host-side (m, 3) mirror of the dataset: delta updates reconstruct
+        # from it instead of pulling the plan arrays off the device
+        self._host_pts = None
         self.update(points_xyz)
 
     # -- dataset lifecycle ---------------------------------------------------
@@ -78,19 +124,74 @@ class InterpolationSession:
     def plan(self) -> P.AidwPlan:
         return self._plan
 
-    def update(self, points_xyz) -> None:
-        """Dataset refresh: re-plan + re-bin once; compiled executables are
-        keyed on (GridSpec, cfg, shapes) and survive whenever those match."""
+    @property
+    def sharded_plan(self) -> P.ShardedAidwPlan | None:
+        return self._splan
+
+    def _place(self) -> None:
+        """(Re)place the current plan on the mesh (no-op single-device)."""
+        if self._mesh is None:
+            return
+        self._splan = P.shard_plan(self._plan, self._mesh, self._layout,
+                                   ring_axis=self._ring_axis)
+        if self._splan.layout == "replicated":
+            self._plan = self._splan.base   # replicated arrays serve both
+
+    def update(self, points_xyz=None, *, inserts=None, deletes=None,
+               deltas=None) -> None:
+        """Dataset refresh.
+
+        Full (``points_xyz``): re-plan + re-bin once; compiled executables
+        are keyed on (GridSpec, cfg, shapes) and survive whenever those
+        match.  Incremental (``inserts``/``deletes``/``deltas``): patch the
+        CSR table in place, keeping the grid spec and ALL executables; falls
+        back to a full re-plan per the pipeline's incremental-binning rules.
+        """
+        if deltas is not None:
+            inserts, deletes = deltas
+        has_delta = inserts is not None or deletes is not None
+        if points_xyz is not None and has_delta:
+            raise ValueError(
+                "pass either a full dataset or inserts/deletes, not both")
+        if points_xyz is None and not has_delta:
+            raise ValueError(
+                "update() needs a full dataset or inserts/deletes")
         t0 = time.perf_counter()
+        if points_xyz is None and self._plan is not None:
+            new_plan, new_pts = P.plan_delta(
+                self._plan, inserts, deletes,
+                max_delta_frac=self.max_delta_frac,
+                host_points=self._host_pts)
+            self._host_pts = new_pts
+            if new_plan is not None:
+                self._plan = new_plan
+                self._place()
+                self.stats["delta_updates"] += 1
+                self.stats["last_plan_s"] = time.perf_counter() - t0
+                return
+            points_xyz = new_pts        # fallback: full re-plan below
+        elif points_xyz is None:
+            raise ValueError("first update needs the full dataset")
+        else:
+            self._host_pts = np.asarray(points_xyz)
+        # the ring executor never reads the CSR table; skip the full sort
         self._plan = P.plan(points_xyz, self.cfg,
-                            query_domain=self._query_domain)
+                            query_domain=self._query_domain,
+                            bin=self._layout != "ring")
+        self._place()
         self.stats["stage1_builds"] += 1
         self.stats["last_plan_s"] = time.perf_counter() - t0
 
     # -- query path ----------------------------------------------------------
 
     def _bucket(self, n: int) -> int:
-        b = bucket_size(n, self.min_bucket)
+        if self._n_dev == 1:
+            b = bucket_size(n, self.min_bucket)
+        else:
+            # power-of-two per lane, divisible by the device product globally
+            per = -(-n // self._n_dev)
+            b = bucket_size(per, max(1, self.min_bucket // self._n_dev)) \
+                * self._n_dev
         if b in self._seen_buckets:
             self.stats["bucket_hits"] += 1
         else:
@@ -98,22 +199,36 @@ class InterpolationSession:
             self.stats["bucket_misses"] += 1
         return b
 
+    def _run(self, qp, donate: bool):
+        """Dispatch one padded bucket to the right executable."""
+        pln = self._plan
+        if self._layout == "ring":
+            sp = self._splan
+            fn = P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
+            values, alpha, r_obs = fn(
+                sp.ring_points, qp, jnp.float32(pln.n_points),
+                jnp.float32(pln.area))
+            return values, alpha, r_obs, jnp.zeros(qp.shape[0], bool)
+        if self._mesh is not None:
+            fn = P.sharded_session_execute(self._mesh, donate)
+        else:
+            fn = P._session_execute_donate if donate else P._session_execute
+        return fn(pln.spec, pln.cfg, pln.n_points, pln.area,
+                  pln.table, pln.points_xy, pln.values, qp)
+
     def query(self, queries_xy, *, timings: bool = False) -> P.AidwResult:
-        """Interpolate one query batch; results are bit-identical to a cold
+        """Interpolate one query batch; (single-device and replicated-mesh
+        layouts) results are bit-identical to a cold
         :func:`repro.core.pipeline.execute` on the same plan."""
         q = jnp.asarray(queries_xy)
         n = q.shape[0]
         b = self._bucket(n)
         t0 = time.perf_counter()
         qp = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge") if b != n else q
-        pln = self._plan
         # donate only the padded copy we created — never the caller's array
         # (donation rules in the pipeline module docstring)
-        fn = P._session_execute_donate if self._donate and qp is not q \
-            else P._session_execute
-        values, alpha, r_obs, overflow = fn(
-            pln.spec, pln.cfg, pln.n_points, pln.area,
-            pln.table, pln.points_xy, pln.values, qp)
+        values, alpha, r_obs, overflow = self._run(
+            qp, self._donate and qp is not q)
         res = P.AidwResult(
             values=values[:n], alpha=alpha[:n], r_obs=r_obs[:n],
             overflow=int(jnp.sum(overflow[:n])),

@@ -1,7 +1,16 @@
-"""Serving driver: ``python -m repro.launch.serve --arch llama3.2-3b --reduced``.
+"""Serving driver.
 
-Runs the slot-based continuous-batching engine over synthetic requests and
-reports prefill/decode throughput.
+LM mode (default): ``python -m repro.launch.serve --arch llama3.2-3b
+--reduced`` runs the slot-based continuous-batching engine over synthetic
+requests and reports prefill/decode throughput.
+
+AIDW mode: ``python -m repro.launch.serve --aidw [--mesh]`` runs the
+session-backed interpolation engine over synthetic spatial request traffic;
+``--mesh`` shards the session's query path across every visible device
+(simulate a pod slice on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and an incremental
+``update_dataset(inserts=..., deletes=...)`` between waves exercises the
+delta-rebinning path.
 """
 
 from __future__ import annotations
@@ -17,8 +26,53 @@ from repro.nn.param import init_params
 from repro.serving.engine import Request, ServingEngine
 
 
+def run_aidw(args) -> None:
+    from repro.core.jax_compat import make_auto_mesh
+    from repro.data.pipeline import spatial_points, spatial_queries
+    from repro.serving.engine import AidwEngine, InterpolationRequest
+
+    n_dev = len(jax.devices())
+    mesh = make_auto_mesh((n_dev,), ("q",)) if args.mesh else None
+    pts = spatial_points(args.points, seed=args.seed)
+    engine = AidwEngine(pts, max_batch=args.max_batch, mesh=mesh,
+                        query_domain=spatial_queries(1024, seed=1))
+
+    def wave(wave_id: int) -> None:
+        reqs = [InterpolationRequest(
+            uid=wave_id * args.requests + i,
+            queries_xy=spatial_queries(max(args.req_queries - 7 * i, 1),
+                                       seed=wave_id * 100 + i))
+            for i in range(args.requests)]
+        q0, b0 = engine.stats["queries"], engine.stats["batches"]
+        stats = engine.run(reqs)
+        assert all(r.done for r in reqs)
+        print(f"wave {wave_id}: {stats['queries'] - q0} queries in "
+              f"{stats['batches'] - b0} coalesced batches "
+              f"({stats['queries_per_s']:.0f} q/s)")
+
+    wave(0)
+    # incremental churn: replace 1% of the dataset, Stage-1 stays resident
+    rng = np.random.default_rng(args.seed + 1)
+    n_delta = max(args.points // 100, 1)
+    engine.update_dataset(
+        inserts=spatial_points(n_delta, seed=args.seed + 2),
+        deletes=rng.choice(args.points, n_delta, replace=False))
+    wave(1)
+    s = engine.session.stats
+    print(f"aidw serve: devices={s['devices']} stage1_builds={s['stage1_builds']} "
+          f"delta_updates={s['delta_updates']} buckets={s['bucket_misses']} "
+          f"queries={s['queries']}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
+    p.add_argument("--aidw", action="store_true",
+                   help="serve AIDW interpolation instead of the LM engine")
+    p.add_argument("--mesh", action="store_true",
+                   help="AIDW: shard the session across all visible devices")
+    p.add_argument("--points", type=int, default=16384)
+    p.add_argument("--req-queries", type=int, default=384)
+    p.add_argument("--max-batch", type=int, default=4096)
     p.add_argument("--arch", default="llama3.2-3b")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--requests", type=int, default=12)
@@ -27,6 +81,10 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
+
+    if args.aidw:
+        run_aidw(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

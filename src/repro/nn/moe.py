@@ -150,11 +150,14 @@ def moe_apply_ep(x, w_router, w_gate, w_up, w_down, *, top_k: int,
                          capacity_factor=capacity_factor)
     E = w_router.shape[1]
     b_axes = tuple(a for a in mesh.axis_names if a != axis)
+    # expert-parallel degree from the EXPLICIT mesh: jax.lax.axis_size is
+    # newer than 0.4.37, and e_loc must be static anyway (it shapes the
+    # local dispatch buffer)
+    tp = int(mesh.shape[axis])
+    e_loc = E // tp
 
     def local_fn(x, w_router, w_gate, w_up, w_down):
-        tp = jax.lax.axis_size(axis)
         rank = jax.lax.axis_index(axis)
-        e_loc = E // tp
         lo = rank * e_loc
 
         B, S, D = x.shape                                     # local shard

@@ -15,7 +15,10 @@ Two workloads share this module:
   is amortized across the session; incoming requests are coalesced FIFO into
   microbatches of at most ``max_batch`` queries, and the session's
   power-of-two bucketing keeps a stream of odd-sized microbatches on one
-  compiled executable.
+  compiled executable.  With ``mesh=`` the session serves each microbatch
+  across the whole mesh (queries partitioned over every axis, plan
+  replicated or ring-sharded), and ``update_dataset(inserts=/deletes=)``
+  refreshes a high-churn dataset incrementally without a Stage-1 rebuild.
 
 Simplifications vs. a production stack (documented): synchronized position
 counter per slot via per-slot start offsets is folded into the attention
@@ -193,20 +196,25 @@ class AidwEngine:
     """
 
     def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
-                 query_domain=None, min_bucket: int = 64):
+                 query_domain=None, min_bucket: int = 64, mesh=None,
+                 layout: str = "replicated"):
         from repro.core import AidwConfig
         from repro.core.session import InterpolationSession
 
         self.session = InterpolationSession(
             points_xyz, cfg or AidwConfig(), query_domain=query_domain,
-            min_bucket=min_bucket)
+            min_bucket=min_bucket, mesh=mesh, layout=layout)
         self.max_batch = int(max_batch)
         self.stats = {"requests": 0, "batches": 0, "queries": 0,
                       "overflow": 0}
 
-    def update_dataset(self, points_xyz) -> None:
-        """Refresh the served dataset (one Stage-1 rebuild, executables kept)."""
-        self.session.update(points_xyz)
+    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
+                       deltas=None) -> None:
+        """Refresh the served dataset: full (one Stage-1 rebuild, executables
+        kept) or incremental (``inserts``/``deletes``/``deltas`` patch the
+        CSR table; zero Stage-1 rebuilds)."""
+        self.session.update(points_xyz, inserts=inserts, deletes=deletes,
+                            deltas=deltas)
 
     def run(self, requests: list[InterpolationRequest]) -> dict:
         """Serve all requests; returns throughput stats (for THIS call;

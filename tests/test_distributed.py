@@ -137,6 +137,70 @@ print("ep-ok")
     assert "ep-ok" in out
 
 
+def test_sharded_session_matches_single_device():
+    """Acceptance: on an 8-device host-platform mesh, sharded session.query
+    is bit-identical per query to the single-device session on the same
+    plan, across mesh shapes and odd (bucketed) batch sizes."""
+    out = run_multidevice("""
+import numpy as np, jax
+from repro.core import InterpolationSession
+from repro.core.jax_compat import make_auto_mesh
+from repro.data.pipeline import spatial_points, spatial_queries
+
+pts = spatial_points(4096, seed=0)
+qs = spatial_queries(1000, seed=1)       # odd size: exercises padded buckets
+single = InterpolationSession(pts, query_domain=qs)
+for shape, axes in (((8,), ("q",)), ((4, 2), ("data", "model"))):
+    mesh = make_auto_mesh(shape, axes)
+    sess = InterpolationSession(pts, query_domain=qs, mesh=mesh)
+    assert sess.stats["devices"] == 8
+    a, b = single.query(qs), sess.query(qs)
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values)), shape
+    assert np.array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    assert np.array_equal(np.asarray(a.r_obs), np.asarray(b.r_obs))
+    assert a.overflow == b.overflow
+    q2 = spatial_queries(997, seed=2)    # same bucket -> compile-cache hit
+    assert np.array_equal(np.asarray(single.query(q2).values),
+                          np.asarray(sess.query(q2).values))
+    assert sess.stats["bucket_misses"] == 1 and sess.stats["bucket_hits"] == 1
+print("sharded-session-ok")
+""")
+    assert "sharded-session-ok" in out
+
+
+def test_sharded_session_delta_and_ring():
+    """Delta updates re-place the sharded plan (still bit-identical), and the
+    ring layout serves within brute-force-accumulation tolerance."""
+    out = run_multidevice("""
+import numpy as np, jax
+from repro.core import InterpolationSession
+from repro.core.jax_compat import make_auto_mesh
+from repro.data.pipeline import spatial_points, spatial_queries
+
+pts = spatial_points(4096, seed=0)
+qs = spatial_queries(512, seed=1)
+mesh = make_auto_mesh((8,), ("q",))
+single = InterpolationSession(pts, query_domain=qs)
+sess = InterpolationSession(pts, query_domain=qs, mesh=mesh)
+dels = np.random.default_rng(3).choice(4096, 40, replace=False)
+ins = spatial_points(40, seed=9)
+for s in (single, sess):
+    s.update(inserts=ins, deletes=dels)
+assert sess.stats["delta_updates"] == 1 and sess.stats["stage1_builds"] == 1
+a, b = single.query(qs), sess.query(qs)
+assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+
+ring = InterpolationSession(pts, query_domain=qs, mesh=mesh, layout="ring")
+assert ring.sharded_plan.layout == "ring"
+err = np.abs(np.asarray(ring.query(qs).values)
+             - np.asarray(InterpolationSession(pts, query_domain=qs)
+                          .query(qs).values)).max()
+assert err < 1e-4, err
+print("delta-ring-ok", err)
+""")
+    assert "delta-ring-ok" in out
+
+
 def test_ring_aidw_query_blocking():
     out = run_multidevice("""
 import numpy as np, jax, jax.numpy as jnp

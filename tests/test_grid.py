@@ -1,4 +1,5 @@
-"""Even-grid construction: CSR cell table vs direct numpy binning."""
+"""Even-grid construction: CSR cell table vs direct numpy binning, plus the
+incremental rebinning (insert/delete delta) path."""
 
 from __future__ import annotations
 
@@ -7,12 +8,24 @@ import jax.numpy as jnp
 import pytest
 from hypcompat import given, settings, st  # guarded: skips, never dies, without hypothesis
 
-from repro.core import bin_points, cell_ids, plan_grid
+from repro.core import bin_points, cell_ids, plan_grid, rebin_delta
 
 
 def _np_points(seed, n):
     r = np.random.default_rng(seed)
     return r.random((n, 3)).astype(np.float32)
+
+
+def _bin(spec, pts):
+    return bin_points(spec, jnp.array(pts[:, 0]), jnp.array(pts[:, 1]),
+                      jnp.array(pts[:, 2]))
+
+
+def _assert_tables_equal(got, want):
+    """Element-identity on every CellTable field (stable-sort equivalence)."""
+    for name in ("sx", "sy", "sz", "cell_start", "order"):
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        assert np.array_equal(a, b), name
 
 
 def test_plan_grid_covers_all_points():
@@ -59,6 +72,64 @@ def test_cell_table_properties(n, seed, cell_factor):
     assert (np.diff(cs) >= 0).all()          # monotone CSR
     assert cs[-1] == n                        # every point binned exactly once
     assert float(jnp.sum(table.sz)) == pytest.approx(float(pts[:, 2].sum()), rel=1e-4)
+
+
+def test_rebin_delta_matches_full_bin_randomized():
+    """rebin_delta == full bin_points of the updated dataset (same spec),
+    element-identical including ``order``, over randomized delta streams."""
+    m = 2000
+    pts = _np_points(3, m)
+    spec = plan_grid(pts[:, :2])
+    table = _bin(spec, pts)
+    for trial in range(4):
+        r = np.random.default_rng(trial)
+        dels = r.choice(pts.shape[0], int(r.integers(0, m // 5)), replace=False)
+        ins = _np_points(100 + trial, int(r.integers(0, m // 5)))
+        got = rebin_delta(spec, table, inserts=ins, deletes=dels)
+        keep = np.ones(pts.shape[0], bool)
+        keep[dels] = False
+        pts = np.concatenate([pts[keep], ins], axis=0)   # stream: accumulate
+        table = got
+        _assert_tables_equal(got, _bin(spec, pts))
+
+
+def test_rebin_delta_noop_and_pure_cases():
+    pts = _np_points(4, 500)
+    spec = plan_grid(pts[:, :2])
+    table = _bin(spec, pts)
+    _assert_tables_equal(rebin_delta(spec, table), table)       # no-op
+    ins = _np_points(5, 50)
+    _assert_tables_equal(                                        # pure insert
+        rebin_delta(spec, table, inserts=ins),
+        _bin(spec, np.concatenate([pts, ins])))
+    _assert_tables_equal(                                        # pure delete
+        rebin_delta(spec, table, deletes=np.arange(0, 500, 7)),
+        _bin(spec, np.delete(pts, np.arange(0, 500, 7), axis=0)))
+    with pytest.raises(IndexError):
+        rebin_delta(spec, table, deletes=[500])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(20, 300), st.integers(0, 10_000),
+       st.integers(0, 60), st.integers(0, 60))
+def test_rebin_delta_properties(n, seed, n_del, n_ins):
+    """Hypothesis: arbitrary insert/delete deltas reproduce a full re-bin."""
+    n_del = min(n_del, n - 1)                    # never delete everything
+    pts = _np_points(seed, n)
+    spec = plan_grid(pts[:, :2])
+    table = _bin(spec, pts)
+    r = np.random.default_rng(seed + 1)
+    dels = r.choice(n, n_del, replace=False)
+    ins = _np_points(seed + 2, n_ins)
+    got = rebin_delta(spec, table, inserts=ins, deletes=dels)
+    keep = np.ones(n, bool)
+    keep[dels] = False
+    upd = np.concatenate([pts[keep], ins], axis=0)
+    _assert_tables_equal(got, _bin(spec, upd))
+    # CSR invariants survive the incremental path
+    cs = np.asarray(got.cell_start)
+    assert (np.diff(cs) >= 0).all() and cs[0] == 0 and cs[-1] == upd.shape[0]
+    assert sorted(np.asarray(got.order).tolist()) == list(range(upd.shape[0]))
 
 
 def test_paper_cell_width_formula():

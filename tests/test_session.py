@@ -3,6 +3,7 @@ dataset refresh, fused Stage-2, and the session-backed serving engine."""
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -23,6 +24,19 @@ def test_bucket_size_powers_of_two():
     assert bucket_size(5, min_bucket=8) == 8
     with pytest.raises(ValueError):
         bucket_size(0)
+
+
+def test_bucket_size_non_pow2_min_bucket():
+    """Regression: a non-power-of-two ``min_bucket`` must round UP to a power
+    of two, not seed a 48 -> 96 -> 192 doubling chain."""
+    assert bucket_size(5, min_bucket=48) == 64
+    assert bucket_size(100, min_bucket=48) == 128
+    assert bucket_size(1, min_bucket=1) == 1
+    assert bucket_size(3, min_bucket=3) == 4
+    for mb in (1, 3, 7, 48, 100, 64):
+        for n in (1, 5, 97, 1000):
+            b = bucket_size(n, min_bucket=mb)
+            assert b >= n and (b & (b - 1)) == 0, (n, mb, b)
 
 
 def test_warm_query_bit_identical_to_cold(spatial_data):
@@ -93,6 +107,125 @@ def test_update_refreshes_dataset(spatial_data):
     assert np.array_equal(v_new, cold2)             # serving == one-shot
     assert not np.array_equal(v_new, v_old)         # dataset really changed
     assert sess.stats["stage1_builds"] == 2
+
+
+def _fixed_spec_plan(sess, pts_updated):
+    """A plan from a FULL re-bin on the session's retained spec (the
+    incremental path's equivalence reference)."""
+    spec = sess.plan.spec
+    table = G.bin_points(spec, jnp.asarray(pts_updated[:, 0]),
+                         jnp.asarray(pts_updated[:, 1]),
+                         jnp.asarray(pts_updated[:, 2]))
+    return P.AidwPlan(spec=spec, table=table,
+                      points_xy=jnp.asarray(pts_updated[:, :2]),
+                      values=jnp.asarray(pts_updated[:, 2]),
+                      n_points=pts_updated.shape[0], area=sess.plan.area,
+                      cfg=sess.cfg)
+
+
+def test_delta_update_matches_full_rebin(spatial_data):
+    """update(inserts/deletes) == full re-bin at the retained spec, bitwise;
+    Stage-1 is never rebuilt (delta_updates counts instead)."""
+    pts, qs = spatial_data
+    m = pts.shape[0]
+    sess = InterpolationSession(pts, query_domain=qs)
+    sess.query(qs)
+    bins0 = G.bin_traces()
+    dels = np.random.default_rng(0).choice(m, 25, replace=False)
+    ins = spatial_points(30, seed=21)
+    sess.update(inserts=ins, deletes=dels)
+    assert sess.stats["delta_updates"] == 1
+    assert sess.stats["stage1_builds"] == 1          # no full rebuild
+    assert G.bin_traces() == bins0                   # sort core untouched
+
+    keep = np.ones(m, bool)
+    keep[dels] = False
+    upd = np.concatenate([pts[keep], ins], axis=0)
+    warm = sess.query(qs)
+    want = execute(_fixed_spec_plan(sess, upd), qs)
+    assert np.array_equal(np.asarray(warm.values), np.asarray(want.values))
+    assert np.array_equal(np.asarray(warm.alpha), np.asarray(want.alpha))
+
+
+def test_delta_update_deltas_tuple_and_engine(spatial_data):
+    """The ``deltas=(inserts, deletes)`` spelling and the engine passthrough."""
+    from repro.serving import AidwEngine
+
+    pts, qs = spatial_data
+    sess = InterpolationSession(pts, query_domain=qs)
+    sess.update(deltas=(spatial_points(10, seed=3),
+                        np.arange(10)))
+    assert sess.stats["delta_updates"] == 1
+
+    eng = AidwEngine(pts, query_domain=qs)
+    eng.update_dataset(inserts=spatial_points(10, seed=4), deletes=[0, 1])
+    assert eng.session.stats["delta_updates"] == 1
+    assert eng.session.stats["stage1_builds"] == 1
+
+
+def test_update_argument_validation(spatial_data):
+    """Bad update() spellings fail loudly instead of silently diverging."""
+    from repro.core.jax_compat import make_auto_mesh
+
+    pts, qs = spatial_data
+    sess = InterpolationSession(pts, query_domain=qs)
+    with pytest.raises(ValueError):
+        sess.update()                                # nothing to update
+    with pytest.raises(ValueError):
+        sess.update(pts, inserts=pts[:1])            # full AND delta
+    with pytest.raises(IndexError):
+        sess.update(deletes=[-1])                    # would wrap silently
+    with pytest.raises(IndexError):
+        sess.update(deletes=[pts.shape[0]])
+    with pytest.raises(ValueError):                  # layout typo
+        InterpolationSession(pts, mesh=make_auto_mesh((1,), ("q",)),
+                             layout="auto")
+
+
+def test_delta_update_fallback_paths(spatial_data):
+    """Oversized deltas and out-of-bbox inserts fall back to a full re-plan."""
+    pts, qs = spatial_data
+    m = pts.shape[0]
+    sess = InterpolationSession(pts, query_domain=qs)
+    sess.update(inserts=spatial_points(m, seed=7))   # > max_delta_frac * m
+    assert sess.stats["stage1_builds"] == 2
+    assert sess.stats["delta_updates"] == 0
+
+    out = np.array([[50.0, 50.0, 1.0]], np.float32)  # far outside the grid
+    sess.update(inserts=out)
+    assert sess.stats["stage1_builds"] == 3          # bbox fallback
+    assert sess.stats["delta_updates"] == 0
+    # ... and the re-planned session still answers (the degenerate geometry
+    # overflows the candidate window, where only tolerance — not bitwise —
+    # equality is contractual)
+    want = execute(sess.plan, qs)
+    got = sess.query(qs)
+    assert got.overflow == want.overflow
+    np.testing.assert_allclose(np.asarray(got.values),
+                               np.asarray(want.values), rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_session_single_device_mesh(spatial_data):
+    """mesh= on a 1-device mesh: same API, bit-identical results, shard-aware
+    stats.  (The real 8-lane partition runs in tests/test_distributed.py.)"""
+    from repro.core.jax_compat import make_auto_mesh
+
+    pts, qs = spatial_data
+    mesh = make_auto_mesh((1,), ("q",))
+    single = InterpolationSession(pts, query_domain=qs)
+    sharded = InterpolationSession(pts, query_domain=qs, mesh=mesh)
+    assert sharded.stats["devices"] == 1
+    assert sharded.sharded_plan.layout == "replicated"
+    a, b = single.query(qs), sharded.query(qs)
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+    assert np.array_equal(np.asarray(a.r_obs), np.asarray(b.r_obs))
+    assert a.overflow == b.overflow
+    # delta update keeps working through the sharded placement
+    sharded.update(inserts=spatial_points(8, seed=5), deletes=[0, 1, 2])
+    single.update(inserts=spatial_points(8, seed=5), deletes=[0, 1, 2])
+    a, b = single.query(qs), sharded.query(qs)
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+    assert sharded.stats["delta_updates"] == 1
 
 
 def test_fused_session_matches_unfused(spatial_data):
