@@ -1,0 +1,213 @@
+"""Open-loop load generator for the async AIDW serving subsystem.
+
+Drives :class:`repro.serving.AsyncAidwServer` with OPEN-LOOP Poisson
+arrivals — requests are submitted at exponentially-spaced instants from a
+pre-drawn trace, regardless of completions, so queueing delay under
+overload is measured instead of hidden (a closed-loop generator would
+self-throttle and report flattering latencies).
+
+The trace mixes deadline classes (``--deadline-frac`` of requests carry a
+deadline drawn from ``--deadline-ms``; the rest are best-effort) and
+odd-sized request bodies, which exercises the deadline-aware coalescer and
+the session's power-of-two bucketing together.
+
+Output: CSV rows via :func:`load_rows` (wired into ``benchmarks/run.py``)
+or a JSON latency report with ``--json`` (the CI serving-suite job uploads
+it as the latency-trajectory artifact next to the session benchmark):
+
+    {"config": {...}, "report": {submitted, completed, shed, queries_per_s,
+                                 latency: {queue, execute, total:
+                                           {p50_s, p95_s, p99_s, ...}}},
+     "lost": 0, "duplicated": 0}
+
+``--mesh`` serves the load over every visible device (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate a pod
+slice on CPU).  Standalone:
+
+    PYTHONPATH=src python benchmarks/load_gen.py [--json] [--mesh]
+        [--requests N] [--rate QPS] [--updates K]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.data.pipeline import spatial_points, spatial_queries
+from repro.serving import AsyncAidwServer
+
+
+def make_trace(n_requests: int, rate_rps: float, req_queries: int,
+               deadline_frac: float, deadline_ms: tuple, seed: int = 0):
+    """Pre-draw the open-loop arrival trace.
+
+    Returns a list of ``(t_arrival_s, n_queries, deadline_s_or_None)``:
+    exponential inter-arrivals at ``rate_rps`` requests/s, odd-ish request
+    sizes around ``req_queries``, and a ``deadline_frac`` mix of
+    deadline-bound requests with deadlines drawn uniformly from
+    ``deadline_ms`` (milliseconds, relative to arrival).
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for i in range(n_requests):
+        n = max(1, req_queries - int(rng.integers(0, max(req_queries // 3,
+                                                         2))))
+        deadline = None
+        if rng.random() < deadline_frac:
+            deadline = float(rng.uniform(*deadline_ms)) / 1e3
+        trace.append((float(arrivals[i]), n, deadline))
+    return trace
+
+
+def run_load(server: AsyncAidwServer, trace, *, updates: int = 0,
+             points: int = 0, seed: int = 0) -> dict:
+    """Replay ``trace`` against ``server`` (open loop), optionally weaving
+    ``updates`` incremental dataset deltas through the admission stream at
+    even intervals.  Returns the JSON report body."""
+    rng = np.random.default_rng(seed + 1)
+    update_every = len(trace) // (updates + 1) if updates else None
+    reqs = []
+    t0 = time.monotonic()
+    for i, (t_arrival, n, deadline_s) in enumerate(trace):
+        if update_every and i and i % update_every == 0 \
+                and len(reqs) // update_every <= updates:
+            d = max(points // 100, 1)
+            server.update_dataset(
+                inserts=spatial_points(d, seed=seed + 50 + i),
+                deletes=rng.choice(max(points - d, 1), d, replace=False))
+        now = time.monotonic() - t0
+        if t_arrival > now:                  # open loop: wait for the slot,
+            time.sleep(t_arrival - now)      # never for completions
+            now = t_arrival
+        # deadlines are anchored at the TRACE arrival, not at submit: when
+        # submission falls behind (update barrier blocking, backpressure),
+        # a delayed request must NOT gain deadline budget — that is exactly
+        # the overload signal an open-loop harness exists to report
+        reqs.append(server.submit(
+            spatial_queries(n, seed=seed + 1000 + i),
+            deadline_s=None if deadline_s is None
+            else t_arrival + deadline_s - now))
+    wall_submit = time.monotonic() - t0
+    server.flush(timeout=600)
+    wall_total = time.monotonic() - t0
+
+    terminal = [r for r in reqs if r.status in ("done", "shed")]
+    report = server.report()
+    return {
+        "report": report,
+        "offered_rps": len(trace) / max(wall_submit, 1e-9),
+        "wall_s": wall_total,
+        "lost": len(reqs) - len(terminal),
+        "duplicated": len(reqs) - len({r.uid for r in reqs}),
+    }
+
+
+def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
+          updates: int = 3, req_queries: int = 96, seed: int = 0) -> dict:
+    """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
+    and the JSON CLI so both measure the same configuration).
+
+    Warmup primes the executables + the scheduler's execute-time model,
+    then telemetry is RESET so the reported window reflects steady state,
+    not first-bucket compiles.
+    """
+    pts = spatial_points(points, seed=seed)
+    with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh,
+                         query_domain=spatial_queries(1024, seed=1)) as srv:
+        for _ in range(3):
+            srv.submit(spatial_queries(req_queries, seed=2))
+        srv.flush(timeout=600)
+        srv.telemetry.reset()
+        for k in srv.queue.counters:
+            srv.queue.counters[k] = 0
+        return run_load(srv, trace, updates=updates, points=points,
+                        seed=seed)
+
+
+def load_rows(n_requests: int = 96, rate_rps: float = 400.0,
+              req_queries: int = 96, points: int = 16384,
+              deadline_frac: float = 0.25,
+              deadline_ms: tuple = (20.0, 200.0), updates: int = 3,
+              seed: int = 0, mesh=None) -> list[tuple]:
+    """CSV rows for benchmarks/run.py (schema name,us_per_call,derived)."""
+    trace = make_trace(n_requests, rate_rps, req_queries, deadline_frac,
+                       deadline_ms, seed=seed)
+    out = drive(points, trace, mesh=mesh, updates=updates,
+                req_queries=req_queries, seed=seed)
+    rep = out["report"]
+    lat = rep["latency"]
+    assert out["lost"] == 0 and out["duplicated"] == 0, out
+    tag = f"{points}x{req_queries}@{rate_rps:.0f}rps"
+    return [
+        (f"serving/load_total_p50/{tag}", lat["total"]["p50_s"] * 1e6,
+         f"{rep['queries_per_s']:.0f} q/s served, "
+         f"{out['offered_rps']:.0f} req/s offered"),
+        (f"serving/load_total_p99/{tag}", lat["total"]["p99_s"] * 1e6,
+         f"queue p99 {lat['queue']['p99_s'] * 1e3:.1f}ms, "
+         f"execute p99 {lat['execute']['p99_s'] * 1e3:.1f}ms"),
+        (f"serving/load_shed/{tag}", 0.0,
+         f"{rep['shed']} shed / {rep['completed']} completed "
+         f"({updates} delta updates interleaved)"),
+    ]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--points", type=int, default=16384)
+    p.add_argument("--requests", type=int, default=96)
+    p.add_argument("--rate", type=float, default=400.0,
+                   help="offered load, requests/s (open loop)")
+    p.add_argument("--req-queries", type=int, default=96)
+    p.add_argument("--max-batch", type=int, default=4096)
+    p.add_argument("--deadline-frac", type=float, default=0.25,
+                   help="fraction of requests carrying a deadline")
+    p.add_argument("--deadline-ms", type=float, nargs=2,
+                   default=(20.0, 200.0))
+    p.add_argument("--updates", type=int, default=3,
+                   help="incremental dataset updates woven into the stream")
+    p.add_argument("--mesh", action="store_true",
+                   help="serve across every visible device")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", action="store_true",
+                   help="emit the full JSON latency report (CI artifact)")
+    args = p.parse_args()
+
+    mesh = None
+    if args.mesh:
+        import jax
+
+        from repro.core.jax_compat import make_auto_mesh
+
+        mesh = make_auto_mesh((len(jax.devices()),), ("q",))
+
+    trace = make_trace(args.requests, args.rate, args.req_queries,
+                       args.deadline_frac, tuple(args.deadline_ms),
+                       seed=args.seed)
+    out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
+                updates=args.updates, req_queries=args.req_queries,
+                seed=args.seed)
+
+    if args.json:
+        out["config"] = {k: (list(v) if isinstance(v, tuple) else v)
+                         for k, v in vars(args).items()}
+        print(json.dumps(out, indent=2))
+        return
+    rep = out["report"]
+    lat = rep["latency"]
+    print(f"offered {out['offered_rps']:.0f} req/s | served "
+          f"{rep['queries_per_s']:.0f} q/s | completed {rep['completed']} "
+          f"shed {rep['shed']} lost {out['lost']} dup {out['duplicated']}")
+    for axis in ("queue", "execute", "total", "shed"):
+        s = lat[axis]
+        print(f"  {axis:8s} p50 {s['p50_s'] * 1e3:8.2f}ms  "
+              f"p95 {s['p95_s'] * 1e3:8.2f}ms  p99 {s['p99_s'] * 1e3:8.2f}ms"
+              f"  max {s['max_s'] * 1e3:8.2f}ms  (n={s['count']})")
+
+
+if __name__ == "__main__":
+    main()

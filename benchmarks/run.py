@@ -1,14 +1,17 @@
 """Benchmark harness — one function per paper table/figure + roofline readers.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
-[--skip-roofline] [--skip-session]``
+[--skip-roofline] [--skip-session] [--skip-load]``
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
 throughput (Stage-1 rebuild excluded), verify the fused Stage-2 path, report
 warm SHARDED-session throughput on a mesh over every visible device
 (bit-identity checked), and time incremental ``update(deltas=...)`` against
-the full re-plan it replaces — the whole speedup story in one command.
+the full re-plan it replaces.  The ``serving/*`` rows put the ASYNC serving
+subsystem under open-loop Poisson load (deadline mix + interleaved delta
+updates) and report end-to-end p50/p99 latency and shed counts — the whole
+speedup story, traffic included, in one command.
 """
 
 from __future__ import annotations
@@ -24,6 +27,8 @@ def main() -> None:
     p.add_argument("--skip-paper", action="store_true")
     p.add_argument("--skip-roofline", action="store_true")
     p.add_argument("--skip-session", action="store_true")
+    p.add_argument("--skip-load", action="store_true",
+                   help="skip the async-serving load-generator rows")
     args = p.parse_args()
 
     rows: list[tuple] = []
@@ -45,6 +50,11 @@ def main() -> None:
         rows += S.fused_rows()
         rows += S.sharded_rows(sizes)   # mesh over every visible device
         rows += S.delta_rows()          # incremental vs full dataset refresh
+
+    if not args.skip_load:
+        from . import load_gen as L
+
+        rows += L.load_rows()           # async server under Poisson load
 
     if not args.skip_roofline:
         from . import roofline as R

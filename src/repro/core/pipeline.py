@@ -125,6 +125,10 @@ class AidwResult:
     r_obs: jax.Array               # (n,) observed mean NN distance
     overflow: int = 0              # queries whose candidate window overflowed
     timings: dict = field(default_factory=dict)   # stage -> seconds
+    overflow_mask: jax.Array | None = None        # (n,) bool per-query flag
+    # overflow_mask lets batch owners (the serving coalescer) attribute
+    # overflowed queries to the request that contributed them; ``overflow``
+    # stays the batch-level sum for one-shot callers.
 
 
 @dataclass(frozen=True)
@@ -438,6 +442,7 @@ def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:
         values=values, alpha=alpha, r_obs=r_obs,
         overflow=int(jnp.sum(res.overflow)),
         timings={"knn": t1 - t0, "interp": t2 - t1} if timings else {},
+        overflow_mask=res.overflow,
     )
 
 

@@ -232,6 +232,7 @@ class InterpolationSession:
         res = P.AidwResult(
             values=values[:n], alpha=alpha[:n], r_obs=r_obs[:n],
             overflow=int(jnp.sum(overflow[:n])),
+            overflow_mask=overflow[:n],
         )
         if timings:
             res.values.block_until_ready()

@@ -4,13 +4,15 @@ LM mode (default): ``python -m repro.launch.serve --arch llama3.2-3b
 --reduced`` runs the slot-based continuous-batching engine over synthetic
 requests and reports prefill/decode throughput.
 
-AIDW mode: ``python -m repro.launch.serve --aidw [--mesh]`` runs the
-session-backed interpolation engine over synthetic spatial request traffic;
-``--mesh`` shards the session's query path across every visible device
-(simulate a pod slice on CPU with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and an incremental
+AIDW mode: ``python -m repro.launch.serve --aidw [--mesh] [--async]`` runs
+the session-backed interpolation engine over synthetic spatial request
+traffic; ``--mesh`` shards the session's query path across every visible
+device (simulate a pod slice on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), an incremental
 ``update_dataset(inserts=..., deletes=...)`` between waves exercises the
-delta-rebinning path.
+delta-rebinning path, and ``--async`` drives the same traffic through
+:class:`repro.serving.AsyncAidwServer` (admission queue + worker thread +
+deadline-aware coalescing) and prints the latency telemetry report.
 """
 
 from __future__ import annotations
@@ -34,6 +36,9 @@ def run_aidw(args) -> None:
     n_dev = len(jax.devices())
     mesh = make_auto_mesh((n_dev,), ("q",)) if args.mesh else None
     pts = spatial_points(args.points, seed=args.seed)
+    if args.async_:
+        run_aidw_async(args, pts, mesh)
+        return
     engine = AidwEngine(pts, max_batch=args.max_batch, mesh=mesh,
                         query_domain=spatial_queries(1024, seed=1))
 
@@ -43,12 +48,11 @@ def run_aidw(args) -> None:
             queries_xy=spatial_queries(max(args.req_queries - 7 * i, 1),
                                        seed=wave_id * 100 + i))
             for i in range(args.requests)]
-        q0, b0 = engine.stats["queries"], engine.stats["batches"]
-        stats = engine.run(reqs)
+        report = engine.run(reqs)            # per-call report for THIS wave
         assert all(r.done for r in reqs)
-        print(f"wave {wave_id}: {stats['queries'] - q0} queries in "
-              f"{stats['batches'] - b0} coalesced batches "
-              f"({stats['queries_per_s']:.0f} q/s)")
+        print(f"wave {wave_id}: {report['queries']} queries in "
+              f"{report['batches']} coalesced batches "
+              f"({report['queries_per_s']:.0f} q/s)")
 
     wave(0)
     # incremental churn: replace 1% of the dataset, Stage-1 stays resident
@@ -61,7 +65,44 @@ def run_aidw(args) -> None:
     s = engine.session.stats
     print(f"aidw serve: devices={s['devices']} stage1_builds={s['stage1_builds']} "
           f"delta_updates={s['delta_updates']} buckets={s['bucket_misses']} "
-          f"queries={s['queries']}")
+          f"queries={s['queries']} (cumulative: {engine.stats})")
+
+
+def run_aidw_async(args, pts, mesh) -> None:
+    """The same two-wave traffic through the ASYNC server: admission queue,
+    worker thread, deadline mix, delta update serialized mid-stream."""
+    from repro.data.pipeline import spatial_points, spatial_queries
+    from repro.serving import AsyncAidwServer
+
+    with AsyncAidwServer(pts, max_batch=args.max_batch, mesh=mesh,
+                         query_domain=spatial_queries(1024, seed=1)) as srv:
+        def wave(wave_id: int, deadline_s):
+            return [srv.submit(
+                spatial_queries(max(args.req_queries - 7 * i, 1),
+                                seed=wave_id * 100 + i),
+                deadline_s=deadline_s if i % 3 == 0 else None)
+                for i in range(args.requests)]
+
+        w0 = wave(0, deadline_s=30.0)
+        rng = np.random.default_rng(args.seed + 1)
+        n_delta = max(args.points // 100, 1)
+        srv.update_dataset(                   # FIFO barrier inside the stream
+            inserts=spatial_points(n_delta, seed=args.seed + 2),
+            deletes=rng.choice(args.points, n_delta, replace=False))
+        w1 = wave(1, deadline_s=30.0)
+        srv.flush(timeout=600)
+        rep = srv.report()
+        done = sum(r.status == "done" for r in w0 + w1)
+        print(f"async waves: {done}/{len(w0) + len(w1)} served, "
+              f"{rep['shed']} shed, {rep['batches']} batches, "
+              f"{rep['queries_per_s']:.0f} q/s")
+        lat = rep["latency"]["total"]
+        print(f"async latency: p50 {lat['p50_s'] * 1e3:.1f}ms "
+              f"p95 {lat['p95_s'] * 1e3:.1f}ms p99 {lat['p99_s'] * 1e3:.1f}ms")
+        s = srv.session.stats
+        print(f"aidw serve: devices={s['devices']} "
+              f"stage1_builds={s['stage1_builds']} "
+              f"delta_updates={s['delta_updates']} queries={s['queries']}")
 
 
 def main() -> None:
@@ -70,6 +111,9 @@ def main() -> None:
                    help="serve AIDW interpolation instead of the LM engine")
     p.add_argument("--mesh", action="store_true",
                    help="AIDW: shard the session across all visible devices")
+    p.add_argument("--async", dest="async_", action="store_true",
+                   help="AIDW: drive traffic through the AsyncAidwServer "
+                        "(admission queue + worker thread + deadlines)")
     p.add_argument("--points", type=int, default=16384)
     p.add_argument("--req-queries", type=int, default=384)
     p.add_argument("--max-batch", type=int, default=4096)

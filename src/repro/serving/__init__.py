@@ -1,5 +1,21 @@
-"""Batched serving: LM continuous batching + session-backed AIDW serving."""
+"""Batched serving: LM continuous batching + session-backed AIDW serving.
+
+AIDW serving has two drive modes over ONE deadline-aware coalescer
+(``scheduler``): the synchronous :class:`AidwEngine` facade (caller hands it
+request lists) and the online :class:`AsyncAidwServer` (admission-queue
+worker thread with backpressure, deadline shedding, serialized dataset
+updates, and telemetry).
+"""
 
 from .engine import AidwEngine, InterpolationRequest, Request, ServingEngine
+from .queue import AdmissionQueue, AdmissionQueueClosed, AdmissionQueueFull
+from .scheduler import DeadlineCoalescer, ExecuteTimeModel
+from .server import AsyncAidwServer
+from .telemetry import LatencyHistogram, Telemetry
 
-__all__ = ["AidwEngine", "InterpolationRequest", "Request", "ServingEngine"]
+__all__ = [
+    "AidwEngine", "InterpolationRequest", "Request", "ServingEngine",
+    "AdmissionQueue", "AdmissionQueueClosed", "AdmissionQueueFull",
+    "DeadlineCoalescer", "ExecuteTimeModel",
+    "AsyncAidwServer", "LatencyHistogram", "Telemetry",
+]

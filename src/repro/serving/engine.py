@@ -20,16 +20,24 @@ Two workloads share this module:
   replicated or ring-sharded), and ``update_dataset(inserts=/deletes=)``
   refreshes a high-churn dataset incrementally without a Stage-1 rebuild.
 
+:class:`AidwEngine` is the SYNCHRONOUS drive mode of the serving subsystem:
+the caller hands it a request list per step and it drives the shared
+deadline-aware coalescer (``repro.serving.scheduler``) to completion inline.
+The asynchronous drive mode — admission-queue thread, backpressure,
+deadline shedding, serialized dataset updates — is
+:class:`repro.serving.server.AsyncAidwServer` over the SAME scheduler, so
+batch composition (and therefore results) match between the two modes.
+
 Simplifications vs. a production stack (documented): synchronized position
 counter per slot via per-slot start offsets is folded into the attention
 validity mask; prompts within one engine share a maximum prompt length
-(length-classed queues); the AIDW engine is synchronous (no admission queue
-thread) — callers hand it a request list per step.
+(length-classed queues).
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -178,35 +186,71 @@ class ServingEngine:
 
 @dataclass
 class InterpolationRequest:
+    """One client request: ``n`` query points, optionally deadline-bound.
+
+    ``deadline`` is ABSOLUTE seconds on the serving clock
+    (``time.monotonic`` unless the engine/server was built with an injected
+    clock); ``None`` means never shed.  Terminal states are
+    ``status == "done"`` (``values``/``overflow`` populated) and
+    ``status == "shed"`` (deadline expired before dispatch; never served).
+    ``overflow`` counts THIS request's queries whose kNN candidate window
+    overflowed — propagated per-request from the batch's per-query mask, not
+    summed engine-wide.
+    """
+
     uid: int
     queries_xy: np.ndarray          # (n, 2)
     values: np.ndarray | None = None
     done: bool = False
+    deadline: float | None = None   # absolute clock seconds; None = no SLO
+    status: str = "pending"         # pending | queued | done | shed
+    overflow: int = 0               # this request's overflowed queries
+    t_submit: float | None = None   # admission timestamp (serving clock)
+    t_dispatch: float | None = None
+    t_done: float | None = None
 
 
 class AidwEngine:
-    """Microbatched AIDW serving over one InterpolationSession.
+    """Microbatched AIDW serving over one InterpolationSession (synchronous
+    drive mode).
 
     Requests are coalesced in arrival order into batches of at most
     ``max_batch`` queries (a request larger than ``max_batch`` forms its own
     batch), interpolated with ONE ``session.query`` per coalesced batch, and
     scattered back to their requests — so p requests of n queries each cost
     ceil(p*n / max_batch) jitted launches instead of p, and zero Stage-1
-    rebuilds.
+    rebuilds.  Coalescing, deadline handling, and result scattering live in
+    ``repro.serving.scheduler`` (shared with the async server): requests
+    with a ``deadline`` close batches early under deadline pressure and are
+    shed (``status == "shed"``) once expired; requests without deadlines
+    reproduce plain FIFO coalescing byte-for-byte.
+
+    ``run`` returns a PER-CALL report (wall time, throughput, and this
+    call's counts); the cumulative counters accumulate on ``self.stats`` and
+    the latency histograms on ``self.telemetry``.
     """
 
     def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
                  query_domain=None, min_bucket: int = 64, mesh=None,
-                 layout: str = "replicated"):
+                 layout: str = "replicated", slack_s: float = 0.0,
+                 clock=time.monotonic):
         from repro.core import AidwConfig
         from repro.core.session import InterpolationSession
+
+        from . import scheduler as S
+        from .telemetry import Telemetry
 
         self.session = InterpolationSession(
             points_xyz, cfg or AidwConfig(), query_domain=query_domain,
             min_bucket=min_bucket, mesh=mesh, layout=layout)
         self.max_batch = int(max_batch)
+        self.clock = clock
+        self.estimator = S.ExecuteTimeModel(min_bucket=min_bucket)
+        self.coalescer = S.DeadlineCoalescer(
+            self.max_batch, self.estimator, clock=clock, slack_s=slack_s)
+        self.telemetry = Telemetry(clock=clock)
         self.stats = {"requests": 0, "batches": 0, "queries": 0,
-                      "overflow": 0}
+                      "overflow": 0, "shed": 0}
 
     def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
                        deltas=None) -> None:
@@ -215,37 +259,53 @@ class AidwEngine:
         CSR table; zero Stage-1 rebuilds)."""
         self.session.update(points_xyz, inserts=inserts, deletes=deletes,
                             deltas=deltas)
+        self.telemetry.record_update()
 
     def run(self, requests: list[InterpolationRequest]) -> dict:
-        """Serve all requests; returns throughput stats (for THIS call;
-        the cumulative counters live on ``self.stats``)."""
+        """Serve all requests; returns the PER-CALL report.
+
+        The report's ``requests``/``batches``/``queries``/``overflow``/
+        ``shed`` count THIS call only; ``wall_s``/``queries_per_s`` time it.
+        Cumulative counters (across all ``run`` calls) live on
+        ``self.stats`` and never carry per-call timing keys.
+        """
+        from . import scheduler as S
+
         t0 = time.perf_counter()
-        served = 0
-        i = 0                       # cursor: O(p) coalescing, no list shifts
-        while i < len(requests):
-            group = [requests[i]]
-            size = group[0].queries_xy.shape[0]
-            i += 1
-            while i < len(requests) and \
-                    size + requests[i].queries_xy.shape[0] <= self.max_batch:
-                group.append(requests[i])
-                size += requests[i].queries_xy.shape[0]
-                i += 1
-            batch = np.concatenate([r.queries_xy for r in group], axis=0)
-            res = self.session.query(batch)
-            vals = np.asarray(res.values)
-            off = 0
-            for r in group:
-                n = r.queries_xy.shape[0]
-                r.values = vals[off:off + n]
-                r.done = True
-                off += n
-            self.stats["batches"] += 1
-            self.stats["queries"] += size
-            self.stats["overflow"] += res.overflow
-            served += size
-        self.stats["requests"] += len(requests)
+        now = self.clock()
+        for r in requests:
+            if r.t_submit is None:
+                r.t_submit = now
+            self.telemetry.record_submit(r)
+        # form batches INCREMENTALLY with a fresh clock per batch (exactly
+        # like the async worker): a request whose deadline expires while
+        # earlier groups execute is shed at dispatch time, not served late
+        pending = deque(requests)
+        served = batches = overflow = shed_n = 0
+        while pending:
+            group, shed = self.coalescer.next_batch(pending)
+            for r in shed:
+                self.telemetry.record_shed(r)
+            shed_n += len(shed)
+            if not group:
+                if pending and not shed:     # barrier item: reject, don't spin
+                    raise ValueError(
+                        f"run() takes query requests only, got "
+                        f"{type(pending[0]).__name__}")
+                continue
+            res = S.dispatch_batch(
+                self.session, group, estimator=self.estimator,
+                telemetry=self.telemetry, clock=self.clock)
+            batches += 1
+            served += sum(r.queries_xy.shape[0] for r in group)
+            overflow += res.overflow
+        report = {
+            "requests": len(requests), "batches": batches,
+            "queries": served, "overflow": overflow, "shed": shed_n,
+        }
+        for k, v in report.items():
+            self.stats[k] += v
         dt = time.perf_counter() - t0
-        self.stats["wall_s"] = dt
-        self.stats["queries_per_s"] = served / max(dt, 1e-9)
-        return dict(self.stats)
+        report["wall_s"] = dt
+        report["queries_per_s"] = served / max(dt, 1e-9)
+        return report

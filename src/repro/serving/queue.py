@@ -1,0 +1,143 @@
+"""Thread-safe admission queue with bounded depth, backpressure, and
+expired-request load-shedding.
+
+The admission queue is the single entry point for ALL work reaching the async
+AIDW worker — query requests AND dataset-update barriers share one FIFO, which
+is what serializes churn against query batches (``serving/server.py``).
+
+Policies (all enforced here, not in callers):
+
+* **bounded depth** — at most ``max_depth`` items are admitted.  A full queue
+  exerts backpressure: ``put(block=True)`` waits (optionally up to
+  ``timeout``), ``put(block=False)`` raises :class:`AdmissionQueueFull`
+  immediately.  Rejection is loud, never silent.
+* **load-shedding** — an item whose ``deadline`` (absolute seconds on the
+  queue's ``clock``) has already passed is refused admission: serving it
+  would burn a batch slot on an answer the client has already abandoned.
+  ``put`` returns ``False`` and the item is NOT enqueued; callers mark the
+  request shed.  (The scheduler applies the same check again at dispatch
+  time for requests that expired while queued.)
+* **FIFO** — admitted items pop in arrival order; the deadline-aware
+  coalescer downstream decides batch boundaries, never reordering.
+
+Items are duck-typed: anything with an optional ``deadline`` attribute
+queues (``None`` = no deadline, never shed).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+__all__ = ["AdmissionQueue", "AdmissionQueueClosed", "AdmissionQueueFull"]
+
+
+class AdmissionQueueFull(RuntimeError):
+    """Bounded admission queue is at ``max_depth`` (backpressure signal)."""
+
+
+class AdmissionQueueClosed(RuntimeError):
+    """``put`` after ``close()`` — the worker is shutting down."""
+
+
+class AdmissionQueue:
+    """``clock`` is the DEADLINE clock (injectable for deterministic expiry
+    tests); blocking-wait timeouts always run on real ``time.monotonic`` —
+    a frozen test clock must bound waits, not disable them."""
+
+    def __init__(self, max_depth: int = 1024, *, clock=time.monotonic):
+        if max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        self.max_depth = int(max_depth)
+        self.clock = clock
+        self._items: deque = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._closed = False
+        self.counters = {"admitted": 0, "shed_expired": 0, "rejected_full": 0}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    @staticmethod
+    def expired(item, now: float) -> bool:
+        deadline = getattr(item, "deadline", None)
+        return deadline is not None and now >= deadline
+
+    def put(self, item, *, block: bool = True,
+            timeout: float | None = None) -> bool:
+        """Admit ``item``.  Returns True (admitted) or False (shed: already
+        expired on arrival).  Raises :class:`AdmissionQueueFull` when the
+        depth bound holds after blocking (or immediately if ``block=False``).
+        """
+        with self._not_full:
+            if self._closed:
+                raise AdmissionQueueClosed("admission queue is closed")
+            if self.expired(item, self.clock()):
+                self.counters["shed_expired"] += 1
+                return False
+            if len(self._items) >= self.max_depth:
+                if not block:
+                    self.counters["rejected_full"] += 1
+                    raise AdmissionQueueFull(
+                        f"admission queue at max_depth={self.max_depth}")
+                deadline = None if timeout is None \
+                    else time.monotonic() + timeout
+                while len(self._items) >= self.max_depth and not self._closed:
+                    remaining = None if deadline is None \
+                        else deadline - time.monotonic()
+                    if remaining is not None and remaining <= 0:
+                        self.counters["rejected_full"] += 1
+                        raise AdmissionQueueFull(
+                            f"admission queue at max_depth={self.max_depth} "
+                            f"after {timeout}s")
+                    self._not_full.wait(remaining)
+                if self._closed:
+                    raise AdmissionQueueClosed("admission queue is closed")
+                # re-check expiry: the wait may have outlived the deadline
+                if self.expired(item, self.clock()):
+                    self.counters["shed_expired"] += 1
+                    return False
+            self._items.append(item)
+            self.counters["admitted"] += 1
+            self._not_empty.notify()
+            return True
+
+    def get(self, timeout: float | None = None):
+        """Pop the oldest item (FIFO); ``None`` on timeout or when closed and
+        drained."""
+        with self._not_empty:
+            deadline = None if timeout is None else time.monotonic() + timeout
+            while not self._items:
+                if self._closed:
+                    return None
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._not_empty.wait(remaining)
+            item = self._items.popleft()
+            self._not_full.notify()
+            return item
+
+    def drain(self) -> list:
+        """Pop everything currently queued (non-blocking)."""
+        with self._lock:
+            items = list(self._items)
+            self._items.clear()
+            self._not_full.notify_all()
+            return items
+
+    def close(self) -> None:
+        """Refuse new work; blocked getters/putters wake up."""
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

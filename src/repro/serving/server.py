@@ -1,0 +1,367 @@
+"""AsyncAidwServer — the online drive mode of the AIDW serving subsystem.
+
+Turns the session-backed engine into a real server: clients ``submit()``
+query batches (optionally deadline-bound) from any thread; ONE background
+worker thread drains the bounded :class:`repro.serving.queue.AdmissionQueue`,
+forms deadline-aware microbatches with the shared
+:class:`repro.serving.scheduler.DeadlineCoalescer`, and executes them on the
+resident :class:`repro.core.session.InterpolationSession` — so all device
+work stays single-threaded (JAX dispatch is not re-entered concurrently)
+while admission and result pickup are fully concurrent.
+
+Write-path integration: ``update_dataset(inserts=/deletes=)`` enqueues a
+barrier op into the SAME admission queue the query requests flow through.
+The worker applies it between batches, in FIFO order with the queries around
+it — churn is serialized with query execution on one thread, so an
+incremental CSR patch can never race a query batch that is mid-flight, and a
+query submitted after the update observes the updated dataset.
+
+Lifecycle: ``submit() -> result()`` per request; ``flush()`` waits for
+everything admitted so far; ``close()`` stops the worker (context-manager
+support included).  Telemetry (queue/execute/total latency histograms, QPS,
+shed/overflow counters) accumulates on ``server.telemetry`` and snapshots
+via ``server.report()``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import scheduler as S
+from .engine import AidwEngine, InterpolationRequest
+from .queue import AdmissionQueue, AdmissionQueueFull
+
+__all__ = ["AsyncAidwServer"]
+
+
+@dataclass
+class _UpdateOp:
+    """Dataset-update barrier flowing through the admission queue.
+
+    Carries no ``queries_xy``, which is exactly how the coalescer recognizes
+    it as a batch boundary (scheduler.next_batch stops the scan).
+    """
+
+    points_xyz: object = None
+    inserts: object = None
+    deletes: object = None
+    error: BaseException | None = None
+    cancelled: bool = False          # timed-out caller withdrew the op
+    applied: threading.Event = field(default_factory=threading.Event)
+
+
+class AsyncAidwServer:
+    """Admission queue + worker thread + deadline-aware coalescing over one
+    :class:`repro.core.session.InterpolationSession`.
+
+    Constructor arguments mirror :class:`repro.serving.engine.AidwEngine`
+    (``mesh=`` serves every device of a mesh) plus the queueing knobs:
+    ``max_depth`` bounds the admission queue (backpressure), ``slack_s`` pads
+    the deadline-aware close test, ``linger_s`` optionally waits for more
+    arrivals when a batch is still small (0.0 = dispatch as soon as the
+    queue runs dry, which keeps pre-enqueued workloads byte-for-byte
+    identical to the synchronous engine).
+    """
+
+    def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
+                 max_depth: int = 1024, query_domain=None,
+                 min_bucket: int = 64, mesh=None, layout: str = "replicated",
+                 slack_s: float = 0.0, linger_s: float = 0.0,
+                 clock=time.monotonic):
+        # ONE construction path for the session/estimator/coalescer/
+        # telemetry stack: the engine builds it, the server drives it from
+        # a worker thread (and the sync facade stays usable via .engine)
+        self.engine = AidwEngine(
+            points_xyz, cfg, max_batch=max_batch, query_domain=query_domain,
+            min_bucket=min_bucket, mesh=mesh, layout=layout, slack_s=slack_s,
+            clock=clock)
+        self.session = self.engine.session
+        self.clock = clock
+        self.estimator = self.engine.estimator
+        self.coalescer = self.engine.coalescer
+        self.telemetry = self.engine.telemetry
+        self.queue = AdmissionQueue(max_depth, clock=clock)
+        self.linger_s = float(linger_s)
+        self._uid = itertools.count()
+        self._reqs: dict[int, InterpolationRequest] = {}
+        self._cv = threading.Condition()
+        self._inflight = 0              # admitted, not yet done/shed
+        self._worker_error: BaseException | None = None
+        self._worker = threading.Thread(
+            target=self._work, name="aidw-serving-worker", daemon=True)
+        self._worker.start()
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, queries_xy, *, deadline_s: float | None = None,
+               uid: int | None = None, block: bool = True,
+               timeout: float | None = None) -> InterpolationRequest:
+        """Admit one request; returns its :class:`InterpolationRequest`.
+
+        ``deadline_s`` is RELATIVE seconds from now (converted to an absolute
+        deadline on the server clock).  A request already expired on arrival
+        is shed immediately (``status == "shed"``, never enqueued).  A full
+        queue blocks (backpressure) unless ``block=False``/``timeout``, in
+        which case :class:`repro.serving.queue.AdmissionQueueFull` escapes to
+        the caller.
+        """
+        self._raise_worker_error()
+        # validate at the boundary: a malformed array admitted here would
+        # crash the WORKER and take down serving for every other client
+        q = np.asarray(queries_xy)
+        if q.ndim != 2 or q.shape[1] != 2 or q.shape[0] == 0 \
+                or not np.issubdtype(q.dtype, np.floating):
+            raise ValueError(
+                f"queries_xy must be a non-empty float (n, 2) array, got "
+                f"shape {q.shape} dtype {q.dtype}")
+        now = self.clock()
+        if uid is None:
+            uid = next(self._uid)
+            with self._cv:                   # never collide with caller uids
+                while uid in self._reqs:
+                    uid = next(self._uid)
+        req = InterpolationRequest(
+            uid=uid, queries_xy=q,
+            deadline=None if deadline_s is None else now + deadline_s)
+        req.t_submit = now
+        req.status = "queued"
+        # count in-flight BEFORE admission: the worker may pop + dispatch +
+        # decrement the instant put() releases the queue lock, and a late
+        # increment here would strand _inflight at 1 (flush would hang)
+        with self._cv:
+            if req.uid in self._reqs:
+                raise ValueError(f"duplicate request uid {req.uid}")
+            self._reqs[req.uid] = req
+            self._inflight += 1
+        self.telemetry.record_submit(req)
+        try:
+            admitted = self.queue.put(req, block=block, timeout=timeout)
+        except Exception as e:
+            with self._cv:
+                self._reqs.pop(req.uid, None)
+                self._inflight -= 1
+                self._cv.notify_all()
+            if isinstance(e, AdmissionQueueFull):
+                # only genuine backpressure counts as a rejection — a closed
+                # queue (shutdown/crash) would misread as capacity pressure
+                self.telemetry.record_rejected()
+            raise
+        if not admitted:                      # expired on arrival: shed
+            S.shed_request(req, self.clock())
+            self.telemetry.record_shed(req)
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+        return req
+
+    def result(self, req: InterpolationRequest | int,
+               timeout: float | None = None) -> InterpolationRequest:
+        """Block until the request reaches a terminal state and return it
+        (``status`` is ``"done"`` or ``"shed"``); raises TimeoutError."""
+        if isinstance(req, int):
+            with self._cv:
+                if req not in self._reqs:
+                    raise KeyError(f"unknown request uid {req}")
+                req = self._reqs[req]
+        with self._cv:
+            if not self._cv.wait_for(lambda: req.done or
+                                     self._worker_error is not None,
+                                     timeout=timeout):
+                raise TimeoutError(f"request {req.uid} not done "
+                                   f"after {timeout}s")
+        if req.done:          # completed before any worker crash: still good
+            return req
+        self._raise_worker_error()
+        return req
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Wait until every request admitted so far is done or shed, then
+        reap the terminal uid registry (callers hold their own request
+        objects; without this a long-running submit/flush loop would grow
+        host memory without bound).  ``result(uid)`` lookups for flushed
+        requests therefore need the request OBJECT, not the bare uid."""
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._inflight == 0 or
+                                     self._worker_error is not None,
+                                     timeout=timeout):
+                raise TimeoutError(
+                    f"{self._inflight} requests still in flight "
+                    f"after {timeout}s")
+        self._raise_worker_error()
+        self.reap()
+
+    def reap(self) -> int:
+        """Drop terminal requests from the uid registry (long-running
+        servers call this after collecting results; returns how many)."""
+        with self._cv:
+            done = [u for u, r in self._reqs.items() if r.done]
+            for u in done:
+                del self._reqs[u]
+            return len(done)
+
+    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
+                       deltas=None, timeout: float | None = None) -> None:
+        """Refresh the served dataset THROUGH the admission queue.
+
+        The op is a FIFO barrier: every request admitted before it is served
+        against the old dataset, every request after against the new one.
+        Blocks until the worker applied the update (it never races a query
+        batch — both run on the worker thread).  ``timeout`` bounds the
+        whole call: admission past it raises
+        :class:`~repro.serving.queue.AdmissionQueueFull`, application past
+        it raises TimeoutError.
+        """
+        self._raise_worker_error()
+        if deltas is not None:
+            inserts, deletes = deltas
+        op = _UpdateOp(points_xyz=points_xyz, inserts=inserts,
+                       deletes=deletes)
+        # the timeout bounds the WHOLE call: admission (the queue may be
+        # full and exerting backpressure, raising AdmissionQueueFull at the
+        # bound) plus the applied-wait below, which reuses the same deadline
+        deadline = None if timeout is None else time.monotonic() + timeout
+        self.queue.put(op, timeout=timeout)
+        # poll in short slices so a worker that dies AFTER admission (its
+        # crash handler resolves queued ops, but belt-and-braces) can never
+        # strand this wait
+        while not op.applied.wait(timeout=0.05):
+            self._raise_worker_error()
+            if deadline is not None and time.monotonic() > deadline:
+                # withdraw the op (best effort: the worker skips cancelled
+                # barriers it has not started) so a timed-out update cannot
+                # silently apply later and double-apply on the caller's retry
+                op.cancelled = True
+                raise TimeoutError(
+                    f"dataset update not applied after {timeout}s "
+                    f"(op withdrawn; safe to retry)")
+        if op.error is not None:
+            raise op.error
+
+    def report(self) -> dict:
+        """Telemetry snapshot + queue/session counters (JSON-serializable)."""
+        rep = self.telemetry.report()
+        rep["admission"] = dict(self.queue.counters)
+        rep["queue_depth"] = len(self.queue)
+        rep["session"] = {k: v for k, v in self.session.stats.items()
+                          if isinstance(v, (int, float))}
+        return rep
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Stop admitting, let the worker drain, and join it.  Raises
+        TimeoutError if the worker is still running after ``timeout``, and
+        surfaces a worker crash — a silent return would leave requests
+        unresolved behind the caller's back."""
+        self.queue.close()
+        self._worker.join(timeout=timeout)
+        with self._cv:
+            self._cv.notify_all()
+        if self._worker.is_alive():
+            raise TimeoutError(
+                f"serving worker still draining after {timeout}s "
+                f"(queue_depth={len(self.queue)})")
+        self._raise_worker_error()
+
+    def __enter__(self) -> "AsyncAidwServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker --------------------------------------------------------------
+
+    def _raise_worker_error(self) -> None:
+        if self._worker_error is not None:
+            raise RuntimeError("serving worker died") from self._worker_error
+
+    def _apply_update(self, op: _UpdateOp) -> None:
+        if op.cancelled:                    # withdrawn by a timed-out caller
+            op.applied.set()
+            return
+        try:
+            self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
+                                       deletes=op.deletes)
+        except BaseException as e:          # surface to the waiting client
+            op.error = e
+        finally:
+            op.applied.set()
+
+    def _step(self, pending: deque) -> None:
+        """One worker step over the front of ``pending``: apply an update
+        barrier, or form + dispatch one coalesced batch (shared by the live
+        loop and the drain-on-close loop)."""
+        head = pending[0]
+        if not hasattr(head, "queries_xy"):               # update barrier
+            pending.popleft()
+            self._apply_update(head)
+            with self._cv:
+                self._cv.notify_all()
+            return
+        group, shed = self.coalescer.next_batch(pending)
+        for r in shed:
+            self.telemetry.record_shed(r)
+        if group:
+            S.dispatch_batch(self.session, group, estimator=self.estimator,
+                             telemetry=self.telemetry, clock=self.clock)
+        if group or shed:
+            with self._cv:
+                self._inflight -= len(group) + len(shed)
+                self._cv.notify_all()
+
+    def _work(self) -> None:
+        """Worker loop: drain admissions, apply barriers, dispatch batches.
+
+        ``pending`` is the worker-local FIFO; the admission queue is drained
+        into it so batch formation never holds the queue lock.  When
+        ``pending`` still has queries, the queue is only polled (non-
+        blocking); when idle, the worker blocks on the queue.
+        """
+        pending: deque = deque()
+        try:
+            while True:
+                if not pending:
+                    item = self.queue.get(timeout=0.1)
+                    if item is None:
+                        if self.queue.closed:
+                            break
+                        continue
+                    pending.append(item)
+                pending.extend(self.queue.drain())
+                if self.linger_s and len(pending) >= 1 \
+                        and hasattr(pending[0], "queries_xy"):
+                    # optional linger: give near-simultaneous arrivals a
+                    # window to coalesce; deadline pressure still closes
+                    # early because next_batch re-reads the clock.  The
+                    # window itself is bounded in REAL time — a test-injected
+                    # frozen clock must not spin this loop forever
+                    end = time.monotonic() + self.linger_s
+                    while time.monotonic() < end:
+                        more = self.queue.drain()
+                        if more:
+                            pending.extend(more)
+                            break
+                        time.sleep(min(self.linger_s / 10, 1e-3))
+                self._step(pending)
+            # drain-on-close: anything admitted before close() still resolves
+            pending.extend(self.queue.drain())
+            while pending:
+                self._step(pending)
+        except BaseException as e:
+            self._worker_error = e
+            # a dead worker must not strand anyone: wake blocked putters,
+            # refuse new work, and resolve every queued update barrier so
+            # update_dataset callers see the crash instead of hanging
+            self.queue.close()
+            pending.extend(self.queue.drain())
+            for item in pending:
+                if not hasattr(item, "queries_xy") \
+                        and hasattr(item, "applied"):
+                    item.error = item.error or e
+                    item.applied.set()
+            with self._cv:
+                self._cv.notify_all()

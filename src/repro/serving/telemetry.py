@@ -1,0 +1,191 @@
+"""Serving telemetry: latency histograms, throughput, and shed counters.
+
+The async serving subsystem (``serving/server.py``) and the synchronous
+:class:`repro.serving.engine.AidwEngine` facade both report through one
+:class:`Telemetry` object so a load test reads the same metrics regardless of
+the drive mode:
+
+* per-request **queue** latency (submit -> dispatch), **execute** latency
+  (dispatch -> results on host), and **total** latency (submit -> done), each
+  recorded into a log-spaced :class:`LatencyHistogram` with p50/p95/p99;
+* **throughput** — completed queries per second over the observed completion
+  window;
+* **shedding / backpressure counters** — requests shed because their deadline
+  had already expired (at admission or at dispatch), and requests rejected by
+  the bounded admission queue (``rejected_full``);
+* **overflow** — total queries whose kNN candidate window overflowed,
+  aggregated from the per-request propagation (``InterpolationRequest.overflow``).
+
+Everything here is dependency-free host-side bookkeeping: no JAX arrays, no
+device syncs — ``record_*`` calls cost a few dict updates, so the worker
+thread can call them per batch without perturbing the latencies it measures.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from bisect import bisect_left
+
+__all__ = ["LatencyHistogram", "Telemetry"]
+
+
+class LatencyHistogram:
+    """Log-spaced latency histogram with quantile estimation.
+
+    Bins span ``lo``..``hi`` seconds with ``bins_per_decade`` log10-spaced
+    buckets (default: 1us..1000s, 10 buckets/decade => 91 bins, <1KB).
+    ``percentile`` returns the upper edge of the bucket holding the requested
+    rank, clamped to the exact observed max — a <=26% overestimate by
+    construction, which is the right bias for latency SLO reporting.
+    """
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
+                 bins_per_decade: int = 10):
+        decades = math.log10(hi / lo)
+        n = int(round(decades * bins_per_decade))
+        self._edges = [lo * 10.0 ** (i / bins_per_decade)
+                       for i in range(1, n + 1)]
+        self._counts = [0] * (n + 1)        # +1: overflow bucket above hi
+        self.count = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        self._counts[bisect_left(self._edges, s)] += 1
+        self.count += 1
+        self.sum += s
+        if s > self.max:
+            self.max = s
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100] -> seconds (0.0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        rank = p / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= rank and c:
+                edge = self._edges[i] if i < len(self._edges) else self.max
+                return min(edge, self.max)
+        return self.max
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_s": self.sum / self.count if self.count else 0.0,
+            "p50_s": self.percentile(50),
+            "p95_s": self.percentile(95),
+            "p99_s": self.percentile(99),
+            "max_s": self.max,
+        }
+
+
+class Telemetry:
+    """Aggregated serving metrics for one engine/server instance.
+
+    ``clock`` is injectable (tests pass a fake monotonic clock); all
+    timestamps recorded on requests are in this clock's epoch.
+    """
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.queue = LatencyHistogram()
+        self.execute = LatencyHistogram()
+        self.total = LatencyHistogram()
+        # shed requests terminate fast by construction — folding their
+        # time-to-shed into `total` would IMPROVE reported SLO percentiles
+        # the more requests are dropped, so they get their own histogram
+        self.shed = LatencyHistogram()
+        self.counters = {
+            "submitted": 0, "completed": 0, "shed": 0, "rejected_full": 0,
+            "batches": 0, "queries": 0, "overflow_queries": 0,
+            "dataset_updates": 0,
+        }
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        # submit/reject/admission-shed arrive from client threads while the
+        # worker records batches: one lock keeps counters and histograms sane
+        self._lock = threading.Lock()
+
+    def reset(self) -> None:
+        """Zero histograms, counters, and the throughput window.  Load
+        harnesses call this after warmup so the report reflects steady
+        state, not first-bucket compiles."""
+        with self._lock:
+            self.queue = LatencyHistogram()
+            self.execute = LatencyHistogram()
+            self.total = LatencyHistogram()
+            self.shed = LatencyHistogram()
+            for k in self.counters:
+                self.counters[k] = 0
+            self._t_first = self._t_last = None
+
+    # -- recording -----------------------------------------------------------
+
+    def record_submit(self, req) -> None:
+        with self._lock:
+            self.counters["submitted"] += 1
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.counters["rejected_full"] += 1
+
+    def record_shed(self, req) -> None:
+        with self._lock:
+            self.counters["shed"] += 1
+            if req.t_submit is not None and req.t_done is not None:
+                self.shed.record(req.t_done - req.t_submit)
+
+    def record_update(self) -> None:
+        with self._lock:
+            self.counters["dataset_updates"] += 1
+
+    def record_batch(self, group, execute_s: float) -> None:
+        """One dispatched coalesced batch; per-request timestamps are set."""
+        with self._lock:
+            self.counters["batches"] += 1
+            self.execute.record(execute_s)
+            for r in group:
+                self.counters["completed"] += 1
+                self.counters["queries"] += r.queries_xy.shape[0]
+                self.counters["overflow_queries"] += r.overflow
+                if r.t_submit is not None and r.t_dispatch is not None:
+                    self.queue.record(r.t_dispatch - r.t_submit)
+                if r.t_submit is not None and r.t_done is not None:
+                    self.total.record(r.t_done - r.t_submit)
+                t_done = r.t_done if r.t_done is not None else self.clock()
+                # throughput window opens at the first SUBMIT and closes at
+                # the last completion — completion-to-completion would be
+                # zero-width for a single-batch run (absurd q/s) and would
+                # exclude the first batch's own latency
+                t_start = r.t_submit if r.t_submit is not None else t_done
+                if self._t_first is None or t_start < self._t_first:
+                    self._t_first = t_start
+                if self._t_last is None or t_done > self._t_last:
+                    self._t_last = t_done
+
+    # -- reporting -----------------------------------------------------------
+
+    def queries_per_s(self) -> float:
+        if self._t_first is None or self._t_last is None:
+            return 0.0
+        return self.counters["queries"] / max(self._t_last - self._t_first,
+                                              1e-9)
+
+    def report(self) -> dict:
+        """JSON-serializable snapshot (the load generator's report body)."""
+        with self._lock:
+            return {
+                **self.counters,
+                "queries_per_s": self.queries_per_s(),
+                "latency": {
+                    "queue": self.queue.snapshot(),
+                    "execute": self.execute.snapshot(),
+                    "total": self.total.snapshot(),
+                    "shed": self.shed.snapshot(),
+                },
+            }

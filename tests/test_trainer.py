@@ -55,13 +55,29 @@ def test_grad_accum_matches_full_batch():
 
 
 def test_compressed_training_still_learns():
+    """int8 error-feedback compression must (a) still learn and (b) track
+    the UNCOMPRESSED trajectory at identical settings.
+
+    The seed's absolute bar (0.9x in 30 steps at lr=2e-3) failed on
+    jax-0.4.37/CPU for compressed AND uncompressed alike — both land at
+    0.919x, and per-channel quantization scales change nothing — so the
+    budget was miscalibrated, not the quantizer (ROADMAP, seed-failure
+    triage).  40 steps gives both paths room (~0.87x), and the parity bound
+    pins the quantizer's actual contract: the error-feedback memory keeps
+    the compressed optimizer on the uncompressed trajectory.
+    """
     cfg, params, opt, step, stream = _setup(compress=True)
-    losses = []
-    for s in range(30):
+    _, params_u, opt_u, step_u, _ = _setup()     # uncompressed reference
+    losses, losses_u = [], []
+    for s in range(40):
         b = {k: jnp.asarray(v) for k, v in lm_batch(stream, s).items()}
         params, opt, m = step(params, opt, b)
+        params_u, opt_u, m_u = step_u(params_u, opt_u, b)
         losses.append(float(m["loss"]))
-    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.9
+        losses_u.append(float(m_u["loss"]))
+    last, last_u = np.mean(losses[-5:]), np.mean(losses_u[-5:])
+    assert last < np.mean(losses[:5]) * 0.9, (losses[:5], losses[-5:])
+    assert last < last_u * 1.02, (last, last_u)  # tracks uncompressed
 
 
 def test_train_driver_end_to_end(tmp_path):
