@@ -22,10 +22,17 @@ it as the latency-trajectory artifact next to the session benchmark):
 
 ``--mesh`` serves the load over every visible device (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate a pod
-slice on CPU).  Standalone:
+slice on CPU).  ``--cluster N`` replays the SAME open-loop trace against an
+N-host :class:`repro.serving.cluster.AidwCluster` fleet — queries routed
+across hosts, updates broadcast as epoch-ordered barriers — and reports the
+MERGED fleet telemetry (per-host histograms merged bin-exactly into fleet
+p50/p95/p99, QPS and shed counters summed; per-host reports attached).
+``--cluster-procs`` backs every host but the coordinator's with a real
+subprocess over the socket control plane.  Standalone:
 
     PYTHONPATH=src python benchmarks/load_gen.py [--json] [--mesh]
         [--requests N] [--rate QPS] [--updates K]
+        [--cluster N [--cluster-procs]] [--policy least_loaded]
 """
 
 from __future__ import annotations
@@ -64,11 +71,16 @@ def make_trace(n_requests: int, rate_rps: float, req_queries: int,
     return trace
 
 
-def run_load(server: AsyncAidwServer, trace, *, updates: int = 0,
+def run_load(server, trace, *, updates: int = 0,
              points: int = 0, seed: int = 0) -> dict:
     """Replay ``trace`` against ``server`` (open loop), optionally weaving
     ``updates`` incremental dataset deltas through the admission stream at
-    even intervals.  Returns the JSON report body."""
+    even intervals.  Returns the JSON report body.
+
+    ``server`` is anything with the submit/update_dataset/flush/report
+    surface: an :class:`AsyncAidwServer` or a multi-host
+    :class:`repro.serving.cluster.AidwCluster` (whose ``report()`` nests
+    the merged fleet view — ``drive_cluster`` flattens it)."""
     rng = np.random.default_rng(seed + 1)
     update_every = len(trace) // (updates + 1) if updates else None
     reqs = []
@@ -129,6 +141,65 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
                         seed=seed)
 
 
+def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
+                  max_batch: int = 4096, updates: int = 3,
+                  req_queries: int = 96, seed: int = 0,
+                  policy: str = "round_robin", mesh=None) -> dict:
+    """Replay ``trace`` against an ``n_hosts`` fleet; returns the merged
+    fleet report (flattened: ``report`` = fleet view, ``hosts``/``routing``
+    attached).
+
+    ``procs=True`` runs every host except host 0 as a REAL subprocess
+    behind the socket control plane (``repro.serving.cluster.rpc``) — the
+    multi-host deployment shape, minus the machines.  ``mesh`` applies to
+    IN-PROCESS hosts only (they share this process's devices); subprocess
+    hosts build their own local mesh from their own visible devices.
+    """
+    import os
+
+    from repro.serving.cluster import AidwCluster, HostServer, RemoteHost
+    from repro.serving.cluster.rpc import free_port_base, spawn_worker
+
+    pts = spatial_points(points, seed=seed)
+    qd = spatial_queries(1024, seed=1)
+    workers, hosts = [], None
+    if procs and n_hosts > 1:
+        base = free_port_base(n_hosts)
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "src")
+        workers = [spawn_worker(i, n_hosts, points=points, seed=seed,
+                                control_port=base, max_batch=max_batch,
+                                env=env)
+                   for i in range(1, n_hosts)]
+        hosts = [HostServer(0, pts, max_batch=max_batch, query_domain=qd)] \
+            + [RemoteHost(i, ("127.0.0.1", base + i), connect_timeout_s=300)
+               for i in range(1, n_hosts)]
+    try:
+        with AidwCluster(None if hosts else pts, n_hosts=n_hosts,
+                         hosts=hosts, policy=policy,
+                         **({} if hosts else
+                            {"max_batch": max_batch,
+                             "query_domain": qd, "mesh": mesh})) as cl:
+            for _ in range(3 * n_hosts):     # warm every host's executables
+                cl.submit(spatial_queries(req_queries, seed=2))
+            cl.flush(timeout=600)
+            cl.reset_telemetry()
+            out = run_load(cl, trace, updates=updates, points=points,
+                           seed=seed)
+            rep = out["report"]              # AidwCluster.report(): nested
+            out["report"] = rep["fleet"]
+            out["hosts"] = rep["hosts"]
+            out["routing"] = rep["routing"]
+            out["epoch"] = rep["epoch"]
+    finally:
+        for w in workers:
+            try:
+                w.wait(timeout=60)
+            except Exception:
+                w.kill()
+    return out
+
+
 def load_rows(n_requests: int = 96, rate_rps: float = 400.0,
               req_queries: int = 96, points: int = 16384,
               deadline_frac: float = 0.25,
@@ -141,7 +212,9 @@ def load_rows(n_requests: int = 96, rate_rps: float = 400.0,
                 req_queries=req_queries, seed=seed)
     rep = out["report"]
     lat = rep["latency"]
-    assert out["lost"] == 0 and out["duplicated"] == 0, out
+    if out["lost"] or out["duplicated"]:
+        raise RuntimeError(f"load run lost/duplicated requests: "
+                           f"{out['lost']}/{out['duplicated']}")
     tag = f"{points}x{req_queries}@{rate_rps:.0f}rps"
     return [
         (f"serving/load_total_p50/{tag}", lat["total"]["p50_s"] * 1e6,
@@ -154,6 +227,43 @@ def load_rows(n_requests: int = 96, rate_rps: float = 400.0,
          f"{rep['shed']} shed / {rep['completed']} completed "
          f"({updates} delta updates interleaved)"),
     ]
+
+
+def cluster_rows(n_requests: int = 64, rate_rps: float = 300.0,
+                 req_queries: int = 96, points: int = 16384,
+                 updates: int = 2, seed: int = 0,
+                 policy: str = "round_robin") -> list[tuple]:
+    """1-host vs 2-host fleet at the SAME offered load: the scale-out
+    trajectory rows for benchmarks/run.py (QPS + p99 per width, plus the
+    2-host scale-out efficiency = qps2 / (2 * qps1))."""
+    trace = make_trace(n_requests, rate_rps, req_queries,
+                       deadline_frac=0.25, deadline_ms=(20.0, 200.0),
+                       seed=seed)
+    rows = []
+    qps = {}
+    for n_hosts in (1, 2):
+        out = drive_cluster(points, trace, n_hosts=n_hosts, updates=updates,
+                            req_queries=req_queries, seed=seed,
+                            policy=policy)
+        rep = out["report"]
+        if out["lost"] or out["duplicated"]:
+            # explicit raise, not assert: python -O must not turn a lost/
+            # duplicated request into a silently wrong scale-out row
+            raise RuntimeError(f"cluster load run lost/duplicated requests: "
+                               f"{out['lost']}/{out['duplicated']}")
+        qps[n_hosts] = rep["queries_per_s"]
+        tag = f"{points}x{req_queries}@{rate_rps:.0f}rps/{n_hosts}host"
+        rows.append(
+            (f"cluster/load_total_p99/{tag}",
+             rep["latency"]["total"]["p99_s"] * 1e6,
+             f"{rep['queries_per_s']:.0f} q/s fleet, {rep['shed']} shed, "
+             f"epochs {rep['epoch_min']}..{rep['epoch_max']}"))
+    rows.append(
+        (f"cluster/scaleout_eff/{points}x{req_queries}@{rate_rps:.0f}rps",
+         0.0,
+         f"2-host efficiency {qps[2] / max(2 * qps[1], 1e-9):.2f} "
+         f"({qps[1]:.0f} -> {qps[2]:.0f} q/s)"))
+    return rows
 
 
 def main() -> None:
@@ -172,13 +282,23 @@ def main() -> None:
                    help="incremental dataset updates woven into the stream")
     p.add_argument("--mesh", action="store_true",
                    help="serve across every visible device")
+    p.add_argument("--cluster", type=int, default=0, metavar="N",
+                   help="serve from an N-host fleet and report MERGED "
+                        "fleet telemetry")
+    p.add_argument("--cluster-procs", action="store_true",
+                   help="back fleet hosts 1..N-1 with real subprocesses "
+                        "(socket control plane)")
+    p.add_argument("--policy", default="round_robin",
+                   choices=("round_robin", "least_loaded"))
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--json", action="store_true",
                    help="emit the full JSON latency report (CI artifact)")
     args = p.parse_args()
 
     mesh = None
-    if args.mesh:
+    if args.mesh and not (args.cluster and args.cluster_procs):
+        # in-process fleets can share this process's mesh; subprocess
+        # hosts build their own from their own visible devices
         import jax
 
         from repro.core.jax_compat import make_auto_mesh
@@ -188,9 +308,16 @@ def main() -> None:
     trace = make_trace(args.requests, args.rate, args.req_queries,
                        args.deadline_frac, tuple(args.deadline_ms),
                        seed=args.seed)
-    out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
-                updates=args.updates, req_queries=args.req_queries,
-                seed=args.seed)
+    if args.cluster:
+        out = drive_cluster(args.points, trace, n_hosts=args.cluster,
+                            procs=args.cluster_procs,
+                            max_batch=args.max_batch, updates=args.updates,
+                            req_queries=args.req_queries, seed=args.seed,
+                            policy=args.policy, mesh=mesh)
+    else:
+        out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
+                    updates=args.updates, req_queries=args.req_queries,
+                    seed=args.seed)
 
     if args.json:
         out["config"] = {k: (list(v) if isinstance(v, tuple) else v)

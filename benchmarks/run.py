@@ -1,7 +1,7 @@
 """Benchmark harness — one function per paper table/figure + roofline readers.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
-[--skip-roofline] [--skip-session] [--skip-load]``
+[--skip-roofline] [--skip-session] [--skip-load] [--skip-cluster]``
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
@@ -11,7 +11,10 @@ warm SHARDED-session throughput on a mesh over every visible device
 the full re-plan it replaces.  The ``serving/*`` rows put the ASYNC serving
 subsystem under open-loop Poisson load (deadline mix + interleaved delta
 updates) and report end-to-end p50/p99 latency and shed counts — the whole
-speedup story, traffic included, in one command.
+speedup story, traffic included, in one command.  The ``cluster/*`` rows
+replay the same offered load against 1-host and 2-host serving fleets
+(``repro.serving.cluster``) so the trajectory starts capturing scale-out
+efficiency alongside single-host latency.
 """
 
 from __future__ import annotations
@@ -29,6 +32,8 @@ def main() -> None:
     p.add_argument("--skip-session", action="store_true")
     p.add_argument("--skip-load", action="store_true",
                    help="skip the async-serving load-generator rows")
+    p.add_argument("--skip-cluster", action="store_true",
+                   help="skip the 1-host-vs-2-host fleet scale-out rows")
     args = p.parse_args()
 
     rows: list[tuple] = []
@@ -55,6 +60,11 @@ def main() -> None:
         from . import load_gen as L
 
         rows += L.load_rows()           # async server under Poisson load
+
+    if not args.skip_cluster:
+        from . import load_gen as L
+
+        rows += L.cluster_rows()        # 1-host vs 2-host fleet scale-out
 
     if not args.skip_roofline:
         from . import roofline as R

@@ -1,0 +1,136 @@
+"""Multi-host AIDW serving fleet — the cluster subsystem end to end.
+
+Client threads submit interpolation requests to a 2-host
+:class:`repro.serving.cluster.AidwCluster` while the dataset churns
+underneath via CONCURRENT epoch-ordered updates (the coordinator totally
+orders them, every host applies them in the same order between the same
+batches), and one host dies mid-stream: the router drains it, resubmits
+its unserved requests to the survivor, and every client still gets exactly
+one result.  Prints the merged fleet telemetry at the end.
+
+Run in-process, or back host 1 with a real subprocess over the socket
+control plane:
+
+  PYTHONPATH=src python examples/cluster_aidw.py
+  PYTHONPATH=src python examples/cluster_aidw.py --procs
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+
+import numpy as np
+
+from repro.data.pipeline import spatial_points, spatial_queries
+from repro.serving.cluster import AidwCluster
+
+
+def client(cl: AidwCluster, cid: int, n_requests: int, results: list):
+    """One client: odd-sized requests, every third deadline-bound."""
+    reqs = []
+    for i in range(n_requests):
+        qs = spatial_queries(97 + 13 * ((cid + i) % 5), seed=cid * 100 + i)
+        reqs.append(cl.submit(qs, deadline_s=10.0 if i % 3 == 0 else None))
+    for r in reqs:
+        cl.result(r, timeout=300)
+    results.append(reqs)
+
+
+def build_hosts(args):
+    """None for an in-process fleet, or [local host 0, RPC proxy to a
+    subprocess host 1] for the process-backed shape."""
+    if not args.procs:
+        return None, []
+    import os
+    import socket
+
+    from repro.serving.cluster import HostServer, RemoteHost
+    from repro.serving.cluster.rpc import spawn_worker
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    base = s.getsockname()[1]
+    s.close()
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    worker = spawn_worker(1, 2, points=args.points, seed=0,
+                          control_port=base, env=env)
+    hosts = [HostServer(0, spatial_points(args.points, seed=0),
+                        query_domain=spatial_queries(1024, seed=1)),
+             RemoteHost(1, ("127.0.0.1", base + 1), connect_timeout_s=300)]
+    return hosts, [worker]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--points", type=int, default=16384)
+    p.add_argument("--clients", type=int, default=3)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--updates", type=int, default=3)
+    p.add_argument("--procs", action="store_true",
+                   help="host 1 in a real subprocess (socket control plane)")
+    p.add_argument("--kill-host", action="store_true",
+                   help="crash a host mid-stream to show router draining "
+                        "(in-process fleets only)")
+    args = p.parse_args()
+
+    pts = spatial_points(args.points, seed=0)
+    hosts, workers = build_hosts(args)
+    with AidwCluster(pts if hosts is None else None, n_hosts=2, hosts=hosts,
+                     query_domain=spatial_queries(1024, seed=1)) as cl:
+        results: list = []
+        threads = [threading.Thread(target=client,
+                                    args=(cl, c, args.requests, results))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        # CONCURRENT churn: each update gets an epoch from the coordinator
+        # and lands in every host's FIFO in that order, so the fleet stays
+        # consistent no matter how these threads interleave
+        n_delta = max(args.points // 100, 1)
+
+        def churn(k: int):
+            cl.update_dataset(
+                inserts=spatial_points(n_delta, seed=2 + k),
+                deletes=np.random.default_rng(3 + k).choice(
+                    args.points - n_delta, n_delta, replace=False),
+                timeout=600)
+
+        upd_threads = [threading.Thread(target=churn, args=(k,))
+                       for k in range(args.updates)]
+        for t in upd_threads:
+            t.start()
+        if args.kill_host and hosts is None:
+            # simulate host death: the router drains it on the first error
+            # and resubmits its unserved requests to the survivor
+            def boom(*a, **k):
+                raise RuntimeError("injected host fault")
+
+            cl.hosts[1].server.session.query = boom
+        for t in upd_threads + threads:
+            t.join()
+        cl.flush(timeout=600)
+
+        served = sum(r.status == "done" for reqs in results for r in reqs)
+        total = sum(len(reqs) for reqs in results)
+        rep = cl.report()
+        fleet, routing = rep["fleet"], rep["routing"]
+        lat = fleet["latency"]["total"]
+        print(f"served {served}/{total} requests from {args.clients} "
+              f"client threads over {fleet['hosts']} hosts "
+              f"({fleet['shed']} shed, epochs "
+              f"{fleet['epoch_min']}..{fleet['epoch_max']})")
+        print(f"fleet: {fleet['queries_per_s']:.0f} q/s, total-latency "
+              f"p50 {lat['p50_s'] * 1e3:.1f}ms / "
+              f"p99 {lat['p99_s'] * 1e3:.1f}ms")
+        print(f"routing: policy={routing['policy']} "
+              f"live={routing['live_hosts']} "
+              f"drained={routing['drained_hosts']} "
+              f"resubmitted={routing['resubmitted']}")
+    for w in workers:
+        w.wait(timeout=60)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,8 +37,10 @@ session keeps the build resident and makes the per-query path cheap:
 ``stats`` exposes the amortization counters the tests assert on:
 ``stage1_builds`` (full plan/update invocations), ``delta_updates``
 (incremental updates that did NOT rebuild Stage 1), ``batches``/``queries``
-served, ``bucket_hits``/``bucket_misses`` (compile-cache behaviour), and
-``devices`` (mesh width; 1 for a single-device session).
+served, ``bucket_hits``/``bucket_misses`` (compile-cache behaviour),
+``devices`` (mesh width; 1 for a single-device session), and ``n_points``
+(current dataset size — the serving scheduler keys its execute-time model
+on it, and cluster telemetry reports it per host).
 """
 
 from __future__ import annotations
@@ -109,7 +111,8 @@ class InterpolationSession:
             else bool(donate)
         self.stats = {"stage1_builds": 0, "delta_updates": 0, "batches": 0,
                       "queries": 0, "bucket_hits": 0, "bucket_misses": 0,
-                      "last_plan_s": 0.0, "devices": self._n_dev}
+                      "last_plan_s": 0.0, "devices": self._n_dev,
+                      "n_points": 0}
         self._seen_buckets: set[int] = set()
         self._plan: P.AidwPlan | None = None
         self._splan: P.ShardedAidwPlan | None = None
@@ -167,6 +170,7 @@ class InterpolationSession:
                 self._plan = new_plan
                 self._place()
                 self.stats["delta_updates"] += 1
+                self.stats["n_points"] = int(new_plan.n_points)
                 self.stats["last_plan_s"] = time.perf_counter() - t0
                 return
             points_xyz = new_pts        # fallback: full re-plan below
@@ -180,6 +184,7 @@ class InterpolationSession:
                             bin=self._layout != "ring")
         self._place()
         self.stats["stage1_builds"] += 1
+        self.stats["n_points"] = int(self._plan.n_points)
         self.stats["last_plan_s"] = time.perf_counter() - t0
 
     # -- query path ----------------------------------------------------------

@@ -4,15 +4,18 @@ LM mode (default): ``python -m repro.launch.serve --arch llama3.2-3b
 --reduced`` runs the slot-based continuous-batching engine over synthetic
 requests and reports prefill/decode throughput.
 
-AIDW mode: ``python -m repro.launch.serve --aidw [--mesh] [--async]`` runs
-the session-backed interpolation engine over synthetic spatial request
-traffic; ``--mesh`` shards the session's query path across every visible
-device (simulate a pod slice on CPU with
+AIDW mode: ``python -m repro.launch.serve --aidw [--mesh] [--async]
+[--cluster N]`` runs the session-backed interpolation engine over synthetic
+spatial request traffic; ``--mesh`` shards the session's query path across
+every visible device (simulate a pod slice on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), an incremental
 ``update_dataset(inserts=..., deletes=...)`` between waves exercises the
 delta-rebinning path, and ``--async`` drives the same traffic through
 :class:`repro.serving.AsyncAidwServer` (admission queue + worker thread +
 deadline-aware coalescing) and prints the latency telemetry report.
+``--cluster N`` serves the traffic from an N-host
+:class:`repro.serving.cluster.AidwCluster` fleet instead (epoch-ordered
+updates, query routing, merged fleet telemetry).
 """
 
 from __future__ import annotations
@@ -36,6 +39,9 @@ def run_aidw(args) -> None:
     n_dev = len(jax.devices())
     mesh = make_auto_mesh((n_dev,), ("q",)) if args.mesh else None
     pts = spatial_points(args.points, seed=args.seed)
+    if args.cluster:
+        run_aidw_cluster(args, pts, mesh)
+        return
     if args.async_:
         run_aidw_async(args, pts, mesh)
         return
@@ -105,6 +111,51 @@ def run_aidw_async(args, pts, mesh) -> None:
               f"delta_updates={s['delta_updates']} queries={s['queries']}")
 
 
+def run_aidw_cluster(args, pts, mesh=None) -> None:
+    """Two waves + a fleet-wide epoch-ordered update through an N-host
+    in-process cluster; prints the MERGED fleet telemetry.  With ``mesh``
+    every host serves its batches across the whole visible-device mesh
+    (in-process hosts share the devices)."""
+    import numpy as np
+
+    from repro.data.pipeline import spatial_points, spatial_queries
+    from repro.serving.cluster import AidwCluster
+
+    with AidwCluster(pts, n_hosts=args.cluster, max_batch=args.max_batch,
+                     query_domain=spatial_queries(1024, seed=1),
+                     policy=args.policy, mesh=mesh) as cl:
+        def wave(wave_id: int):
+            return [cl.submit(
+                spatial_queries(max(args.req_queries - 7 * i, 1),
+                                seed=wave_id * 100 + i),
+                deadline_s=30.0 if i % 3 == 0 else None)
+                for i in range(args.requests)]
+
+        w0 = wave(0)
+        rng = np.random.default_rng(args.seed + 1)
+        n_delta = max(args.points // 100, 1)
+        epoch = cl.update_dataset(       # epoch-ordered fleet-wide barrier
+            inserts=spatial_points(n_delta, seed=args.seed + 2),
+            deletes=rng.choice(args.points, n_delta, replace=False),
+            timeout=600)
+        w1 = wave(1)
+        cl.flush(timeout=600)
+        rep = cl.report()
+        fleet = rep["fleet"]
+        done = sum(r.status == "done" for r in w0 + w1)
+        print(f"cluster[{args.cluster} hosts, {rep['routing']['policy']}]: "
+              f"{done}/{len(w0) + len(w1)} served, epoch {epoch}, "
+              f"{fleet['shed']} shed, {fleet['queries_per_s']:.0f} q/s fleet")
+        lat = fleet["latency"]["total"]
+        print(f"fleet latency: p50 {lat['p50_s'] * 1e3:.1f}ms "
+              f"p95 {lat['p95_s'] * 1e3:.1f}ms p99 {lat['p99_s'] * 1e3:.1f}ms")
+        for h in rep["hosts"]:
+            print(f"  host {h['host_id']}: epoch {h['epoch']} "
+                  f"completed {h['completed']} "
+                  f"queries {h['queries']} (n_points "
+                  f"{h['session']['n_points']})")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--aidw", action="store_true",
@@ -114,6 +165,12 @@ def main() -> None:
     p.add_argument("--async", dest="async_", action="store_true",
                    help="AIDW: drive traffic through the AsyncAidwServer "
                         "(admission queue + worker thread + deadlines)")
+    p.add_argument("--cluster", type=int, default=0, metavar="N",
+                   help="AIDW: serve from an N-host in-process fleet "
+                        "(epoch-ordered updates + routing + fleet report)")
+    p.add_argument("--policy", default="round_robin",
+                   choices=("round_robin", "least_loaded"),
+                   help="cluster routing policy")
     p.add_argument("--points", type=int, default=16384)
     p.add_argument("--req-queries", type=int, default=384)
     p.add_argument("--max-batch", type=int, default=4096)

@@ -27,7 +27,15 @@ from dataclasses import dataclass, field
 
 
 class HeartbeatMonitor:
-    """Tracks last-seen time per host; hosts are dead after ``timeout_s``."""
+    """Tracks last-seen time per host; hosts are dead after ``timeout_s``.
+
+    Shared by the training fleet (node death -> elastic rescale) and the
+    serving fleet (``repro.serving.cluster.router`` drains a dead host and
+    resubmits its queries).  Membership is dynamic: ``add`` registers a
+    host mid-run (a recovered or newly joined fleet member — it starts
+    alive, last seen "now"), ``remove`` forgets one (drained hosts stop
+    counting toward ``dead_hosts`` so a drain isn't re-reported forever).
+    """
 
     def __init__(self, hosts, timeout_s: float = 60.0, clock=time.monotonic):
         self._clock = clock
@@ -37,6 +45,18 @@ class HeartbeatMonitor:
 
     def beat(self, host):
         self._last[host] = self._clock()
+
+    def add(self, host) -> None:
+        """Register ``host`` (idempotent); it starts alive as of now."""
+        self._last.setdefault(host, self._clock())
+
+    def remove(self, host) -> None:
+        """Forget ``host`` (idempotent): no longer reported dead or alive."""
+        self._last.pop(host, None)
+
+    @property
+    def hosts(self) -> list:
+        return list(self._last)
 
     def dead_hosts(self) -> list:
         now = self._clock()

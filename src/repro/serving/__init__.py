@@ -5,6 +5,23 @@ AIDW serving has two drive modes over ONE deadline-aware coalescer
 request lists) and the online :class:`AsyncAidwServer` (admission-queue
 worker thread with backpressure, deadline shedding, serialized dataset
 updates, and telemetry).
+
+Scale-out lives in the ``repro.serving.cluster`` subpackage: a fleet of
+host processes, each one ``AsyncAidwServer`` over a full dataset replica,
+kept consistent by an **epoch-numbered update protocol** — every
+``update_dataset`` gets a monotonically increasing epoch from one
+coordinator and is broadcast into every host's FIFO admission stream, so
+all hosts apply the same deltas in the same order between the same batches
+(the same barrier the single-process worker provides, reconstructed fleet-
+wide).  The contract: a query served by ANY host sees the dataset state a
+single server would reach after applying epochs ``1..k`` in order, for the
+``k`` stamped on the request — so cluster results are bit-identical to a
+single server replaying the same epoch log.  Queries are spread by a
+routing layer (round-robin / queue-depth-aware, heartbeat-drained via
+``repro.runtime.fault_tolerance``), and per-host latency histograms merge
+bin-exactly into fleet p50/p95/p99 (``cluster.telemetry``).  Import from
+``repro.serving.cluster`` (kept out of this namespace: the subpackage
+imports this one).
 """
 
 from .engine import AidwEngine, InterpolationRequest, Request, ServingEngine

@@ -1,0 +1,66 @@
+"""Multi-host AIDW serving cluster: epoch-ordered updates, query routing,
+and fleet telemetry.
+
+One fleet = N host processes (or N in-process hosts), each a
+:class:`~repro.serving.cluster.host.HostServer` — a full dataset replica
+behind its own :class:`repro.serving.server.AsyncAidwServer` with a
+shard-local admission queue, serving queries on that host's local devices.
+Scaling follows the decomposition in Gowanlock's hybrid CPU/GPU KNN-join
+work: kNN query throughput scales by partitioning *query* work across
+executors, while each executor keeps an efficient local index — here the
+paper's grid-binned CSR table, replicated per host and kept consistent by
+the epoch protocol below.
+
+**The epoch protocol** (mechanics in ``cluster/epochs.py``): every
+``update_dataset`` is assigned a monotonically increasing epoch by the one
+:class:`~repro.serving.cluster.epochs.EpochCoordinator` and broadcast to
+every live host while the coordinator holds its broadcast lock, so the
+update occupies the same position in every host's FIFO admission stream
+relative to the routed queries; each host's
+:class:`~repro.serving.cluster.epochs.EpochApplier` then admits updates to
+the local server strictly in epoch order (buffering transport stragglers,
+dropping duplicates).  On each host the update is the same FIFO barrier
+the single-process worker already provides — applied between batches,
+never racing the CSR table.
+
+**Consistency contract**: every host applies the same updates in the same
+epoch order; a query routed to any host is served against some epoch ``k``
+— the same dataset state a single ``AsyncAidwServer`` would reach after
+applying epochs ``1..k`` in order — with ``k >= `` the newest epoch whose
+broadcast completed before the query was routed.  Served requests are
+stamped with their epoch (``InterpolationRequest.epoch``), which is the
+testable witness: the cluster suite asserts bit-identical results against
+a single server replaying the coordinator's epoch log.
+
+Read path: the :class:`~repro.serving.cluster.router.Router` spreads
+traffic round-robin or by shard-local queue depth, drains hosts on
+heartbeat timeout or in-band failure (reusing
+:class:`repro.runtime.fault_tolerance.HeartbeatMonitor`), and resubmits a
+drained host's unserved requests to survivors — exactly-once client-
+visible results over at-least-once execution (safe: queries are read-only
+against epoch-consistent replicas).
+
+Telemetry: per-host log-binned latency histograms merge bin-by-bin into
+fleet p50/p95/p99 + summed QPS (``cluster/telemetry.py``) — the
+``benchmarks/load_gen.py --cluster --json`` fleet artifact.
+
+Entry points: :class:`~repro.serving.cluster.fleet.AidwCluster` (in-process
+fleet or pre-built hosts), :func:`~repro.serving.cluster.bootstrap
+.bootstrap` + ``python -m repro.serving.cluster.rpc`` (process-backed
+fleet over the socket control plane, optionally ``jax.distributed``).
+"""
+
+from .bootstrap import ClusterConfig, ClusterContext, bootstrap, local_mesh
+from .epochs import EpochApplier, EpochCoordinator, EpochUpdate, UpdateHandle
+from .fleet import AidwCluster
+from .host import HostServer
+from .router import NoLiveHosts, RoutedRequest, Router
+from .rpc import RemoteHost, serve_host, spawn_worker
+from .telemetry import merge_reports
+
+__all__ = [
+    "AidwCluster", "ClusterConfig", "ClusterContext", "bootstrap",
+    "local_mesh", "EpochApplier", "EpochCoordinator", "EpochUpdate",
+    "UpdateHandle", "HostServer", "NoLiveHosts", "RoutedRequest", "Router",
+    "RemoteHost", "serve_host", "spawn_worker", "merge_reports",
+]

@@ -1,0 +1,181 @@
+"""Epoch-numbered dataset-update protocol for the multi-host serving fleet.
+
+The single-process :class:`repro.serving.server.AsyncAidwServer` already
+serializes dataset updates against query batches: an update is a FIFO
+barrier through the one admission queue its worker drains, so churn can
+never race a batch and every request is served against a well-defined
+dataset state.  A fleet of host processes has no shared queue, so that
+invariant is reconstructed from two pieces:
+
+1. **Epoch assignment** — every ``update_dataset`` reaching the cluster is
+   assigned a monotonically increasing epoch number by the ONE
+   :class:`EpochCoordinator` (under its lock, so concurrent update calls
+   serialize into a total order).  The coordinator also broadcast-enqueues
+   the update to every live host *while still holding the lock*: each
+   host's admission queue therefore receives updates in epoch order,
+   interleaved at some point with that host's query stream.
+2. **Ordered application** — each host's :class:`EpochApplier` admits
+   updates to the local server strictly in epoch order: the next expected
+   epoch is enqueued immediately, later epochs are buffered until the gap
+   fills (transport reordering), and already-applied epochs are dropped
+   idempotently (coordinator retries after a partial broadcast).
+
+Consistency contract (also documented on ``repro.serving.cluster``): every
+host applies the same updates in the same epoch order, and on each host an
+update is a FIFO barrier between query batches.  A query routed to any host
+is therefore served against dataset epoch ``k`` for some ``k`` that is (a)
+a prefix of the global update order, identical across hosts, and (b) at
+least the newest epoch whose broadcast completed before the query was
+routed.  Results are bit-identical to a single ``AsyncAidwServer`` that
+applied epochs ``1..k`` in order — which is what the cluster tests assert.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+__all__ = ["EpochUpdate", "EpochCoordinator", "EpochApplier", "UpdateHandle"]
+
+
+@dataclass
+class EpochUpdate:
+    """One dataset update with its fleet-assigned epoch number.
+
+    Exactly like the server's update surface: either a full ``points_xyz``
+    refresh or an incremental ``inserts``/``deletes`` delta.
+    """
+
+    epoch: int
+    points_xyz: object = None
+    inserts: object = None
+    deletes: object = None
+
+    @property
+    def is_delta(self) -> bool:
+        return self.points_xyz is None
+
+
+class EpochCoordinator:
+    """Assigns the fleet-wide total order of dataset updates.
+
+    ``assign`` hands out epochs ``start+1, start+2, ...`` under a lock and
+    records every update in ``log`` (epoch order), which is both the replay
+    source for the single-server equivalence tests and the catch-up source
+    for a host that joins or recovers mid-stream.
+    """
+
+    def __init__(self, start: int = 0):
+        self._epoch = int(start)
+        self._lock = threading.Lock()
+        self.log: list[EpochUpdate] = []
+
+    @property
+    def epoch(self) -> int:
+        """Newest assigned epoch (0 = construction-time dataset)."""
+        with self._lock:
+            return self._epoch
+
+    def assign(self, *, points_xyz=None, inserts=None,
+               deletes=None) -> EpochUpdate:
+        """Stamp the next epoch onto an update and log it."""
+        with self._lock:
+            self._epoch += 1
+            upd = EpochUpdate(epoch=self._epoch, points_xyz=points_xyz,
+                              inserts=inserts, deletes=deletes)
+            self.log.append(upd)
+            return upd
+
+    def since(self, epoch: int) -> list[EpochUpdate]:
+        """Updates newer than ``epoch``, in order (host catch-up)."""
+        with self._lock:
+            return [u for u in self.log if u.epoch > epoch]
+
+
+class UpdateHandle:
+    """Per-host handle for one offered update.
+
+    Resolves in two stages: ``bound`` once the update was actually enqueued
+    into the host server (immediately for in-order arrivals, later for
+    buffered ones), then the underlying server op's ``applied`` event.
+    Duplicates resolve immediately with ``duplicate=True``.
+    """
+
+    def __init__(self, epoch: int):
+        self.epoch = epoch
+        self.duplicate = False
+        self.op = None                       # server _UpdateOp once bound
+        self.error: BaseException | None = None
+        self._bound = threading.Event()
+
+    def _bind(self, op) -> None:
+        self.op = op
+        self._bound.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self.error = err
+        self._bound.set()
+
+    def wait_bound(self, timeout: float | None = None) -> bool:
+        return self._bound.wait(timeout)
+
+
+class EpochApplier:
+    """Strictly-ordered update admission for ONE host.
+
+    ``enqueue`` is the host's non-blocking update hook (normally
+    ``AsyncAidwServer.submit_update`` partial-applied with the update's
+    payload); ``offer`` calls it exactly once per fresh epoch, in epoch
+    order, buffering early arrivals until the gap fills.  Thread-safe.
+    """
+
+    def __init__(self, enqueue, *, applied_epoch: int = 0):
+        self._enqueue = enqueue              # fn(EpochUpdate) -> server op
+        self._next = int(applied_epoch) + 1
+        self._buffer: dict[int, tuple[EpochUpdate, UpdateHandle]] = {}
+        self._lock = threading.Lock()
+        self.counters = {"enqueued": 0, "buffered": 0, "duplicates": 0}
+
+    @property
+    def next_epoch(self) -> int:
+        with self._lock:
+            return self._next
+
+    def offer(self, update: EpochUpdate) -> UpdateHandle:
+        """Admit ``update`` in epoch order; returns its :class:`UpdateHandle`.
+
+        In-order updates bind (enqueue) before ``offer`` returns; early ones
+        bind when their predecessors arrive; stale epochs are dropped as
+        idempotent duplicates.
+        """
+        handle = UpdateHandle(update.epoch)
+        with self._lock:
+            if update.epoch < self._next:
+                self.counters["duplicates"] += 1
+                handle.duplicate = True
+                handle._bound.set()
+                return handle
+            if update.epoch in self._buffer:
+                self.counters["duplicates"] += 1
+                handle.duplicate = True
+                handle._bound.set()
+                return handle
+            self._buffer[update.epoch] = (update, handle)
+            if update.epoch != self._next:
+                self.counters["buffered"] += 1
+            self._drain_locked()
+        return handle
+
+    def _drain_locked(self) -> None:
+        while self._next in self._buffer:
+            upd, handle = self._buffer.pop(self._next)
+            try:
+                handle._bind(self._enqueue(upd))
+                self.counters["enqueued"] += 1
+            except BaseException as e:
+                # enqueue failed (server closed/crashed): resolve the handle
+                # so the coordinator's wait sees the failure, and stop —
+                # later epochs must not jump the dead one
+                handle._fail(e)
+                return
+            self._next += 1

@@ -1,0 +1,188 @@
+"""AidwCluster — the multi-host serving fleet front end.
+
+Ties the cluster pieces together behind one server-like surface: an
+:class:`~repro.serving.cluster.epochs.EpochCoordinator` totally orders
+dataset updates, a :class:`~repro.serving.cluster.router.Router` spreads
+query traffic over the live hosts, and per-host
+:class:`~repro.serving.cluster.host.HostServer` elements (in-process, or
+:class:`~repro.serving.cluster.rpc.RemoteHost` proxies for hosts in other
+processes) do the serving.
+
+Write path (the epoch-broadcast step of the protocol in
+``cluster/epochs.py``): ``update_dataset`` assigns the next epoch and
+enqueues the update on EVERY live host while holding the broadcast lock —
+pinning the update's position in each host's FIFO relative to all queries
+routed before/after — then releases the lock and waits for the fleet to
+apply.  Concurrent ``update_dataset`` calls therefore serialize into one
+total epoch order but their applications overlap across hosts.  A host
+that fails mid-broadcast or mid-wait is drained (its queries resubmit to
+survivors); the update succeeds if at least one live host applied it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from .epochs import EpochCoordinator
+from .host import HostServer
+from .router import RoutedRequest, Router
+from .telemetry import merge_reports
+
+__all__ = ["AidwCluster"]
+
+
+class AidwCluster:
+    """N-host AIDW serving fleet behind one submit/update/flush surface.
+
+    Either hand it ``hosts=`` (pre-built :class:`HostServer`/``RemoteHost``
+    elements — the process-backed deployment path) or let it build
+    ``n_hosts`` in-process hosts over ``points_xyz``, each with its own
+    ``AsyncAidwServer`` (every host serves a full dataset replica;
+    ``host_kwargs`` pass through, e.g. ``max_batch=``/``query_domain=``/
+    ``mesh=``).  ``policy`` and ``heartbeat_timeout_s`` configure the
+    router.
+    """
+
+    def __init__(self, points_xyz=None, n_hosts: int = 2, cfg=None, *,
+                 hosts=None, policy: str = "round_robin",
+                 heartbeat_timeout_s: float = 60.0, clock=time.monotonic,
+                 **host_kwargs):
+        if hosts is None:
+            if points_xyz is None:
+                raise ValueError("need points_xyz to build in-process hosts")
+            hosts = [HostServer(i, points_xyz, cfg, clock=clock,
+                                **host_kwargs)
+                     for i in range(int(n_hosts))]
+        self.hosts = list(hosts)
+        self.clock = clock
+        self.coordinator = EpochCoordinator()
+        self.router = Router(self.hosts, policy=policy, clock=clock,
+                             heartbeat_timeout_s=heartbeat_timeout_s)
+        self._bcast = threading.Lock()
+
+    # -- query path ----------------------------------------------------------
+
+    def submit(self, queries_xy, *,
+               deadline_s: float | None = None) -> RoutedRequest:
+        """Route one query batch to a live host (see :class:`Router`)."""
+        return self.router.route(queries_xy, deadline_s=deadline_s)
+
+    def result(self, req: RoutedRequest,
+               timeout: float | None = None) -> RoutedRequest:
+        """Block until ``req`` is terminal (follows it across host drains)."""
+        return self.router.wait(req, timeout=timeout)
+
+    # -- write path ----------------------------------------------------------
+
+    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
+                       deltas=None, timeout: float | None = None) -> int:
+        """Epoch-ordered fleet-wide dataset update; returns the epoch.
+
+        Broadcast-enqueues under the coordinator lock (total epoch order on
+        every host's FIFO), waits for application outside it.  Hosts that
+        fail are drained — including on TIMEOUT, deliberately: a timed-out
+        wait withdraws the host's op, leaving an epoch gap, and a host
+        missing an epoch must leave rotation (consistency over
+        availability; the server's gap guard enforces the same thing).
+        Raises only when NO host applied the update.
+        """
+        if deltas is not None:
+            inserts, deletes = deltas
+        # ONE deadline for the whole fleet wait — hosts apply concurrently,
+        # so waiting them out sequentially must not multiply the bound by N
+        deadline = None if timeout is None else time.monotonic() + timeout
+        handles = {}
+        with self._bcast:
+            upd = self.coordinator.assign(points_xyz=points_xyz,
+                                          inserts=inserts, deletes=deletes)
+            for hid in self.router.live_hosts():
+                host = self.router._hosts[hid]
+                try:
+                    handles[hid] = (host, host.submit_update(upd))
+                except Exception:
+                    self.router.drain(hid)
+        applied = 0
+        first_err: BaseException | None = None
+        for hid, (host, handle) in handles.items():
+            try:
+                host.wait_update(
+                    handle, timeout=None if deadline is None
+                    else max(deadline - time.monotonic(), 0.0))
+                applied += 1
+            except BaseException as e:
+                first_err = first_err or e
+                self.router.drain(hid)
+        if not applied:
+            raise first_err if first_err is not None else \
+                RuntimeError(f"epoch {upd.epoch}: no live host to update")
+        return upd.epoch
+
+    # -- fleet lifecycle -----------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """Newest assigned epoch (hosts may still be applying it)."""
+        return self.coordinator.epoch
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Wait for every routed request to reach a terminal state.
+
+        Host flushes run first (fast path: lets each worker drain its FIFO);
+        a host that fails its flush is drained and its requests follow the
+        router's resubmission path.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for hid in self.router.live_hosts():
+            rem = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            try:
+                self.router._hosts[hid].flush(timeout=rem)
+            except TimeoutError:
+                # backlogged, not dead: flush is read-only, so slowness must
+                # NOT drain the host (the router flush below reports the
+                # timeout to the caller; the fleet stays intact for a retry)
+                pass
+            except Exception:
+                self.router.drain(hid)
+        self.router.flush(timeout=None if deadline is None
+                          else max(deadline - time.monotonic(), 0.0))
+
+    def report(self) -> dict:
+        """Merged fleet report + per-host reports + routing counters."""
+        host_reps = []
+        for hid in self.router.live_hosts():
+            try:
+                host_reps.append(self.router._hosts[hid].report())
+            except Exception:
+                self.router.drain(hid)
+        rep = {"fleet": merge_reports(host_reps) if host_reps else {},
+               "hosts": host_reps,
+               "routing": self.router.report(),
+               "epoch": self.coordinator.epoch}
+        return rep
+
+    def reset_telemetry(self) -> None:
+        for hid in self.router.live_hosts():
+            self.router._hosts[hid].reset_telemetry()
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Close every host.  A crash surfacing from a host that was already
+        DRAINED is expected (that crash is why it was drained) and is
+        swallowed; an error from a live host propagates."""
+        live = set(self.router.live_hosts())
+        errs = []
+        for h in self.hosts:
+            try:
+                h.close(timeout=timeout)
+            except Exception as e:          # noqa: PERF203 — best-effort
+                if h.host_id in live:
+                    errs.append(e)
+        if errs:
+            raise errs[0]
+
+    def __enter__(self) -> "AidwCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,137 @@
+"""Per-host serving element: one AsyncAidwServer behind the epoch protocol.
+
+A :class:`HostServer` is what the cluster routes to — it owns the host's
+shard-local admission queue (the wrapped
+:class:`repro.serving.server.AsyncAidwServer`'s own bounded queue, so
+backpressure and deadline shedding stay host-local) and guards the write
+path with an :class:`repro.serving.cluster.epochs.EpochApplier`, so dataset
+updates enter the local FIFO strictly in fleet epoch order no matter how
+the transport delivered them.
+
+The same surface is implemented by :class:`repro.serving.cluster.rpc
+.RemoteHost` for hosts living in other processes, which is what lets the
+router and fleet front end treat local and remote hosts identically:
+
+    submit(queries, deadline_s) -> request      wait(request, timeout)
+    submit_update(EpochUpdate)  -> UpdateHandle wait_update(handle, timeout)
+    queue_depth() / epoch / flush / report / reset_telemetry / close
+"""
+
+from __future__ import annotations
+
+import time
+
+from ..server import AsyncAidwServer
+from .epochs import EpochApplier, EpochUpdate, UpdateHandle
+
+__all__ = ["HostServer"]
+
+
+class HostServer:
+    """One fleet host: ``AsyncAidwServer`` + ordered epoch application.
+
+    ``host_id`` is the fleet identity (``ClusterContext.host_id`` for
+    process-backed hosts, a dense index for in-process fleets);
+    ``server_kwargs`` pass through to :class:`AsyncAidwServer` (``mesh=``
+    serves this host's local device mesh).
+    """
+
+    def __init__(self, host_id, points_xyz, cfg=None, *,
+                 update_admission_timeout_s: float = 30.0, **server_kwargs):
+        self.host_id = host_id
+        # bounds the BROADCAST-side enqueue of an epoch update: the fleet
+        # coordinator holds its broadcast lock across submit_update, so a
+        # full admission queue must raise at a bound (the fleet then drains
+        # this host — consistency over availability), never block forever
+        self.update_admission_timeout_s = update_admission_timeout_s
+        self.server = AsyncAidwServer(points_xyz, cfg, **server_kwargs)
+        self.applier = EpochApplier(self._enqueue_update,
+                                    applied_epoch=self.server.epoch)
+
+    # -- query path ----------------------------------------------------------
+
+    def submit(self, queries_xy, *, deadline_s: float | None = None,
+               uid: int | None = None, timeout: float | None = None):
+        """``timeout`` bounds admission under backpressure — a full queue
+        raises :class:`~repro.serving.queue.AdmissionQueueFull` at the
+        bound instead of blocking forever (the router holds its fleet lock
+        across this call, so unbounded blocking here would stall routing
+        fleet-wide)."""
+        return self.server.submit(queries_xy, deadline_s=deadline_s, uid=uid,
+                                  timeout=timeout)
+
+    def wait(self, req, timeout: float | None = None):
+        return self.server.result(req, timeout=timeout)
+
+    # -- write path (epoch-ordered) ------------------------------------------
+
+    def _enqueue_update(self, upd: EpochUpdate):
+        return self.server.submit_update(
+            upd.points_xyz, inserts=upd.inserts, deletes=upd.deletes,
+            epoch=upd.epoch, timeout=self.update_admission_timeout_s)
+
+    def submit_update(self, upd: EpochUpdate) -> UpdateHandle:
+        """Offer one epoch-tagged update; in-order epochs enqueue into the
+        local FIFO before this returns (the broadcast-order guarantee the
+        coordinator relies on), early ones buffer until the gap fills."""
+        return self.applier.offer(upd)
+
+    def wait_update(self, handle: UpdateHandle,
+                    timeout: float | None = None) -> None:
+        """Block until the offered update is applied on this host.
+
+        ``timeout`` bounds the WHOLE wait — bound (enqueued once the epoch
+        gap fills) plus applied — on one deadline, not once per stage."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        if not handle.wait_bound(timeout):
+            raise TimeoutError(
+                f"epoch {handle.epoch} never enqueued on host "
+                f"{self.host_id} (gap in the epoch stream?)")
+        if handle.error is not None:
+            raise handle.error
+        if handle.duplicate:
+            return
+        self.server.wait_update(
+            handle.op, timeout=None if deadline is None
+            else max(deadline - time.monotonic(), 0.0))
+
+    # -- routing / fleet surface ---------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.server.epoch
+
+    def queue_depth(self) -> int:
+        """Shard-local admission-queue depth (the least-loaded routing
+        signal; cheap — one lock acquisition, no device sync)."""
+        return len(self.server.queue)
+
+    def probe(self) -> int:
+        """Active liveness probe: raises if this host cannot serve (dead
+        worker), else returns the queue depth.  The router calls this for
+        hosts whose heartbeat went stale — an IDLE host passes the probe
+        and stays in rotation; only a host that fails it is drained."""
+        if not self.server.alive:
+            raise RuntimeError(f"host {self.host_id} worker is dead")
+        return self.queue_depth()
+
+    def flush(self, timeout: float | None = None) -> None:
+        self.server.flush(timeout=timeout)
+
+    def report(self) -> dict:
+        rep = self.server.report()
+        rep["host_id"] = self.host_id
+        return rep
+
+    def reset_telemetry(self) -> None:
+        """Zero this host's telemetry + admission counters (load harnesses
+        call it fleet-wide after warmup)."""
+        self.server.telemetry.reset()
+        for k in self.server.queue.counters:
+            self.server.queue.counters[k] = 0
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        self.server.close(timeout=timeout)
+
+    def __repr__(self) -> str:
+        return f"HostServer(host_id={self.host_id}, epoch={self.epoch})"

@@ -1,0 +1,380 @@
+"""Query routing across the serving fleet, with heartbeat-driven draining.
+
+The router is the fleet's single query entry point: it picks a live host
+per request (``round_robin`` or queue-depth-aware ``least_loaded``),
+submits there, and hands back a :class:`RoutedRequest` the client waits on.
+Host health reuses :class:`repro.runtime.fault_tolerance.HeartbeatMonitor`
+— the same policy object the training fleet uses for node death — plus an
+in-band signal: any transport/worker error surfacing from a host while
+submitting or waiting drains that host immediately (faster than waiting
+out the heartbeat timeout).
+
+Draining contract (exactly-once, client-visible): when a host is drained,
+every routed request whose CURRENT attempt sits on that host and is not
+terminal is resubmitted to a surviving host.  A request resolves exactly
+once — ``RoutedRequest`` latches the first terminal attempt and later
+attempts' results are never surfaced (execution is at-least-once across
+the fleet, which is safe because queries are read-only and every host
+serves the same epoch-ordered dataset).  Deadlines carry across
+resubmission as absolute times on the router's clock: a request whose
+deadline expired while its host died is shed, never served late.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.serving.queue import AdmissionQueueFull, validate_queries
+
+__all__ = ["Router", "RoutedRequest", "NoLiveHosts"]
+
+
+class NoLiveHosts(RuntimeError):
+    """Every fleet host is drained — nothing can serve."""
+
+
+class RoutedRequest:
+    """Client-facing handle for one cluster query.
+
+    ``status``/``values``/``overflow``/``epoch`` populate when the request
+    reaches a terminal state (``done``, ``shed``, or — only when the whole
+    fleet drained under it — ``failed``); ``host_id`` names the host whose
+    attempt actually resolved.  All mutation happens under the router's
+    lock.
+    """
+
+    def __init__(self, uid: int, queries_xy, deadline: float | None):
+        self.uid = uid
+        self.queries_xy = queries_xy
+        self.deadline = deadline          # absolute on the router clock
+        self.status = "routed"
+        self.done = False
+        self.values = None
+        self.overflow = 0
+        self.epoch: int | None = None
+        self.host_id = None
+        self.attempts: list = []          # [(host_id, inner_request), ...]
+
+    def _current(self):
+        return self.attempts[-1]
+
+    def _resolve(self, host_id, inner) -> None:
+        if self.done:                     # first terminal attempt wins
+            return
+        self.status = inner.status
+        self.values = inner.values
+        self.overflow = inner.overflow
+        self.epoch = getattr(inner, "epoch", None)
+        self.host_id = host_id
+        self.done = True
+
+
+class Router:
+    """Pick-a-host policy + routed-request registry + drain logic.
+
+    ``hosts`` implement the :class:`repro.serving.cluster.host.HostServer`
+    surface (local or RPC-remote).  ``policy``: ``"round_robin"`` cycles
+    live hosts; ``"least_loaded"`` routes to the smallest shard-local
+    admission-queue depth (ties broken round-robin).  ``monitor`` defaults
+    to a fresh :class:`HeartbeatMonitor` over the host ids; call
+    :meth:`beat` when a host shows signs of life and :meth:`check` to
+    drain anything past the heartbeat timeout.
+    """
+
+    POLICIES = ("round_robin", "least_loaded")
+
+    def __init__(self, hosts, *, policy: str = "round_robin", monitor=None,
+                 heartbeat_timeout_s: float = 60.0,
+                 admission_timeout_s: float = 30.0, clock=time.monotonic):
+        if policy not in self.POLICIES:
+            raise ValueError(f"policy must be one of {self.POLICIES}, "
+                             f"got {policy!r}")
+        if not hosts:
+            raise ValueError("router needs at least one host")
+        self.policy = policy
+        self.clock = clock
+        # bounds host.submit under backpressure: the router lock is held
+        # across submission, so an unbounded block would stall the fleet
+        self.admission_timeout_s = admission_timeout_s
+        self._hosts = {h.host_id: h for h in hosts}
+        self._live = [h.host_id for h in hosts]
+        self.monitor = monitor or HeartbeatMonitor(
+            list(self._hosts), timeout_s=heartbeat_timeout_s, clock=clock)
+        self._rr = 0
+        self._uid = itertools.count()
+        self._lock = threading.RLock()
+        self._routed: dict[int, RoutedRequest] = {}
+        # shed_expired: requests whose deadline had already passed when the
+        # router went to (re)submit them — overload backpressure at route
+        # time, or budget burned while their original host was draining
+        self.counters = {"routed": 0, "resubmitted": 0, "drained_hosts": 0,
+                         "shed_expired": 0, "failed": 0}
+
+    # -- host selection ------------------------------------------------------
+
+    def live_hosts(self) -> list:
+        with self._lock:
+            return list(self._live)
+
+    def _probe_depths(self) -> dict:
+        """Queue-depth snapshot for least_loaded selection, taken WITHOUT
+        the router lock (a remote depth probe is an RPC; blocking the
+        fleet-wide lock on it would stall every route/wait).  A host whose
+        probe raises is drained — dead hosts must not wedge selection."""
+        with self._lock:
+            live = list(self._live)
+        depths = {}
+        for h in live:
+            try:
+                depths[h] = self._hosts[h].queue_depth()
+            except Exception:
+                self.drain(h)
+        return depths
+
+    def _pick_locked(self, depths: dict | None = None):
+        if not self._live:
+            raise NoLiveHosts("all fleet hosts drained")
+        order = self._live[self._rr:] + self._live[:self._rr]
+        if self.policy == "least_loaded" and depths \
+                and any(h in depths for h in order):
+            # stale entries for since-drained hosts were filtered by using
+            # the CURRENT live order; unknown depths sort last (rr fallback)
+            hid = min(order, key=lambda h: depths.get(h, float("inf")))
+        else:
+            hid = order[0]
+        self._rr = (self._rr + 1) % max(len(self._live), 1)
+        return hid
+
+    # -- query path ----------------------------------------------------------
+
+    def route(self, queries_xy, *, deadline_s: float | None = None
+              ) -> RoutedRequest:
+        """Submit one query batch to a live host; returns the routed handle.
+
+        A host that fails at submit time (dead worker, broken transport) is
+        drained in-band and the request retries on the survivors.
+        """
+        # validate HERE, not by bouncing off a host: a malformed array would
+        # raise host-side, be mistaken for host death, and drain the fleet
+        q = validate_queries(queries_xy)
+        now = self.clock()
+        rr = RoutedRequest(
+            next(self._uid), q,
+            None if deadline_s is None else now + deadline_s)
+        with self._lock:
+            self._routed[rr.uid] = rr
+            self.counters["routed"] += 1
+        try:
+            self._submit(rr)
+        except BaseException:
+            # never-submitted request must not stay registered: a later
+            # flush()/wait() would trip over its empty attempts list
+            with self._lock:
+                del self._routed[rr.uid]
+                self.counters["routed"] -= 1
+            raise
+        return rr
+
+    def _submit(self, rr: RoutedRequest) -> None:
+        """Place ``rr`` on a live host.
+
+        Lock policy: the router lock is held only around host SELECTION and
+        attempt RECORDING, never across the host submit itself — one hung
+        host must cost its own admission timeout, not stall every other
+        route()/wait() contending for the lock.  (Drain-time resubmission
+        enters with the reentrant lock already held; that rare path accepts
+        the serialization.)
+        """
+        full: set = set()                  # backpressured (NOT dead) hosts
+        while True:
+            depths = self._probe_depths() \
+                if self.policy == "least_loaded" else None
+            with self._lock:
+                try:
+                    hid = self._pick_locked(depths)
+                except NoLiveHosts:
+                    if rr.attempts:
+                        # resubmission path (drain cascade emptied the
+                        # fleet): terminate instead of crashing the drainer
+                        rr.status = "failed"
+                        rr.done = True
+                        self.counters["failed"] += 1
+                        return
+                    raise                  # fresh route(): surface to caller
+                if hid in full:
+                    if full >= set(self._live):
+                        # the WHOLE fleet is backpressured: overload, not
+                        # failure — surface it like the server would for a
+                        # fresh route; a resubmission has no caller to push
+                        # back on, so it terminates loudly instead
+                        if rr.attempts:
+                            rr.status = "failed"
+                            rr.done = True
+                            self.counters["failed"] += 1
+                            return
+                        raise AdmissionQueueFull(
+                            "every live host's admission queue is full")
+                    continue               # round-robin past the full host
+                remaining = None
+                if rr.deadline is not None:
+                    remaining = rr.deadline - self.clock()
+                    if remaining <= 0:     # expired while hostless: shed
+                        rr.status = "shed"
+                        rr.done = True
+                        self.counters["shed_expired"] += 1
+                        return
+                host = self._hosts[hid]
+            try:
+                inner = host.submit(rr.queries_xy, deadline_s=remaining,
+                                    timeout=self.admission_timeout_s)
+            except AdmissionQueueFull:
+                full.add(hid)              # backpressure != death: no drain
+                self.monitor.beat(hid)
+                continue
+            except Exception:
+                self.drain(hid)
+                continue
+            self.monitor.beat(hid)         # responded: in-band liveness
+            with self._lock:
+                if hid not in self._live and not inner.done:
+                    # the host was drained while we were submitting to it
+                    # (its drain scan ran before this attempt existed, so
+                    # nothing will ever resubmit us): place it again.  The
+                    # duplicate execution is safe — queries are read-only
+                    # and only the first terminal attempt resolves.
+                    continue
+                rr.attempts.append((hid, inner))
+                if inner.done:             # shed on arrival at the host
+                    rr._resolve(hid, inner)
+            return
+
+    def wait(self, rr: RoutedRequest,
+             timeout: float | None = None) -> RoutedRequest:
+        """Block until ``rr`` is terminal, following it across drains.
+
+        Waits on the current attempt in short slices; a host error drains
+        that host (resubmitting ``rr`` among its victims) and the loop
+        follows the fresh attempt.  Raises TimeoutError past ``timeout``.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                if rr.done:
+                    return rr
+                if not rr.attempts:        # route() unregisters these, but
+                    raise RuntimeError(    # guard against foreign handles
+                        f"request {rr.uid} was never submitted to a host")
+                hid, inner = rr._current()
+                host = self._hosts[hid]
+            slice_s = 0.2
+            if deadline is not None:
+                slice_s = min(slice_s, max(deadline - time.monotonic(), 0.0))
+            try:
+                host.wait(inner, timeout=slice_s)
+                self.monitor.beat(hid)
+                with self._lock:
+                    if inner.done:
+                        rr._resolve(hid, inner)
+            except TimeoutError:
+                # a timed-out wait is still a RESPONSE (the host answered
+                # "not done yet") — only transport/worker errors mean death
+                self.monitor.beat(hid)
+            except Exception:
+                # dead worker / broken transport: drain in-band (this
+                # resubmits rr, so the next loop waits on the new attempt)
+                self.drain(hid)
+            self.check()
+            with self._lock:
+                if rr.done:
+                    return rr
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"routed request {rr.uid} not terminal after {timeout}s")
+
+    # -- health / draining ---------------------------------------------------
+
+    def beat(self, host_id) -> None:
+        self.monitor.beat(host_id)
+
+    def check(self) -> list:
+        """Probe every host whose heartbeat went stale; drain the ones that
+        FAIL the probe and return their ids.
+
+        A stale heartbeat alone is not death — an idle fleet sees no
+        in-band traffic, and draining untouched-but-healthy hosts would
+        silently collapse it (there is no re-admission path yet).  The
+        probe (``host.probe()``, falling back to ``queue_depth()``) asks
+        the host directly; answering refreshes its heartbeat.
+        """
+        with self._lock:
+            stale = [h for h in self.monitor.dead_hosts() if h in self._live]
+        drained = []
+        for h in stale:
+            host = self._hosts[h]
+            probe = getattr(host, "probe", host.queue_depth)
+            try:
+                probe()
+                self.monitor.beat(h)       # idle but answering: alive
+            except Exception:
+                with self._lock:
+                    if h in self._live:
+                        self._drain_locked(h)
+                        drained.append(h)
+        return drained
+
+    def drain(self, host_id) -> int:
+        """Remove ``host_id`` from rotation and resubmit its non-terminal
+        routed requests to survivors; returns how many were resubmitted."""
+        with self._lock:
+            return self._drain_locked(host_id)
+
+    def _drain_locked(self, host_id) -> int:
+        if host_id not in self._live:
+            return 0
+        self._live.remove(host_id)
+        self.monitor.remove(host_id)       # drained: stop tracking liveness
+        self.counters["drained_hosts"] += 1
+        victims = [rr for rr in self._routed.values()
+                   if not rr.done and rr.attempts
+                   and rr._current()[0] == host_id]
+        n = 0
+        for rr in victims:
+            # latch a terminal inner first: a request that completed just
+            # before the drain keeps its result (no duplicated resolution)
+            hid, inner = rr._current()
+            if getattr(inner, "done", False):
+                rr._resolve(hid, inner)
+                continue
+            self._submit(rr)               # may shed if deadline expired
+            n += 1
+        self.counters["resubmitted"] += n
+        return n
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Wait until every routed request is terminal, reaping as it goes."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            pending = [rr for rr in self._routed.values() if not rr.done]
+        for rr in pending:
+            rem = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            self.wait(rr, timeout=rem)
+        with self._lock:
+            self._routed = {u: r for u, r in self._routed.items()
+                            if not r.done}
+
+    def report(self) -> dict:
+        with self._lock:
+            return {
+                **self.counters,
+                "policy": self.policy,
+                "live_hosts": list(self._live),
+                "in_flight": sum(not r.done for r in self._routed.values()),
+            }

@@ -1,0 +1,67 @@
+"""Fleet telemetry: merge per-host serving reports into one cluster view.
+
+Each host's :meth:`repro.serving.server.AsyncAidwServer.report` carries a
+``merge`` block — the full :meth:`repro.serving.telemetry.Telemetry.state`
+with per-axis histogram BIN COUNTS, not just percentile snapshots.  Fleet
+percentiles are computed by summing those bins and re-reading the quantiles
+(:meth:`repro.serving.telemetry.LatencyHistogram.from_states`): averaging
+per-host p99s has no statistical meaning, merging the histograms is exact
+(up to the shared log-bin resolution).
+
+Throughput: per-host monotonic clocks are not comparable across processes,
+so fleet QPS is the SUM of per-host rates (each over its own observed
+window) — rates add, timestamps don't travel.
+
+Counter conventions: everything integer in the per-host report
+(``submitted``/``completed``/``shed``/``rejected_full``/``overflow_queries``
+/admission counters/...) sums across hosts; ``epoch`` reports the
+fleet-wide min/max so a stalled host (epoch lagging the fleet) is visible
+at a glance.
+"""
+
+from __future__ import annotations
+
+from ..telemetry import LatencyHistogram
+
+__all__ = ["merge_reports"]
+
+_AXES = ("queue", "execute", "total", "shed")
+
+
+def merge_reports(host_reports: list[dict]) -> dict:
+    """Merge per-host ``AsyncAidwServer.report()`` dicts (each carrying the
+    ``merge`` state block) into one fleet report: summed counters, exact
+    merged-histogram p50/p95/p99 per latency axis, summed QPS, and the
+    fleet epoch range.  JSON-serializable (the ``load_gen.py --cluster
+    --json`` artifact body)."""
+    if not host_reports:
+        raise ValueError("merge_reports needs at least one host report")
+    counters: dict = {}
+    admission: dict = {}
+    qps = 0.0
+    epochs = []
+    host_ids = []
+    for rep in host_reports:
+        st = rep["merge"]
+        for k, v in st["counters"].items():
+            counters[k] = counters.get(k, 0) + int(v)
+        for k, v in rep.get("admission", {}).items():
+            admission[k] = admission.get(k, 0) + int(v)
+        qps += float(st["queries_per_s"])
+        epochs.append(int(rep.get("epoch", 0)))
+        host_ids.append(rep.get("host_id"))
+    latency = {}
+    for axis in _AXES:
+        merged = LatencyHistogram.from_states(
+            rep["merge"]["hists"][axis] for rep in host_reports)
+        latency[axis] = merged.snapshot()
+    return {
+        **counters,
+        "hosts": len(host_reports),
+        "host_ids": host_ids,
+        "queries_per_s": qps,
+        "latency": latency,
+        "admission": admission,
+        "epoch_min": min(epochs),
+        "epoch_max": max(epochs),
+    }

@@ -195,7 +195,9 @@ class InterpolationRequest:
     ``status == "shed"`` (deadline expired before dispatch; never served).
     ``overflow`` counts THIS request's queries whose kNN candidate window
     overflowed — propagated per-request from the batch's per-query mask, not
-    summed engine-wide.
+    summed engine-wide.  ``epoch`` is the dataset epoch the request was
+    SERVED under (stamped at dispatch by the async server / cluster hosts;
+    ``None`` on the epoch-less synchronous engine).
     """
 
     uid: int
@@ -205,6 +207,7 @@ class InterpolationRequest:
     deadline: float | None = None   # absolute clock seconds; None = no SLO
     status: str = "pending"         # pending | queued | done | shed
     overflow: int = 0               # this request's overflowed queries
+    epoch: int | None = None        # dataset epoch served under (async only)
     t_submit: float | None = None   # admission timestamp (serving clock)
     t_dispatch: float | None = None
     t_done: float | None = None
@@ -245,7 +248,10 @@ class AidwEngine:
             min_bucket=min_bucket, mesh=mesh, layout=layout)
         self.max_batch = int(max_batch)
         self.clock = clock
-        self.estimator = S.ExecuteTimeModel(min_bucket=min_bucket)
+        # keyed on (query bucket, dataset bucket): estimates stay calibrated
+        # across resizing delta updates (update_dataset refreshes n_points)
+        self.estimator = S.ExecuteTimeModel(
+            min_bucket=min_bucket, n_points=self.session.plan.n_points)
         self.coalescer = S.DeadlineCoalescer(
             self.max_batch, self.estimator, clock=clock, slack_s=slack_s)
         self.telemetry = Telemetry(clock=clock)
@@ -259,6 +265,7 @@ class AidwEngine:
         CSR table; zero Stage-1 rebuilds)."""
         self.session.update(points_xyz, inserts=inserts, deletes=deletes,
                             deltas=deltas)
+        self.estimator.n_points = self.session.plan.n_points
         self.telemetry.record_update()
 
     def run(self, requests: list[InterpolationRequest]) -> dict:

@@ -30,7 +30,25 @@ import threading
 import time
 from collections import deque
 
-__all__ = ["AdmissionQueue", "AdmissionQueueClosed", "AdmissionQueueFull"]
+__all__ = ["AdmissionQueue", "AdmissionQueueClosed", "AdmissionQueueFull",
+           "validate_queries"]
+
+
+def validate_queries(queries_xy):
+    """Boundary check shared by every admission surface (server ``submit``,
+    cluster router): returns the ndarray or raises ValueError.  One copy,
+    so the server and the router can never drift on what a well-formed
+    query batch is (a router/server disagreement would misread bad input
+    as host death)."""
+    import numpy as np
+
+    q = np.asarray(queries_xy)
+    if q.ndim != 2 or q.shape[1] != 2 or q.shape[0] == 0 \
+            or not np.issubdtype(q.dtype, np.floating):
+        raise ValueError(
+            f"queries_xy must be a non-empty float (n, 2) array, got "
+            f"shape {q.shape} dtype {q.dtype}")
+    return q
 
 
 class AdmissionQueueFull(RuntimeError):

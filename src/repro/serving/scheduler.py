@@ -52,37 +52,61 @@ STATUS_SHED = "shed"         # deadline expired before dispatch; never served
 
 
 class ExecuteTimeModel:
-    """EWMA execute-time estimate keyed on the session's compiled buckets.
+    """EWMA execute-time estimate keyed on (query bucket, dataset bucket).
 
     ``record(n, seconds)`` folds a measured batch execute time into the EWMA
-    for ``bucket_size(n, min_bucket)``; ``estimate(n)`` reads it back,
-    linearly extrapolating from the nearest measured bucket for sizes never
-    seen (and 0.0 before ANY measurement — optimistic, so the scheduler
-    never closes batches early on a cold model).
+    for ``(bucket_size(n, min_bucket), dataset bucket)``, where the dataset
+    bucket is the power-of-two bucket of the CURRENT ``n_points`` (the engine
+    refreshes :attr:`n_points` on every ``update_dataset``).  Execute time
+    depends on the dataset size through the kNN candidate windows, so after a
+    large delta update the per-query-bucket EWMA primed at the OLD size would
+    mis-calibrate the deadline early-close until the EWMA relearned; keying
+    on both keeps per-size estimates live across churn.
+
+    ``estimate(n)`` reads the estimate back: exact key first, then the
+    nearest query bucket measured AT the current dataset size (scaled
+    linearly in n — bucket executables are ~linear in batch size), then the
+    nearest dataset bucket (dataset-size dependence is measured, not
+    modeled).  0.0 before ANY measurement — optimistic, so the scheduler
+    never closes batches early on a cold model.
     """
 
-    def __init__(self, min_bucket: int = 64, alpha: float = 0.3):
+    def __init__(self, min_bucket: int = 64, alpha: float = 0.3,
+                 n_points: int | None = None):
         self.min_bucket = int(min_bucket)
         self.alpha = float(alpha)
-        self._ewma: dict[int, float] = {}
+        self.n_points = n_points        # engine-maintained; None = unkeyed
+        self._ewma: dict[tuple[int, int], float] = {}
 
     def bucket(self, n: int) -> int:
         return bucket_size(n, self.min_bucket)
 
+    def _dataset_bucket(self) -> int:
+        return 0 if self.n_points is None \
+            else bucket_size(int(self.n_points), 1)
+
     def record(self, n: int, seconds: float) -> None:
-        b = self.bucket(n)
-        prev = self._ewma.get(b)
-        self._ewma[b] = float(seconds) if prev is None else \
+        key = (self.bucket(n), self._dataset_bucket())
+        prev = self._ewma.get(key)
+        self._ewma[key] = float(seconds) if prev is None else \
             self.alpha * float(seconds) + (1.0 - self.alpha) * prev
 
     def estimate(self, n: int) -> float:
         if not self._ewma:
             return 0.0
-        b = self.bucket(n)
-        if b in self._ewma:
-            return self._ewma[b]
-        known = min(self._ewma, key=lambda k: abs(k - b))
-        return self._ewma[known] * (b / known)
+        nb, mb = self.bucket(n), self._dataset_bucket()
+        hit = self._ewma.get((nb, mb))
+        if hit is not None:
+            return hit
+        same_m = [k for k in self._ewma if k[1] == mb]
+        if same_m:
+            k = min(same_m, key=lambda k: abs(k[0] - nb))
+        else:
+            # nothing measured at this dataset size yet (right after a
+            # resizing update): nearest dataset bucket, still scaled in n
+            k = min(self._ewma, key=lambda k: (abs(k[1] - mb),
+                                               abs(k[0] - nb)))
+        return self._ewma[k] * (nb / k[0])
 
 
 def shed_request(req, now: float) -> None:

@@ -35,7 +35,7 @@ import numpy as np
 
 from . import scheduler as S
 from .engine import AidwEngine, InterpolationRequest
-from .queue import AdmissionQueue, AdmissionQueueFull
+from .queue import AdmissionQueue, AdmissionQueueFull, validate_queries
 
 __all__ = ["AsyncAidwServer"]
 
@@ -46,13 +46,20 @@ class _UpdateOp:
 
     Carries no ``queries_xy``, which is exactly how the coalescer recognizes
     it as a batch boundary (scheduler.next_batch stops the scan).
+
+    ``epoch`` is the cluster-assigned epoch number for this update (see
+    ``repro.serving.cluster.epochs``); ``None`` auto-increments the server's
+    local epoch counter, so a standalone server replaying the same updates
+    in the same order stamps the same epoch sequence as a cluster host.
     """
 
     points_xyz: object = None
     inserts: object = None
     deletes: object = None
+    epoch: int | None = None         # explicit cluster epoch; None = +1
     error: BaseException | None = None
     cancelled: bool = False          # timed-out caller withdrew the op
+    skipped: bool = False            # worker honoured the withdrawal
     applied: threading.Event = field(default_factory=threading.Event)
 
 
@@ -88,6 +95,14 @@ class AsyncAidwServer:
         self.telemetry = self.engine.telemetry
         self.queue = AdmissionQueue(max_depth, clock=clock)
         self.linger_s = float(linger_s)
+        # dataset epoch: 0 for the construction-time dataset, bumped by every
+        # applied update (or pinned to the update's explicit cluster epoch);
+        # requests are stamped with the epoch they were SERVED under.
+        # _epoch_gap records a withdrawn explicit-epoch barrier — the host
+        # is missing that delta, and refuses further deltas until a full
+        # update re-syncs it
+        self.epoch = 0
+        self._epoch_gap: int | None = None
         self._uid = itertools.count()
         self._reqs: dict[int, InterpolationRequest] = {}
         self._cv = threading.Condition()
@@ -114,12 +129,7 @@ class AsyncAidwServer:
         self._raise_worker_error()
         # validate at the boundary: a malformed array admitted here would
         # crash the WORKER and take down serving for every other client
-        q = np.asarray(queries_xy)
-        if q.ndim != 2 or q.shape[1] != 2 or q.shape[0] == 0 \
-                or not np.issubdtype(q.dtype, np.floating):
-            raise ValueError(
-                f"queries_xy must be a non-empty float (n, 2) array, got "
-                f"shape {q.shape} dtype {q.dtype}")
+        q = validate_queries(queries_xy)
         now = self.clock()
         if uid is None:
             uid = next(self._uid)
@@ -205,28 +215,34 @@ class AsyncAidwServer:
                 del self._reqs[u]
             return len(done)
 
-    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
-                       deltas=None, timeout: float | None = None) -> None:
-        """Refresh the served dataset THROUGH the admission queue.
+    def submit_update(self, points_xyz=None, *, inserts=None, deletes=None,
+                      deltas=None, epoch: int | None = None,
+                      timeout: float | None = None) -> _UpdateOp:
+        """Enqueue a dataset update WITHOUT waiting for it to apply.
 
-        The op is a FIFO barrier: every request admitted before it is served
-        against the old dataset, every request after against the new one.
-        Blocks until the worker applied the update (it never races a query
-        batch — both run on the worker thread).  ``timeout`` bounds the
-        whole call: admission past it raises
-        :class:`~repro.serving.queue.AdmissionQueueFull`, application past
-        it raises TimeoutError.
+        The op is a FIFO barrier in the admission queue: every request
+        admitted before it is served against the old dataset, every request
+        after against the new one.  This non-blocking half is the cluster
+        hook — a coordinator broadcasts one epoch-tagged op per host and
+        only then waits, so hosts apply the update concurrently while their
+        per-host FIFO order against queries is already pinned.  ``timeout``
+        bounds admission only (a full queue exerting backpressure raises
+        :class:`~repro.serving.queue.AdmissionQueueFull` at the bound).
+        Returns the op handle for :meth:`wait_update`.
         """
         self._raise_worker_error()
         if deltas is not None:
             inserts, deletes = deltas
         op = _UpdateOp(points_xyz=points_xyz, inserts=inserts,
-                       deletes=deletes)
-        # the timeout bounds the WHOLE call: admission (the queue may be
-        # full and exerting backpressure, raising AdmissionQueueFull at the
-        # bound) plus the applied-wait below, which reuses the same deadline
-        deadline = None if timeout is None else time.monotonic() + timeout
+                       deletes=deletes, epoch=epoch)
         self.queue.put(op, timeout=timeout)
+        return op
+
+    def wait_update(self, op: _UpdateOp,
+                    timeout: float | None = None) -> None:
+        """Block until a :meth:`submit_update` op is applied; raises the
+        op's error (poisoned update) or TimeoutError (op withdrawn)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         # poll in short slices so a worker that dies AFTER admission (its
         # crash handler resolves queued ops, but belt-and-braces) can never
         # strand this wait
@@ -242,14 +258,56 @@ class AsyncAidwServer:
                     f"(op withdrawn; safe to retry)")
         if op.error is not None:
             raise op.error
+        if op.skipped:
+            # applied-event set by the SKIP path of a withdrawn op: a retry
+            # of this wait must not read as success — nothing was applied.
+            # (cancelled-but-applied-anyway — the worker was already mid-
+            # apply when the caller withdrew — correctly reads as success)
+            raise TimeoutError(
+                "dataset update was withdrawn after an earlier timeout; "
+                "it never applied")
+
+    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
+                       deltas=None, epoch: int | None = None,
+                       timeout: float | None = None) -> None:
+        """Refresh the served dataset THROUGH the admission queue.
+
+        Blocks until the worker applied the update (it never races a query
+        batch — both run on the worker thread).  ``timeout`` bounds the
+        whole call: admission past it raises
+        :class:`~repro.serving.queue.AdmissionQueueFull`, application past
+        it raises TimeoutError.
+        """
+        # the timeout bounds the WHOLE call: admission plus the applied-wait,
+        # which reuses the same deadline
+        deadline = None if timeout is None else time.monotonic() + timeout
+        op = self.submit_update(points_xyz, inserts=inserts, deletes=deletes,
+                                deltas=deltas, epoch=epoch, timeout=timeout)
+        self.wait_update(
+            op, timeout=None if deadline is None
+            else max(deadline - time.monotonic(), 0.0))
+
+    @property
+    def alive(self) -> bool:
+        """Worker-thread health (cluster liveness probes read this: a host
+        whose admission queue still answers but whose worker died must
+        probe as DEAD, not idle)."""
+        return self._worker.is_alive() and self._worker_error is None
 
     def report(self) -> dict:
-        """Telemetry snapshot + queue/session counters (JSON-serializable)."""
+        """Telemetry snapshot + queue/session counters (JSON-serializable).
+
+        ``merge`` carries the full histogram states so a cluster coordinator
+        can aggregate fleet percentiles exactly
+        (:func:`repro.serving.cluster.telemetry.merge_reports`).
+        """
         rep = self.telemetry.report()
+        rep["epoch"] = self.epoch
         rep["admission"] = dict(self.queue.counters)
         rep["queue_depth"] = len(self.queue)
         rep["session"] = {k: v for k, v in self.session.stats.items()
                           if isinstance(v, (int, float))}
+        rep["merge"] = self.telemetry.state()
         return rep
 
     def close(self, timeout: float | None = 30.0) -> None:
@@ -281,11 +339,36 @@ class AsyncAidwServer:
 
     def _apply_update(self, op: _UpdateOp) -> None:
         if op.cancelled:                    # withdrawn by a timed-out caller
+            op.skipped = True
+            if op.epoch is not None:
+                # an explicit-epoch (cluster) barrier that was withdrawn
+                # leaves a GAP in this host's update order: remember it, so
+                # later epochs fail loudly instead of silently serving a
+                # dataset that is missing epoch k's delta
+                self._epoch_gap = op.epoch
             op.applied.set()
             return
         try:
+            if op.epoch is not None and self._epoch_gap is not None \
+                    and op.points_xyz is None:
+                # a delta cannot apply over a hole; a FULL update below re-
+                # syncs the host and heals the gap
+                raise RuntimeError(
+                    f"host missed epoch {self._epoch_gap} (withdrawn after "
+                    f"timeout); refusing delta epoch {op.epoch} — re-sync "
+                    f"with a full dataset update first")
+            if op.epoch is not None and op.epoch <= self.epoch:
+                # an out-of-order cluster epoch reaching the worker means the
+                # host-side EpochApplier was bypassed — refuse loudly rather
+                # than silently diverging from the fleet's update order
+                raise RuntimeError(
+                    f"epoch {op.epoch} <= current {self.epoch}: updates "
+                    f"must apply in increasing epoch order")
             self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
                                        deletes=op.deletes)
+            self.epoch = op.epoch if op.epoch is not None else self.epoch + 1
+            if op.points_xyz is not None:
+                self._epoch_gap = None      # full refresh healed the hole
         except BaseException as e:          # surface to the waiting client
             op.error = e
         finally:
@@ -306,6 +389,11 @@ class AsyncAidwServer:
         for r in shed:
             self.telemetry.record_shed(r)
         if group:
+            # stamp the dataset epoch the batch executes under: updates only
+            # apply between batches on this same thread, so one stamp covers
+            # the whole group (the cluster's consistency-contract witness)
+            for r in group:
+                r.epoch = self.epoch
             S.dispatch_batch(self.session, group, estimator=self.estimator,
                              telemetry=self.telemetry, clock=self.clock)
         if group or shed:

@@ -43,6 +43,9 @@ class LatencyHistogram:
 
     def __init__(self, lo: float = 1e-6, hi: float = 1e3,
                  bins_per_decade: int = 10):
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.bins_per_decade = int(bins_per_decade)
         decades = math.log10(hi / lo)
         n = int(round(decades * bins_per_decade))
         self._edges = [lo * 10.0 ** (i / bins_per_decade)
@@ -82,6 +85,44 @@ class LatencyHistogram:
             "p99_s": self.percentile(99),
             "max_s": self.max,
         }
+
+    # -- cross-host merging (repro.serving.cluster.telemetry) ----------------
+
+    def state(self) -> dict:
+        """Full mergeable state (JSON-serializable): bin counts plus the bin
+        parameters, so fleet-level percentiles can be computed exactly from
+        per-host histograms instead of averaging per-host percentiles (which
+        has no statistical meaning)."""
+        return {"lo": self.lo, "hi": self.hi,
+                "bins_per_decade": self.bins_per_decade,
+                "counts": list(self._counts),
+                "count": self.count, "sum": self.sum, "max": self.max}
+
+    def merge_state(self, state: dict) -> None:
+        """Fold another histogram's :meth:`state` into this one.  Bin layouts
+        must match — merging histograms with different edges would silently
+        misattribute counts, so mismatch raises."""
+        if (state["lo"], state["hi"], state["bins_per_decade"]) != \
+                (self.lo, self.hi, self.bins_per_decade) or \
+                len(state["counts"]) != len(self._counts):
+            raise ValueError("cannot merge histograms with different bins")
+        for i, c in enumerate(state["counts"]):
+            self._counts[i] += int(c)
+        self.count += int(state["count"])
+        self.sum += float(state["sum"])
+        self.max = max(self.max, float(state["max"]))
+
+    @classmethod
+    def from_states(cls, states) -> "LatencyHistogram":
+        """Merge per-host states into one fleet histogram."""
+        states = list(states)
+        if not states:
+            return cls()
+        h = cls(states[0]["lo"], states[0]["hi"],
+                states[0]["bins_per_decade"])
+        for s in states:
+            h.merge_state(s)
+        return h
 
 
 class Telemetry:
@@ -187,5 +228,23 @@ class Telemetry:
                     "execute": self.execute.snapshot(),
                     "total": self.total.snapshot(),
                     "shed": self.shed.snapshot(),
+                },
+            }
+
+    def state(self) -> dict:
+        """Mergeable cross-host snapshot: counters, per-host rate, and FULL
+        histogram states (bin counts, not just percentiles).  Fleet
+        aggregation lives in :func:`repro.serving.cluster.telemetry
+        .merge_reports`; per-host throughput windows are kept per host
+        because monotonic clocks are not comparable across processes."""
+        with self._lock:
+            return {
+                "counters": dict(self.counters),
+                "queries_per_s": self.queries_per_s(),
+                "hists": {
+                    "queue": self.queue.state(),
+                    "execute": self.execute.state(),
+                    "total": self.total.state(),
+                    "shed": self.shed.state(),
                 },
             }

@@ -32,7 +32,11 @@ def _exact_flops(cfg, shape):
     else:
         c = jax.jit(api.decode_fn(cfg)).lower(
             pa, api.cache_specs(cfg, shape), api.input_specs(cfg, shape)).compile()
-    return c.cost_analysis()["flops"]
+    # jax 0.4.x returns a one-dict-per-module LIST; newer jax a flat dict
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca["flops"]
 
 
 DENSE = ModelConfig(name="d", family="dense", n_layers=3, d_model=256,
@@ -76,7 +80,7 @@ def test_dot_census_matches_analytic_exactly():
     oa = jax.eval_shape(lambda p: trainer.init_opt_state(adamw.AdamWConfig(), p), pa)
     c = jax.jit(step).lower(pa, oa, api.input_specs(cfg, shape)).compile()
     text = c.as_text()
-    # symbol table: instruction name -> dims (operands print without types)
+    # symbol table: instruction name -> dims (some printers omit operand types)
     shape_of = {}
     for line in text.splitlines():
         m = re.match(r"\s*(%[\w.\-]+) = \S*?\[([\d,]*)\]", line)
@@ -91,8 +95,17 @@ def test_dot_census_matches_analytic_exactly():
         out_elems = 1
         for d in (m.group(1).split(",") if m.group(1) else []):
             out_elems *= int(d)
-        ops = re.search(r" dot\((%[\w.\-]+), (%[\w.\-]+)\)", line)
-        lhs = shape_of.get(ops.group(1), []) if ops else []
+        # lhs dims: 0.4.x prints operands WITH their types inline
+        # (`dot(f32[2048,256]{1,0} %call.351, ...)`), newer jax without
+        # (`dot(%call.351, ...)`) — read the inline shape when present,
+        # fall back to the symbol table otherwise
+        mt = re.search(r" dot\(\s*[\w!]+\[([\d,]*)\]", line)
+        if mt:
+            lhs = [int(d) for d in mt.group(1).split(",")] \
+                if mt.group(1) else []
+        else:
+            ops = re.search(r" dot\((%[\w.\-]+), ", line)
+            lhs = shape_of.get(ops.group(1), []) if ops else []
         mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
         kdims = [int(i) for i in mc.group(1).split(",")] if mc and mc.group(1) else []
         ksize = 1

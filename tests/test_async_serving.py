@@ -198,6 +198,61 @@ def test_near_deadline_closes_batch_early():
     assert [len(g) for g in groups] == [2, 2]
 
 
+def test_estimator_keys_on_dataset_size():
+    """Satellite: the execute-time model keys on (query bucket, n_points
+    bucket), so deadline early-close stays calibrated right after a large
+    delta update instead of trusting EWMAs measured at the old size."""
+    est = ExecuteTimeModel(min_bucket=64, n_points=4096)
+    est.record(64, 0.010)                    # small dataset: 10ms
+    est.n_points = 65536                     # large delta update lands
+    assert est.estimate(64) == pytest.approx(0.010)   # fallback: nearest m
+    est.record(64, 0.080)                    # measured at the new size
+    assert est.estimate(64) == pytest.approx(0.080)
+    est.n_points = 4096                      # shrink back: old key still live
+    assert est.estimate(64) == pytest.approx(0.010)
+    # unseen query bucket: nearest n at the SAME dataset size, scaled in n
+    assert est.estimate(128) == pytest.approx(0.020)
+
+
+def test_deadline_close_recalibrates_after_resize():
+    """Satellite regression (primed estimator + fake clock): after a large
+    update the coalescer's early-close uses the estimate measured AT the
+    new dataset size, not the stale small-dataset EWMA."""
+    clock = FakeClock(100.0)
+    est = ExecuteTimeModel(min_bucket=64, n_points=4096)
+    est.record(64, 0.005)                    # 64-bucket cheap when small
+    est.record(128, 0.008)
+    est.n_points = 65536                     # resize
+    est.record(64, 0.020)
+    est.record(128, 0.200)                   # 128-bucket now blows the SLO
+    coal = DeadlineCoalescer(1024, est, clock=clock)
+
+    def reqs(deadline):
+        return [InterpolationRequest(
+            uid=i, queries_xy=np.zeros((48, 2), np.float32),
+            deadline=deadline) for i in range(4)]
+
+    # 50ms deadline at the LARGE size: growing 48 -> 96 queries crosses into
+    # the 128 bucket (200ms > 50ms) -> singles.  The stale small-dataset
+    # model (8ms) would have coalesced and missed the deadline.
+    groups, shed = coal.coalesce(reqs(clock() + 0.050), now=clock())
+    assert shed == [] and [len(g) for g in groups] == [1, 1, 1, 1]
+    est.n_points = 4096                      # back at the small size: the
+    groups, _ = coal.coalesce(reqs(clock() + 0.050), now=clock())
+    assert [len(g) for g in groups] == [4]   # old calibration still applies
+
+
+def test_engine_update_refreshes_estimator_n_points(spatial_data):
+    """The engine keeps the estimator's dataset key in sync with the
+    session across full and delta updates."""
+    pts, qs = spatial_data
+    eng = AidwEngine(pts, max_batch=256, query_domain=qs)
+    assert eng.estimator.n_points == eng.session.plan.n_points
+    eng.update_dataset(inserts=spatial_points(32, seed=5))
+    assert eng.estimator.n_points == eng.session.plan.n_points \
+        == pts.shape[0] + 32
+
+
 def test_expired_requests_shed_at_dispatch():
     clock = FakeClock(10.0)
     coal = DeadlineCoalescer(1024, ExecuteTimeModel(), clock=clock)
