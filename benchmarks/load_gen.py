@@ -120,16 +120,20 @@ def run_load(server, trace, *, updates: int = 0,
 
 
 def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
-          updates: int = 3, req_queries: int = 96, seed: int = 0) -> dict:
+          updates: int = 3, req_queries: int = 96, seed: int = 0,
+          pipeline_depth: int = 0) -> dict:
     """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
     and the JSON CLI so both measure the same configuration).
 
     Warmup primes the executables + the scheduler's execute-time model,
     then telemetry is RESET so the reported window reflects steady state,
-    not first-bucket compiles.
+    not first-bucket compiles.  ``pipeline_depth`` turns on the worker's
+    launch-ahead pipelining (``--pipeline``; a measured experiment — see
+    ROADMAP's post-PR-5 re-triage for the CPU result).
     """
     pts = spatial_points(points, seed=seed)
     with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh,
+                         pipeline_depth=pipeline_depth,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         for _ in range(3):
             srv.submit(spatial_queries(req_queries, seed=2))
@@ -180,9 +184,11 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
                          **({} if hosts else
                             {"max_batch": max_batch,
                              "query_domain": qd, "mesh": mesh})) as cl:
-            for _ in range(3 * n_hosts):     # warm every host's executables
-                cl.submit(spatial_queries(req_queries, seed=2))
-            cl.flush(timeout=600)
+            # parallel warmup: every host compiles its executables
+            # CONCURRENTLY under one fleet deadline (cold-start used to be
+            # per-host sequential and dominated the 2-host CPU bench rows)
+            cl.warmup(spatial_queries(req_queries, seed=2),
+                      batches_per_host=3, timeout=600)
             cl.reset_telemetry()
             out = run_load(cl, trace, updates=updates, points=points,
                            seed=seed)
@@ -280,6 +286,9 @@ def main() -> None:
                    default=(20.0, 200.0))
     p.add_argument("--updates", type=int, default=3,
                    help="incremental dataset updates woven into the stream")
+    p.add_argument("--pipeline", type=int, default=0, metavar="DEPTH",
+                   help="worker launch-ahead pipelining depth (0 = off; "
+                        "single-server mode only)")
     p.add_argument("--mesh", action="store_true",
                    help="serve across every visible device")
     p.add_argument("--cluster", type=int, default=0, metavar="N",
@@ -317,7 +326,7 @@ def main() -> None:
     else:
         out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
                     updates=args.updates, req_queries=args.req_queries,
-                    seed=args.seed)
+                    seed=args.seed, pipeline_depth=args.pipeline)
 
     if args.json:
         out["config"] = {k: (list(v) if isinstance(v, tuple) else v)

@@ -1,26 +1,37 @@
 """Benchmark harness — one function per paper table/figure + roofline readers.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
-[--skip-roofline] [--skip-session] [--skip-load] [--skip-cluster]``
+[--skip-roofline] [--skip-session] [--skip-ring] [--skip-load]
+[--skip-cluster] [--json [PATH]]``
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
 throughput (Stage-1 rebuild excluded), verify the fused Stage-2 path, report
 warm SHARDED-session throughput on a mesh over every visible device
 (bit-identity checked), and time incremental ``update(deltas=...)`` against
-the full re-plan it replaces.  The ``serving/*`` rows put the ASYNC serving
-subsystem under open-loop Poisson load (deadline mix + interleaved delta
-updates) and report end-to-end p50/p99 latency and shed counts — the whole
-speedup story, traffic included, in one command.  The ``cluster/*`` rows
-replay the same offered load against 1-host and 2-host serving fleets
+the full re-plan it replaces.  The ``ring/*`` rows measure brute-force ring
+Stage 1 against the grid-aware ring (slab CSR + halo) at >= 100k points —
+the paper's grid-vs-brute headline re-measured for the sharded layouts,
+with the measured per-query candidate count checked against the analytic
+census.  The ``serving/*`` rows put the ASYNC serving subsystem under
+open-loop Poisson load (deadline mix + interleaved delta updates) and
+report end-to-end p50/p99 latency and shed counts — the whole speedup
+story, traffic included, in one command.  The ``cluster/*`` rows replay the
+same offered load against 1-host and 2-host serving fleets
 (``repro.serving.cluster``) so the trajectory starts capturing scale-out
 efficiency alongside single-host latency.
+
+``--json`` additionally writes the rows (plus environment metadata) to a
+repo-root perf-trajectory artifact — ``BENCH_PR5.json`` by default — which
+the CI mesh-suite job regenerates and uploads per PR.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+
+DEFAULT_ARTIFACT = "BENCH_PR5.json"
 
 
 def main() -> None:
@@ -30,10 +41,17 @@ def main() -> None:
     p.add_argument("--skip-paper", action="store_true")
     p.add_argument("--skip-roofline", action="store_true")
     p.add_argument("--skip-session", action="store_true")
+    p.add_argument("--skip-ring", action="store_true",
+                   help="skip the brute-vs-grid-aware ring Stage-1 rows")
     p.add_argument("--skip-load", action="store_true",
                    help="skip the async-serving load-generator rows")
     p.add_argument("--skip-cluster", action="store_true",
                    help="skip the 1-host-vs-2-host fleet scale-out rows")
+    p.add_argument("--json", nargs="?", const=DEFAULT_ARTIFACT, default=None,
+                   metavar="PATH",
+                   help=f"also write the rows as a JSON perf-trajectory "
+                        f"artifact at the repo root (default "
+                        f"{DEFAULT_ARTIFACT})")
     args = p.parse_args()
 
     rows: list[tuple] = []
@@ -56,6 +74,11 @@ def main() -> None:
         rows += S.sharded_rows(sizes)   # mesh over every visible device
         rows += S.delta_rows()          # incremental vs full dataset refresh
 
+    if not args.skip_ring:
+        from . import session_bench as S
+
+        rows += S.ring_rows()           # brute vs grid-aware ring Stage 1
+
     if not args.skip_load:
         from . import load_gen as L
 
@@ -74,6 +97,27 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import json
+        import platform
+        from pathlib import Path
+
+        import jax
+
+        out = Path(args.json)
+        if not out.is_absolute():
+            out = Path(__file__).resolve().parents[1] / out
+        out.write_text(json.dumps({
+            "env": {"devices": len(jax.devices()),
+                    "backend": jax.default_backend(),
+                    "jax": jax.__version__,
+                    "python": platform.python_version(),
+                    "argv": sys.argv[1:]},
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+        }, indent=1) + "\n")
+        print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

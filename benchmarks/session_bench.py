@@ -25,6 +25,18 @@ Reported rows (CSV schema name,us_per_call,derived):
 * ``session/update_delta``      — incremental ``update(deltas=...)`` for a
                                   1% churn (rebin_delta, spec + executables
                                   kept) + the full/delta speedup ratio
+* ``ring/stage1_brute``         — warm ``layout='ring'`` query throughput at
+                                  >= 100k points (brute-force Stage 1: O(m)
+                                  candidate distances per query)
+* ``ring/stage1_grid``          — same mesh/points/queries with
+                                  ``layout='grid_ring'`` (slab CSR + halo:
+                                  O(window) candidates; measured per-query
+                                  candidate count reported, checked against
+                                  the analytic census), verified within
+                                  tolerance of the replicated session
+* ``ring/stage1_speedup``       — brute / grid-aware throughput ratio (the
+                                  paper's grid-vs-brute headline, re-measured
+                                  for the sharded layouts)
 
 Paper-table conventions apply (benchmarks/paper_tables.py): this container is
 CPU-only, so the default sizes scale down; ``--full`` restores the paper-scale
@@ -191,6 +203,67 @@ def delta_rows(m: int = 100_000, churn: float = 0.01) -> list[tuple]:
     ]
 
 
+def ring_rows(m: int = 120_000, nq: int = 1024, n_batches: int = 3,
+              tol: float = 1e-4) -> list[tuple]:
+    """Brute-force ring vs grid-aware ring Stage 1 at >= 100k points.
+
+    Both layouts run warm on a mesh over every visible device (the CI mesh
+    suite forces 8 host devices) with identical points/queries/config; the
+    grid-aware session is additionally checked within ``tol`` of the
+    REPLICATED session (the halo/merge correctness witness) and its
+    measured per-query Stage-1 candidate count is reported next to the
+    analytic census's prediction — the paper's grid-vs-brute claim,
+    re-measured for the sharded serving layouts.
+    """
+    import jax
+
+    from repro.core.jax_compat import make_auto_mesh
+    from repro.launch.analytic import aidw_ring_stage1_census
+
+    n_dev = len(jax.devices())
+    mesh = make_auto_mesh((n_dev,), ("q",))
+    pts = spatial_points(m, seed=0)
+    traffic = [spatial_queries(nq - 17 * i, seed=300 + i)
+               for i in range(n_batches)]
+
+    def warm_and_time(layout):
+        sess = InterpolationSession(pts, query_domain=traffic[0], mesh=mesh,
+                                    layout=layout)
+        sess.query(traffic[0]).values.block_until_ready()   # compile bucket
+        times = []
+        for qs in traffic:
+            t0 = time.perf_counter()
+            sess.query(qs).values.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return sess, float(np.mean(times)) * 1e6
+
+    brute_sess, brute_us = warm_and_time("ring")
+    grid_sess, grid_us = warm_and_time("grid_ring")
+
+    ref = InterpolationSession(pts, query_domain=traffic[0])
+    want = np.asarray(ref.query(traffic[-1]).values)
+    got = np.asarray(grid_sess.query(traffic[-1]).values)
+    err = float(np.abs(got - want).max())
+    if err >= tol:
+        raise RuntimeError(f"grid-aware ring diverged from replicated "
+                           f"session: maxerr {err} >= {tol}")
+    cand = float(np.asarray(grid_sess.last_stage1_candidates).mean())
+    census = aidw_ring_stage1_census(m, n_dev)
+    qps_b = nq / (brute_us / 1e6)
+    qps_g = nq / (grid_us / 1e6)
+    return [
+        (f"ring/stage1_brute/{m}x{nq}x{n_dev}dev", brute_us,
+         f"{qps_b:.0f} q/s (O(m): {m} candidate dists/query)"),
+        (f"ring/stage1_grid/{m}x{nq}x{n_dev}dev", grid_us,
+         f"{qps_g:.0f} q/s, measured {cand:.0f} candidates/query "
+         f"(census {census.grid_candidates:.0f}), maxerr {err:.1e} vs "
+         f"replicated"),
+        (f"ring/stage1_speedup/{m}x{nq}x{n_dev}dev", 0.0,
+         f"{brute_us / grid_us:.1f}x grid-aware vs brute ring "
+         f"(census candidate reduction {census.reduction:.0f}x)"),
+    ]
+
+
 def main() -> None:
     import argparse
     import json
@@ -199,11 +272,15 @@ def main() -> None:
     p.add_argument("--full", action="store_true")
     p.add_argument("--json", action="store_true",
                    help="emit a JSON array instead of CSV (CI artifact)")
+    p.add_argument("--skip-ring", action="store_true",
+                   help="skip the brute-vs-grid ring Stage-1 rows")
     args = p.parse_args()
 
     sizes = FULL_SIZES if args.full else SIZES
     rows = session_rows(sizes) + fused_rows() + sharded_rows(sizes) \
         + delta_rows()
+    if not args.skip_ring:
+        rows += ring_rows()
     if args.json:
         print(json.dumps([{"name": n, "us_per_call": us, "derived": d}
                           for n, us, d in rows], indent=2))

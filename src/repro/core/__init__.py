@@ -9,6 +9,7 @@ from .aidw import (
     idw_weights_sq,
     nn_statistic,
     weighted_interpolate,
+    weighted_partial_sums,
 )
 from .grid import (
     CellTable,
@@ -37,7 +38,7 @@ from .session import InterpolationSession, bucket_size
 __all__ = [
     "DEFAULT_ALPHAS", "adaptive_alpha", "alpha_from_membership",
     "expected_nn_distance", "fuzzy_membership", "idw_weights_sq",
-    "nn_statistic", "weighted_interpolate",
+    "nn_statistic", "weighted_interpolate", "weighted_partial_sums",
     "CellTable", "GridSpec", "bin_points", "cell_ids", "plan_grid",
     "rebin_delta",
     "KnnResult", "brute_knn", "grid_knn", "mean_nn_distance",

@@ -76,15 +76,15 @@ def idw_weights_sq(d2, alpha):
 
 
 @partial(jax.jit, static_argnums=(4, 5))
-def weighted_interpolate(queries_xy, points_xy, values, alpha,
-                         block: int = 1024, data_block: int = 0):
-    """Eq. (1): Z(x) = sum_i w_i z_i / sum_i w_i over ALL data points.
+def weighted_partial_sums(queries_xy, points_xy, values, alpha,
+                          block: int = 1024, data_block: int = 0):
+    """Eq. (1) numerator/denominator: (sum_i w_i z_i, sum_i w_i) per query.
 
-    ``alpha`` is per-query (AIDW) or scalar (standard IDW).  Blocked over
-    queries; ``data_block`` additionally chunks the data axis with running
-    (sum w*z, sum w) accumulators, bounding the tile at
-    (block x data_block) for billion-point datasets — the pure-jnp analogue
-    of the Pallas kernel's accumulate-over-data-blocks grid dimension.
+    The reusable heart of :func:`weighted_interpolate` — exposed separately
+    because a data-partitioned deployment (the serving fleet's shard hosts,
+    ``repro.serving.cluster.fleet``) sums these partials ACROSS shards
+    before the one global division.  Blocking as in
+    :func:`weighted_interpolate`.
     """
     n = queries_xy.shape[0]
     m = points_xy.shape[0]
@@ -115,16 +115,32 @@ def weighted_interpolate(queries_xy, points_xy, values, alpha,
 
             zero = jnp.zeros((qb.shape[0],), jnp.float32)
             (swz, sw), _ = jax.lax.scan(dstep, (zero, zero), chunks)
-            return swz / sw
+            return swz, sw
     else:
         def one_block(args):
             qb, ab = args
-            swz, sw = tile(qb, ab, px, py, values)
-            return swz / sw
+            return tile(qb, ab, px, py, values)
 
     pad = (-n) % block
     qp = jnp.pad(queries_xy, ((0, pad), (0, 0)))
     ap = jnp.pad(alpha, (0, pad))
     nb = (n + pad) // block
-    out = jax.lax.map(one_block, (qp.reshape(nb, block, 2), ap.reshape(nb, block)))
-    return out.reshape(-1)[:n]
+    swz, sw = jax.lax.map(one_block,
+                          (qp.reshape(nb, block, 2), ap.reshape(nb, block)))
+    return swz.reshape(-1)[:n], sw.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnums=(4, 5))
+def weighted_interpolate(queries_xy, points_xy, values, alpha,
+                         block: int = 1024, data_block: int = 0):
+    """Eq. (1): Z(x) = sum_i w_i z_i / sum_i w_i over ALL data points.
+
+    ``alpha`` is per-query (AIDW) or scalar (standard IDW).  Blocked over
+    queries; ``data_block`` additionally chunks the data axis with running
+    (sum w*z, sum w) accumulators, bounding the tile at
+    (block x data_block) for billion-point datasets — the pure-jnp analogue
+    of the Pallas kernel's accumulate-over-data-blocks grid dimension.
+    """
+    swz, sw = weighted_partial_sums(queries_xy, points_xy, values, alpha,
+                                    block, data_block)
+    return swz / sw

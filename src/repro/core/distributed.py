@@ -26,6 +26,27 @@ points nor the queries fit (or should sit) on one chip.  Two schemes:
   permute (contention-free on a TPU torus), and XLA overlaps the permute
   with the local distance/weight compute.  Padding points are placed at
   +PAD_COORD so they contribute inf distance / zero weight to both stages.
+
+* :func:`make_grid_ring_aidw` — **grid-aware ring AIDW** (PR 5): same data
+  decomposition and rotation as the ring scheme, but Stage 1 keeps the
+  paper's GRID search.  Each rotating block ships its slab's CSR cell
+  table (built by :class:`repro.core.slab.SlabPartition`: the global even
+  grid cut into row slabs with a halo ring of boundary cells), and the
+  ring step only evaluates candidates from the query's expanding search
+  window instead of the whole block — O(window) candidate distances per
+  query instead of O(m), restoring the paper's headline Stage-1 cost at
+  O(m/P + boundary-halo) memory per device.  Per-slab top-k results are
+  k-way merged into the running neighbour heap (the same
+  concatenate-and-top-k merge as the brute step), with an exactly-once
+  contribution contract and an overflow-excuse certificate
+  (:func:`repro.core.knn._slab_query_knn`) so merged results match the
+  replicated layout within the SAME certification story — bit-identical
+  d2/r_obs/alpha for queries whose certified window closes inside one
+  slab (incl. its halo), ~1e-5 f32 accumulation tolerance on the
+  interpolated values (Stage 2 sums slab partials in rotation order).
+  Comms per step: one neighbour permute of the slab packet — points, CSR
+  offsets, row offset — O(m/P + boundary) bytes, same wire profile as the
+  brute ring plus the O(n_cells/P) offset array.
 """
 
 from __future__ import annotations
@@ -186,6 +207,108 @@ def make_ring_aidw(
         local_fn, mesh=mesh,
         in_specs=(data_spec, query_spec, P(), P()),
         out_specs=P(all_axes),
+    )
+    return jax.jit(fn)
+
+
+def make_grid_ring_aidw(
+    mesh: Mesh,
+    ring_axis: str,
+    *,
+    spec,
+    rps: int,
+    halo: int,
+    max_level: int,
+    k: int = 15,
+    window: int = 256,
+    knn_block: int = 4096,
+    alphas=A.DEFAULT_ALPHAS,
+    r_min: float = A.DEFAULT_R_MIN,
+    r_max: float = A.DEFAULT_R_MAX,
+    q_block: int = 0,
+    return_stats: bool = False,
+):
+    """Build the grid-aware ring AIDW step for ``mesh`` (module docstring).
+
+    Returns ``fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
+    area)`` where the first seven arguments are the stacked packets from
+    :meth:`repro.core.slab.SlabPartition.device_tables` — the halo'd slab
+    CSR tables Stage 1 rotates, and the owned-only point blocks Stage 2
+    rotates — all sharded along ``ring_axis``; queries are sharded over
+    EVERY mesh axis.  ``spec`` is the GLOBAL grid spec and
+    ``rps``/``halo``/``max_level`` the slab geometry — all static.
+
+    With ``return_stats=True`` the step returns ``(values, alpha, r_obs,
+    overflow, n_candidates)``: per-query overflow is the merged
+    certification flag (kth merged distance vs the worst un-excused slab
+    overflow), and ``n_candidates`` counts Stage-1 candidate distance
+    evaluations per query summed over all slabs — the measured O(window)
+    quantity the analytic census cross-checks against brute force's O(m).
+    """
+    from . import knn as K
+
+    all_axes = tuple(mesh.axis_names)
+    p_ring = mesh.shape[ring_axis]
+    perm = [(i, (i + 1) % p_ring) for i in range(p_ring)]
+
+    def local_fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
+                 area):
+        qx, qy = queries[:, 0], queries[:, 1]
+        n_q = queries.shape[0]
+
+        # ---- Stage 1: grid-aware ring kNN -----------------------------
+        # the rotating packet carries the slab's sorted points + CSR
+        # offsets + row offset; `own` is consumed locally by Stage 2 only
+        def knn_step(carry, _):
+            topk, excuse, cand, pk = carry
+            psx, psy, pcs, prl = pk
+            res = K.slab_knn(spec, rps, halo, pcs[0], psx[0], psy[0],
+                             jnp.zeros_like(psx[0], jnp.int32), prl[0],
+                             queries, k, max_level, window, knn_block)
+            cat = jnp.concatenate([topk, res.d2], axis=1)
+            neg, _ = jax.lax.top_k(-cat, k)
+            pk = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, ring_axis, perm), pk)
+            return (-neg, jnp.minimum(excuse, res.excuse),
+                    cand + res.n_candidates, pk), None
+
+        topk0 = pvary(jnp.full((n_q, k), jnp.inf, queries.dtype), all_axes)
+        excuse0 = pvary(jnp.full((n_q,), jnp.inf, queries.dtype), all_axes)
+        cand0 = pvary(jnp.zeros((n_q,), jnp.int32), all_axes)
+        packet0 = (sx, sy, cell_start, row_lo)
+        (topk, excuse, cand, _), _ = jax.lax.scan(
+            knn_step, (topk0, excuse0, cand0, packet0), None, length=p_ring)
+
+        r_obs = jnp.sqrt(jnp.maximum(topk, 0.0)).mean(axis=1)
+        overflow = jnp.sqrt(jnp.maximum(topk[:, -1], 0.0)) > excuse
+        alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=alphas,
+                                 r_min=r_min, r_max=r_max)
+
+        # ---- Stage 2: ring rotation over OWNED point blocks only ------
+        # (halo copies never enter: they would double-count in Eq. (1),
+        # and their dead lanes would widen every Stage-2 tile)
+        blk0 = jnp.stack([bx[0], by[0], bz[0]], axis=1)
+
+        def interp_step(carry, _):
+            acc, blk = carry
+            acc, blk = _ring_interp_step(ring_axis, perm, qx, qy, alpha,
+                                         acc, blk, q_block)
+            return (acc, blk), None
+
+        acc0 = (jnp.zeros_like(qx), jnp.zeros_like(qx))
+        ((swz, sw), _), _ = jax.lax.scan(interp_step, (acc0, blk0), None,
+                                         length=p_ring)
+        vals = swz / sw
+        return (vals, alpha, r_obs, overflow, cand) if return_stats \
+            else vals
+
+    data2 = P(ring_axis, None)
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(data2, data2, data2, P(ring_axis), data2, data2, data2,
+                  P(all_axes, None), P(), P()),
+        out_specs=tuple(P(all_axes) for _ in range(5)) if return_stats
+        else P(all_axes),
     )
     return jax.jit(fn)
 

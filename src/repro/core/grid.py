@@ -183,7 +183,7 @@ def delta_rebins() -> int:
 
 
 def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
-                deletes=None) -> CellTable:
+                deletes=None, *, insert_ids=None) -> CellTable:
     """Apply an (inserts, deletes) delta to an existing CSR cell table.
 
     ``inserts`` is an (Δ, 3) xyz array appended to the dataset; ``deletes``
@@ -192,6 +192,14 @@ def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
     ``bin_points(spec, *updated_dataset)`` where the updated dataset is the
     kept points in their original order followed by the inserts — including
     ``order``, which is remapped to index that updated dataset.
+
+    ``insert_ids`` optionally supplies the inserts' flattened cell ids,
+    bypassing :func:`cell_ids_host`.  The slab layer uses this to bin into
+    a slab-LOCAL table with ids derived from the GLOBAL spec (global id
+    minus the slab's row offset): recomputing them against a shifted local
+    ``min_y`` would not be bitwise the same arithmetic, and a point on a
+    cell boundary could land one row off from where the global binning put
+    it.
 
     Cost: O(Δ log Δ) insert sort + O(m) tombstone/merge memcpy +
     O(n_cells + Δ) offset rebuild — no O(m log m) comparison sort.  Runs on
@@ -230,7 +238,8 @@ def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
         ix = ins[:, 0].astype(sx.dtype)
         iy = ins[:, 1].astype(sy.dtype)
         iz = ins[:, 2].astype(sz.dtype)
-        iid = cell_ids_host(spec, ix, iy)
+        iid = cell_ids_host(spec, ix, iy) if insert_ids is None \
+            else np.asarray(insert_ids, dtype=np.int64)
         iorder = np.argsort(iid, kind="stable")
         ix, iy, iz, iid = ix[iorder], iy[iorder], iz[iorder], iid[iorder]
         if ids_sorted is None:

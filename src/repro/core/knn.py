@@ -139,6 +139,181 @@ def _query_knn(
     return KnnResult(d2=d2, idx=idx, n_candidates=total, overflow=not_exact)
 
 
+class SlabKnnResult(NamedTuple):
+    d2: jax.Array        # (n, k) squared distances to THIS slab's contribution
+    idx: jax.Array       # (n, k) indices into the slab's original point order
+    n_candidates: jax.Array  # (n,) candidates examined against this slab
+    overflow: jax.Array  # (n,) bool: this slab's search was not certified
+    excuse: jax.Array    # (n,) f32: radius within which an overflow is
+    #                        irrelevant — any point this slab FAILED to
+    #                        examine is farther than ``excuse`` from the
+    #                        query, so a merged kth distance <= excuse keeps
+    #                        the merged result exact despite the flag
+
+
+def _slab_query_knn(
+    spec: GridSpec,
+    k: int,
+    max_level: int,
+    window: int,
+    rps: int,
+    halo: int,
+    cell_start: jax.Array,
+    sx: jax.Array,
+    sy: jax.Array,
+    order: jax.Array,
+    row_lo: jax.Array,
+    qx: jax.Array,
+    qy: jax.Array,
+):
+    """kNN for one query against ONE slab of the global grid.
+
+    The slab owns global rows ``[row_lo, row_lo + rps)`` and its CSR table
+    additionally carries ``halo`` rows of boundary cells on each side
+    (local row ``r`` is global row ``row_lo - halo + r``; the table has
+    ``rps + 2*halo`` rows x ``spec.n_cols`` cells).  ``spec`` is the GLOBAL
+    grid — column/row indices are computed exactly as the replicated search
+    computes them, and ``sx``/``sy`` hold TRUE (unshifted) coordinates, so
+    every distance is bitwise what the replicated path computes for the
+    same (query, point) pair.  ``row_lo`` is dynamic: the slab rotates
+    around a ring, so nothing about it may be baked into the trace.
+
+    Ownership contract (the halo-width invariant; see ``repro.core.slab``):
+    merging per-slab results must count every data point EXACTLY once, so
+    each (query, point) pair is assigned to one slab —
+
+    * the slab OWNING the query's row contributes its own rows plus halo
+      rows within ``halo`` grid rows of the query (the halo exists so a
+      query near a slab boundary finds its whole expanding search window
+      in the owning slab's table: for certified levels <= halo the owner's
+      result alone is the exact global answer, bit-identical to the
+      replicated layout's candidate sequence);
+    * every other slab contributes only rows it OWNS that lie MORE than
+      ``halo`` rows from the query (outside the owner's covered band).
+
+    Certification: the exact second gather pass re-runs at
+    ``ceil(d_k / cell_width)`` like :func:`_query_knn`; clamping only moves
+    the search centre CLOSER to any in-table cell, so the coverage argument
+    survives queries whose row lies outside this slab.  When the pass
+    cannot be certified (window overflow or level clamp) the result is
+    flagged, and ``excuse`` reports the radius under which the flag cannot
+    affect a MERGED top-k: every point this slab failed to examine is
+    farther than ``excuse`` (its contributed rows start ``max(gap, halo+1)``
+    rows away for non-owners; 0 for the owner, whose overflow is never
+    excused).
+    """
+    n_cols, n_rows_g = spec.n_cols, spec.n_rows
+    n_rows_local = rps + 2 * halo
+    col0 = jnp.clip(((qx - spec.min_x) / spec.cell_width).astype(jnp.int32),
+                    0, n_cols - 1)
+    row_g = jnp.clip(((qy - spec.min_y) / spec.cell_width).astype(jnp.int32),
+                     0, n_rows_g - 1)
+    rr = row_g - row_lo                       # own-row-relative query row
+    gap = jnp.maximum(0, jnp.maximum(-rr, rr - (rps - 1)))
+    is_owner = gap == 0
+    row0 = jnp.clip(rr + halo, 0, n_rows_local - 1)   # clamped local centre
+
+    n_band = 2 * max_level + 1
+    dr = jnp.arange(-max_level, max_level + 1, dtype=jnp.int32)
+    rows_l = row0 + dr                                 # local band rows
+    rows_global = rows_l + (row_lo - halo)
+    owned = (rows_l >= halo) & (rows_l < halo + rps)
+    in_band = jnp.abs(rows_global - row_g) <= halo
+    contrib = jnp.where(is_owner, owned | in_band, owned & ~in_band)
+    row_ok = (rows_l >= 0) & (rows_l < n_rows_local) \
+        & (rows_global < n_rows_g) & contrib
+    rows_c = jnp.clip(rows_l, 0, n_rows_local - 1)
+    row_base = rows_c * n_cols
+
+    # ring counts for every level (same gather pattern as _query_knn, with
+    # the ownership mask folded into row validity)
+    levels = jnp.arange(max_level + 1, dtype=jnp.int32)
+    clo = jnp.clip(col0 - levels, 0, n_cols - 1)
+    chi = jnp.clip(col0 + levels, 0, n_cols - 1)
+    start_idx = row_base[None, :] + clo[:, None]
+    end_idx = row_base[None, :] + chi[:, None] + 1
+    row_cnt = cell_start[end_idx] - cell_start[start_idx]
+    band_ok = jnp.abs(dr)[None, :] <= levels[:, None]
+    row_cnt = jnp.where(band_ok & row_ok[None, :], row_cnt, 0)
+    counts = row_cnt.sum(axis=1)
+
+    n_slab = cell_start[-1]
+    enough = counts >= jnp.minimum(k, jnp.maximum(n_slab, 1))
+    first = jnp.where(jnp.any(enough), jnp.argmax(enough), max_level)
+    lvl = jnp.minimum(first.astype(jnp.int32) + 1, max_level)
+
+    args = (spec, k, max_level, window, cell_start, sx, sy, order,
+            qx, qy, col0, row0, dr, row_ok, row_base)
+    d2, idx, total = _gather_topk(*args, lvl)
+
+    # certified second pass (cap inf d_k BEFORE the int cast: a slab with
+    # fewer than k contributed points yields d2[-1] = inf)
+    d_k = jnp.sqrt(jnp.maximum(d2[-1], 0.0))
+    d_cap = jnp.minimum(d_k, (max_level + 2.0) * spec.cell_width)
+    lvl2 = jnp.ceil(d_cap / spec.cell_width).astype(jnp.int32)
+    clamped = (lvl2 > max_level) | ~jnp.isfinite(d_k)
+    lvl2 = jnp.clip(lvl2, lvl, max_level)
+    d2b, idxb, totalb = _gather_topk(*args, lvl2)
+    redo = lvl2 > lvl
+    d2 = jnp.where(redo, d2b, d2)
+    idx = jnp.where(redo, idxb, idx)
+    total = jnp.where(redo, totalb, total)
+    # a slab whose whole contributed point set fit in the gather window is
+    # exact no matter what the level heuristics concluded
+    exhausted = (total <= window) & (total >= n_slab)
+    not_exact = ((total > window) | clamped) & ~exhausted
+
+    # overflow excuse: non-owner slabs contribute nothing nearer than
+    # max(gap, halo+1) rows, so their un-certified searches cannot corrupt
+    # a merged top-k whose kth distance stays below (that - 1) cell widths.
+    gap_eff = jnp.where(is_owner, 0, jnp.maximum(gap, halo + 1))
+    excuse = jnp.where(
+        not_exact,
+        (gap_eff.astype(d_k.dtype) - 1.0) * spec.cell_width,
+        jnp.inf)
+    return SlabKnnResult(d2=d2, idx=idx, n_candidates=total,
+                         overflow=not_exact, excuse=excuse)
+
+
+def slab_knn(
+    spec: GridSpec,
+    rps: int,
+    halo: int,
+    cell_start: jax.Array,
+    sx: jax.Array,
+    sy: jax.Array,
+    order: jax.Array,
+    row_lo: jax.Array,
+    queries_xy: jax.Array,
+    k: int = 15,
+    max_level: int | None = None,
+    window: int = 256,
+    block: int = 4096,
+) -> SlabKnnResult:
+    """Vectorized :func:`_slab_query_knn` over a query batch (the grid-aware
+    ring step's Stage-1 kernel; NOT jitted here — it runs inside the traced
+    ring rotation of :func:`repro.core.distributed.make_grid_ring_aidw`,
+    and standalone callers wrap it themselves)."""
+    n = queries_xy.shape[0]
+    if max_level is None:
+        max_level = auto_max_level(spec, max(int(sx.shape[0]), 1), k)
+    block = min(block, max(n, 1))   # never pad a small shard up to a block
+    qx, qy = queries_xy[:, 0], queries_xy[:, 1]
+    f = partial(_slab_query_knn, spec, k, max_level, window, rps, halo,
+                cell_start, sx, sy, order, row_lo)
+    pad = (-n) % block
+    qxp = jnp.pad(qx, (0, pad))
+    qyp = jnp.pad(qy, (0, pad))
+    nb = (n + pad) // block
+    out = jax.lax.map(
+        lambda ab: jax.vmap(f)(ab[0], ab[1]),
+        (qxp.reshape(nb, block), qyp.reshape(nb, block)),
+    )
+    flat = jax.tree.map(lambda a: a.reshape((nb * block,) + a.shape[2:])[:n],
+                        out)
+    return SlabKnnResult(*flat)
+
+
 def auto_max_level(spec: GridSpec, m: int, k: int) -> int:
     """Expansion-level bound from expected point density (points/cell).
 

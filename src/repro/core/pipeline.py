@@ -62,7 +62,26 @@ layouts:
   into blocks along a ring axis and both stages rotate the blocks via
   collective-permute (:func:`repro.core.distributed.make_ring_aidw`).  The
   ring path does brute-force kNN over rotating blocks, so results match the
-  grid path only to accumulation-order tolerance (~1e-5 f32), never bitwise.
+  grid path only to accumulation-order tolerance (~1e-5 f32), never bitwise
+  — and Stage 1 costs O(m) candidate distances per query, the exact
+  brute-force pattern the paper's grid search exists to beat.
+* ``grid_ring`` — the grid-AWARE ring (PR 5; the default for
+  ``layout='auto'`` at ring scale): the same O(m/P)-per-device data
+  decomposition, but the even grid itself is partitioned into per-device
+  row slabs (:class:`repro.core.slab.SlabPartition`: per-slab CSR
+  ``CellTable`` + a halo ring of boundary cells) and the rotating block
+  ships its slab's cell table, so Stage 1 evaluates only O(window)
+  candidates per query from the expanding search window
+  (:func:`repro.core.distributed.make_grid_ring_aidw`).  Per-slab top-k
+  results k-way merge into the running neighbour heap; results carry the
+  grid path's certification story: d2/r_obs/alpha BIT-IDENTICAL to the
+  replicated layout for queries whose certified window closes inside one
+  slab (incl. its halo), interpolated values within ~1e-5 f32 accumulation
+  tolerance (Stage 2 sums slab partials in rotation order; the Stage-2
+  tile shape follows the padded query bucket, so values may additionally
+  vary ~1 ulp across batch compositions — Stage-1 outputs never do).
+  Unlike the other layouts, ``n_points`` is traced, so resizing churn
+  never retraces the executor.
 
 Incremental-binning rules (:func:`plan_delta` / ``session.update(deltas=...)``):
 
@@ -156,28 +175,57 @@ class ShardedAidwPlan:
     all mesh axes, per-lane bit-identity with the single-device path.
     ``ring``: ``ring_points`` holds the (padded, (m_pad, 3)) dataset sharded
     along ``ring_axis``; execution rotates blocks via collective-permute.
+    ``grid_ring``: ``slab_part`` holds the host-side
+    :class:`repro.core.slab.SlabPartition` (per-slab CSR tables + delta
+    bookkeeping) and ``slab_arrays`` its device placement (stacked packet
+    sharded along ``ring_axis``); ``rps``/``halo``/``max_level`` are the
+    static slab geometry the executor is compiled against.
     """
 
     base: AidwPlan
     mesh: Mesh
-    layout: Literal["replicated", "ring"] = "replicated"
+    layout: Literal["replicated", "ring", "grid_ring"] = "replicated"
     ring_axis: str | None = None
     ring_points: jax.Array | None = None
+    slab_part: object | None = None
+    slab_arrays: dict | None = None
+    rps: int | None = None
+    halo: int | None = None
+    max_level: int | None = None
 
     @property
     def n_devices(self) -> int:
         return int(self.mesh.devices.size)
 
 
+def _put_slab_arrays(part, mesh: Mesh, ring_axis: str) -> dict:
+    """Device-put a :meth:`SlabPartition.device_tables` packet, every array
+    sharded along ``ring_axis`` (leading P axis = one slab per device)."""
+    host = part.device_tables()
+    out = {}
+    for name, arr in host.items():
+        spec = PartitionSpec(ring_axis) if arr.ndim == 1 \
+            else PartitionSpec(ring_axis, None)
+        out[name] = jax.device_put(jnp.asarray(arr),
+                                   NamedSharding(mesh, spec))
+    return out
+
+
 def shard_plan(pln: AidwPlan, mesh: Mesh,
-               layout: Literal["auto", "replicated", "ring"] = "auto",
+               layout: Literal["auto", "replicated", "ring",
+                               "grid_ring"] = "auto",
                *, ring_axis: str | None = None,
-               ring_threshold: int = 4_000_000) -> ShardedAidwPlan:
+               ring_threshold: int = 4_000_000,
+               host_points=None) -> ShardedAidwPlan:
     """Place a plan on ``mesh``: replicate the CSR table + point arrays, or
-    ring-shard the points when ``m`` is large (``layout='auto'`` picks ring
-    at ``n_points >= ring_threshold``)."""
+    slab-shard the points when ``m`` is large (``layout='auto'`` picks
+    ``grid_ring`` at ``n_points >= ring_threshold`` — the grid-aware ring
+    dominates the brute-force ``ring``, which is kept as the merge
+    baseline).  ``host_points`` optionally supplies the (m, 3) dataset as a
+    host array for the slab partitioner, avoiding a device pull."""
     if layout == "auto":
-        layout = "ring" if pln.n_points >= ring_threshold else "replicated"
+        layout = "grid_ring" if pln.n_points >= ring_threshold \
+            else "replicated"
     if layout == "replicated":
         rep = NamedSharding(mesh, PartitionSpec())
         pln = AidwPlan(
@@ -186,9 +234,28 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
             values=jax.device_put(pln.values, rep),
             n_points=pln.n_points, area=pln.area, cfg=pln.cfg)
         return ShardedAidwPlan(base=pln, mesh=mesh, layout="replicated")
+    ring_axis = ring_axis or mesh.axis_names[0]
+    if layout == "grid_ring":
+        from . import knn as K
+        from .slab import SlabPartition
+
+        cfg = pln.cfg
+        max_level = cfg.max_level if cfg.max_level is not None \
+            else K.auto_max_level(pln.spec, pln.n_points, cfg.k)
+        if host_points is None:
+            host_points = np.concatenate(
+                [np.asarray(pln.points_xy),
+                 np.asarray(pln.values)[:, None]], axis=1)
+        part = SlabPartition.build(pln.spec, host_points,
+                                   int(mesh.shape[ring_axis]),
+                                   halo=max_level)
+        return ShardedAidwPlan(
+            base=pln, mesh=mesh, layout="grid_ring", ring_axis=ring_axis,
+            slab_part=part,
+            slab_arrays=_put_slab_arrays(part, mesh, ring_axis),
+            rps=part.rps, halo=part.halo, max_level=max_level)
     from .distributed import pad_to_multiple
 
-    ring_axis = ring_axis or mesh.axis_names[0]
     pts = pad_to_multiple(
         jnp.concatenate([pln.points_xy, pln.values[:, None]], axis=1),
         mesh.shape[ring_axis])
@@ -196,6 +263,34 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
         pts, NamedSharding(mesh, PartitionSpec(ring_axis, None)))
     return ShardedAidwPlan(base=pln, mesh=mesh, layout="ring",
                            ring_axis=ring_axis, ring_points=pts)
+
+
+def grid_ring_plan_delta(splan: ShardedAidwPlan, new_base: AidwPlan,
+                         inserts=None, deletes=None) -> ShardedAidwPlan:
+    """Incrementally re-place a ``grid_ring`` plan after a dataset delta.
+
+    The shard-aware half of the session's incremental update: the delta is
+    routed to the OWNING slabs' host CSR tables only
+    (:meth:`repro.core.slab.SlabPartition.apply_delta` — element-identical
+    to a fresh partition of the updated dataset; untouched slabs keep
+    their host arrays and cached ownership masks), and the grid spec /
+    slab geometry / compiled executor all survive.  The stacked device
+    packet is re-staged whole (O(m) memcpy + upload — no comparison sort;
+    per-slab device buffers that skip untouched slabs are future work,
+    see ROADMAP).  ``new_base`` is the updated base plan from
+    :func:`plan_delta` (same spec by construction).
+    """
+    if splan.layout != "grid_ring" or splan.slab_part is None:
+        raise ValueError("grid_ring_plan_delta needs a grid_ring plan")
+    if new_base.spec != splan.base.spec:
+        raise ValueError("delta re-placement requires an unchanged GridSpec")
+    splan.slab_part.apply_delta(inserts=inserts, deletes=deletes)
+    return ShardedAidwPlan(
+        base=new_base, mesh=splan.mesh, layout="grid_ring",
+        ring_axis=splan.ring_axis, slab_part=splan.slab_part,
+        slab_arrays=_put_slab_arrays(splan.slab_part, splan.mesh,
+                                     splan.ring_axis),
+        rps=splan.rps, halo=splan.halo, max_level=splan.max_level)
 
 
 def _study_area(spec: G.GridSpec) -> float:
@@ -350,6 +445,57 @@ def ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig):
                             return_stats=True)
         _RING_EXECUTE_CACHE[key] = fn
     return fn
+
+
+_GRID_RING_EXECUTE_CACHE: dict = {}
+
+
+def grid_ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig,
+                              spec: G.GridSpec, rps: int, halo: int,
+                              max_level: int):
+    """The grid-aware ring executor for a ``layout='grid_ring'`` plan.
+
+    Returns ``fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
+    area) -> (values, alpha, r_obs, overflow, n_candidates)`` — see
+    :func:`repro.core.distributed.make_grid_ring_aidw`.  Cached per
+    (mesh, ring_axis, cfg, slab geometry): a delta update that keeps the
+    spec reuses the compiled executable, and because ``n_points`` is traced
+    a delta that RESIZES the dataset reuses it too.
+    """
+    key = (mesh, ring_axis, cfg, spec, rps, halo, max_level)
+    fn = _GRID_RING_EXECUTE_CACHE.get(key)
+    if fn is None:
+        from .distributed import make_grid_ring_aidw
+
+        fn = make_grid_ring_aidw(
+            mesh, ring_axis, spec=spec, rps=rps, halo=halo,
+            max_level=max_level, k=cfg.k, window=cfg.window,
+            knn_block=cfg.knn_block, alphas=cfg.alphas, r_min=cfg.r_min,
+            r_max=cfg.r_max, return_stats=True)
+        _GRID_RING_EXECUTE_CACHE[key] = fn
+    return fn
+
+
+# Fleet-partitioning shard executes (repro.serving.cluster.fleet): a shard
+# host answers Stage 1 (its shard's kNN distances, for the client-side k-way
+# merge) and Stage 2 partial sums (at the client-merged alpha) as two
+# separate passes over ITS plan — never a full interpolation.
+
+
+def _shard_knn_core(spec: G.GridSpec, cfg: AidwConfig, table: G.CellTable,
+                    queries_xy):
+    res, _ = _stage1(spec, cfg, table, queries_xy)
+    return res.d2, res.overflow
+
+
+def _shard_partial_core(cfg: AidwConfig, points_xy, values, queries_xy,
+                        alpha):
+    return A.weighted_partial_sums(queries_xy, points_xy, values, alpha,
+                                   cfg.interp_block, cfg.interp_data_block)
+
+
+_shard_knn_execute = jax.jit(_shard_knn_core, static_argnums=(0, 1))
+_shard_partial_execute = jax.jit(_shard_partial_core, static_argnums=(0,))
 
 
 def plan_delta(pln: AidwPlan, inserts=None, deletes=None, *,

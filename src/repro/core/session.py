@@ -21,12 +21,15 @@ session keeps the build resident and makes the per-query path cheap:
   launch for the whole Stage 2.
 * ``mesh``        — with ``mesh=``, one session serves queries across every
   device of the mesh ('Sharding rules'): the plan is placed once via
-  :func:`repro.core.pipeline.shard_plan` (CSR table + points replicated, or
-  ring-sharded with ``layout='ring'`` when the dataset is too large to
-  replicate) and each query batch is partitioned over all mesh axes.
-  Buckets are rounded per-device (power-of-two PER LANE times the device
-  product), and replicated-layout results stay bit-identical per query to
-  the single-device session on the same plan.
+  :func:`repro.core.pipeline.shard_plan` (CSR table + points replicated;
+  ``layout='ring'`` brute-force ring-shards the points when the dataset is
+  too large to replicate; ``layout='grid_ring'`` ring-shards them behind
+  per-slab CSR tables with a boundary-cell halo, keeping the paper's
+  O(window) Stage-1 cost at O(m/P) memory) and each query batch is
+  partitioned over all mesh axes.  Buckets are rounded per-device
+  (power-of-two PER LANE times the device product), and replicated-layout
+  results stay bit-identical per query to the single-device session on
+  the same plan.
 * ``delta update`` — ``update(inserts=..., deletes=...)`` (or
   ``deltas=(inserts, deletes)``) patches the resident CSR table in
   O(Δ log Δ + memcpy) via :func:`repro.core.grid.rebin_delta` instead of
@@ -97,11 +100,12 @@ class InterpolationSession:
         self.min_bucket = int(min_bucket)
         self._query_domain = query_domain
         self._mesh = mesh
-        if mesh is not None and layout not in ("replicated", "ring"):
+        if mesh is not None and layout not in ("replicated", "ring",
+                                               "grid_ring"):
             # no 'auto' here: the query path dispatches on the layout, so it
             # must be pinned before the first plan is placed
-            raise ValueError(f"layout must be 'replicated' or 'ring', "
-                             f"got {layout!r}")
+            raise ValueError(f"layout must be 'replicated', 'ring' or "
+                             f"'grid_ring', got {layout!r}")
         self._layout = layout if mesh is not None else "single"
         self._ring_axis = ring_axis
         self._n_dev = int(mesh.devices.size) if mesh is not None else 1
@@ -116,6 +120,10 @@ class InterpolationSession:
         self._seen_buckets: set[int] = set()
         self._plan: P.AidwPlan | None = None
         self._splan: P.ShardedAidwPlan | None = None
+        # grid_ring only: per-query Stage-1 candidate counts of the LAST
+        # batch (device array) — the measured O(window) evidence the ring
+        # benchmark / analytic census read
+        self.last_stage1_candidates = None
         # host-side (m, 3) mirror of the dataset: delta updates reconstruct
         # from it instead of pulling the plan arrays off the device
         self._host_pts = None
@@ -136,7 +144,8 @@ class InterpolationSession:
         if self._mesh is None:
             return
         self._splan = P.shard_plan(self._plan, self._mesh, self._layout,
-                                   ring_axis=self._ring_axis)
+                                   ring_axis=self._ring_axis,
+                                   host_points=self._host_pts)
         if self._splan.layout == "replicated":
             self._plan = self._splan.base   # replicated arrays serve both
 
@@ -168,7 +177,15 @@ class InterpolationSession:
             self._host_pts = new_pts
             if new_plan is not None:
                 self._plan = new_plan
-                self._place()
+                if self._layout == "grid_ring" and self._splan is not None:
+                    # shard-aware delta: ONLY the owning slabs' host CSR
+                    # tables are re-sorted/patched; the stacked device
+                    # packet is re-staged (memcpy + upload, no sort) and
+                    # the spec, slab geometry and compiled executor survive
+                    self._splan = P.grid_ring_plan_delta(
+                        self._splan, new_plan, inserts, deletes)
+                else:
+                    self._place()
                 self.stats["delta_updates"] += 1
                 self.stats["n_points"] = int(new_plan.n_points)
                 self.stats["last_plan_s"] = time.perf_counter() - t0
@@ -178,10 +195,11 @@ class InterpolationSession:
             raise ValueError("first update needs the full dataset")
         else:
             self._host_pts = np.asarray(points_xyz)
-        # the ring executor never reads the CSR table; skip the full sort
+        # the ring executors never read the global CSR table; skip the full
+        # sort (grid_ring builds PER-SLAB tables in shard_plan instead)
         self._plan = P.plan(points_xyz, self.cfg,
                             query_domain=self._query_domain,
-                            bin=self._layout != "ring")
+                            bin=self._layout in ("single", "replicated"))
         self._place()
         self.stats["stage1_builds"] += 1
         self.stats["n_points"] = int(self._plan.n_points)
@@ -207,6 +225,20 @@ class InterpolationSession:
     def _run(self, qp, donate: bool):
         """Dispatch one padded bucket to the right executable."""
         pln = self._plan
+        if self._layout == "grid_ring":
+            sp = self._splan
+            fn = P.grid_ring_session_execute(
+                sp.mesh, sp.ring_axis, pln.cfg, pln.spec, sp.rps, sp.halo,
+                sp.max_level)
+            arr = sp.slab_arrays
+            values, alpha, r_obs, overflow, cand = fn(
+                arr["sx"], arr["sy"], arr["cell_start"], arr["row_lo"],
+                arr["bx"], arr["by"], arr["bz"], qp,
+                jnp.float32(pln.n_points), jnp.float32(pln.area))
+            # Stage-1 candidate counts (device array; no sync here — the
+            # benchmark census reads it after the batch materializes)
+            self.last_stage1_candidates = cand
+            return values, alpha, r_obs, overflow
         if self._layout == "ring":
             sp = self._splan
             fn = P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
@@ -220,6 +252,38 @@ class InterpolationSession:
             fn = P._session_execute_donate if donate else P._session_execute
         return fn(pln.spec, pln.cfg, pln.n_points, pln.area,
                   pln.table, pln.points_xy, pln.values, qp)
+
+    def knn(self, queries_xy):
+        """Stage 1 only: (d2 (n, k) ascending, overflow mask) against THIS
+        session's dataset — a shard host's local pass for the serving
+        fleet's client-side k-way merge
+        (``repro.serving.cluster.fleet.ShardedAidwCluster``).  Needs a
+        binned plan (single-device or replicated layout)."""
+        if self._plan.table is None:
+            raise ValueError(
+                "shard kNN needs a binned plan (single/replicated layout)")
+        q = jnp.asarray(queries_xy)
+        n = q.shape[0]
+        b = self._bucket(n)
+        qp = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge") if b != n else q
+        d2, ovf = P._shard_knn_execute(self._plan.spec, self._plan.cfg,
+                                       self._plan.table, qp)
+        return d2[:n], ovf[:n]
+
+    def partial_interpolate(self, queries_xy, alpha):
+        """Stage-2 partial sums (sum w*z, sum w) of Eq. (1) over THIS
+        session's dataset at a caller-supplied per-query ``alpha`` — the
+        fleet sums these across shards before the one global division."""
+        q = jnp.asarray(queries_xy)
+        a = jnp.asarray(alpha)
+        n = q.shape[0]
+        b = self._bucket(n)
+        if b != n:
+            q = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge")
+            a = jnp.pad(a, (0, b - n), mode="edge")
+        swz, sw = P._shard_partial_execute(
+            self._plan.cfg, self._plan.points_xy, self._plan.values, q, a)
+        return swz[:n], sw[:n]
 
     def query(self, queries_xy, *, timings: bool = False) -> P.AidwResult:
         """Interpolate one query batch; (single-device and replicated-mesh

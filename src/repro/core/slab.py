@@ -23,6 +23,37 @@ FLOPs.  Here Stage 1 keeps the paper's GRID search, domain-decomposed:
 Per-chip cost at m=n=2^30, P=512: kNN drops from O(n_loc * m) ~ 1.7e16 FLOPs
 (ring brute force) to O(n_loc * window) ~ 4e9 — the step becomes one
 Stage-2 sweep, halving total FLOPs vs ring AIDW.
+
+Grid-aware ring (PR 5; :class:`SlabPartition` below + ``make_grid_ring_aidw``
+in ``repro.core.distributed``): the serving session's ``layout='grid_ring'``
+uses the SAME slab decomposition but rotates the slab CSR tables around the
+ring instead of pre-partitioning queries, so it composes with the session's
+query-sharded-over-all-axes layout.  Contracts:
+
+* **Halo-width invariant** — slab ``s`` owns global grid rows
+  ``[s*rps, (s+1)*rps)`` and its CSR table carries ``halo`` extra rows of
+  boundary cells on each side (points REPLICATED from the neighbouring
+  slabs).  With ``halo >= max_level`` (the search's level bound, the
+  default), a query landing in slab ``s`` finds its ENTIRE expanding search
+  window — every cell a certified level-``L <= halo`` expansion can touch —
+  inside ``s``'s table, so the owner's result alone is the exact global
+  answer for such queries and the candidate sequence is identical to the
+  replicated layout's (bit-identical d2/r_obs/alpha).  Queries whose
+  certified window exceeds the halo fall back to the cross-slab k-way
+  merge, which is still exact: contributions are partitioned so every data
+  point is counted exactly once (owner takes its rows plus in-halo-band
+  halo rows; non-owners take only rows they own outside that band — see
+  ``repro.core.knn._slab_query_knn``), and un-certified slab searches carry
+  an ``excuse`` radius that keeps the merged overflow flag honest.
+* **Memory model** — each device holds O(m/P) owned points + O(boundary)
+  halo copies (``2 * halo`` rows of points) + the slab's CSR offsets
+  ((rps + 2*halo) * n_cols + 1 int32), NEVER the O(m) dataset or the
+  O(n_cells) global table.
+* **Comms model** — one neighbour ``ppermute`` of the slab packet (points +
+  CSR offsets, O(m/P + boundary) bytes) per ring step per stage; no
+  all-gather, no per-query traffic.  Stage 2 rotates the same point blocks
+  (the global Eq. (1) sum needs every block regardless of where kNN
+  happened).
 """
 
 from __future__ import annotations
@@ -76,6 +107,211 @@ def partition_by_slab(points: np.ndarray, p: int, rps: int, cw: float,
         out[s, : len(sel)] = points[sel]
         idx[s, : len(sel)] = sel
     return out, idx
+
+
+def slab_rows(spec: G.GridSpec, p: int) -> int:
+    """Rows per slab (ceil) for a P-way split of ``spec``'s rows."""
+    return -(-spec.n_rows // p)
+
+
+def member_delta(mem: np.ndarray, dels, m_kept: int, ins_idx):
+    """Apply one (deletes, inserts) delta to a SORTED member-index array.
+
+    The shared bookkeeping for every slab-style partition (the grid-ring
+    layout's :class:`SlabPartition` tables and the serving fleet's
+    per-shard membership — one implementation, so delete routing can never
+    drift between them).  ``mem`` holds indices into the CURRENT dataset
+    order; ``dels`` is the sorted unique global delete set (or None);
+    ``m_kept`` the post-delete dataset size; ``ins_idx`` the positions of
+    this member set's inserts within the global insert batch (or None).
+    Returns ``(dels_local, new_mem)`` where ``dels_local`` are the deleted
+    entries' positions WITHIN ``mem`` (what ``rebin_delta`` wants) and
+    ``new_mem`` is remapped to the reconstructed kept-plus-appended order
+    (still sorted: appends index past every kept entry).
+    """
+    dels_local = None
+    if dels is not None and mem.size:
+        pos = np.searchsorted(mem, dels)
+        hit = pos < mem.size
+        hit[hit] &= mem[pos[hit]] == dels[hit]
+        dels_local = pos[hit]
+        keep = np.ones(mem.size, bool)
+        keep[dels_local] = False
+        mem = mem[keep]
+    if dels is not None:
+        mem = mem - np.searchsorted(dels, mem)
+    if ins_idx is not None and np.size(ins_idx):
+        mem = np.concatenate([mem, m_kept + np.asarray(ins_idx)])
+    return dels_local, mem
+
+
+class SlabPartition:
+    """Host-side slab decomposition of a dataset over a GLOBAL grid spec.
+
+    The device-facing half of the grid-aware ring layout (module docstring,
+    'Grid-aware ring'): slab ``s`` owns global rows ``[s*rps, (s+1)*rps)``
+    and its CSR :class:`~repro.core.grid.CellTable` covers
+    ``rps + 2*halo`` rows (its own plus ``halo`` boundary rows replicated
+    from each neighbour).  All binning is done with ids derived from the
+    GLOBAL spec (global id minus the slab's row offset), so per-row CSR
+    content is bitwise what the replicated global table holds for the same
+    rows — the root of the grid-ring layout's bit-identity story.
+
+    Incremental updates: :meth:`apply_delta` routes each insert/delete to
+    every table whose row range contains it (a boundary point lives in its
+    owner AND as a halo copy in a neighbour) and patches ONLY the touched
+    slabs via :func:`repro.core.grid.rebin_delta` — untouched slabs keep
+    their arrays; the result is element-identical to a fresh :meth:`build`
+    of the updated dataset.
+
+    ``members[s]`` holds each table's points as indices into the CURRENT
+    dataset order (the session's kept-in-original-order-plus-appends
+    order), always ascending — the delta router's join key.
+    """
+
+    def __init__(self, spec: G.GridSpec, p: int, rps: int, halo: int,
+                 tables: list, members: list, m: int):
+        self.spec = spec
+        self.p = p
+        self.rps = rps
+        self.halo = halo
+        self.tables = tables          # per-slab CellTable of numpy arrays
+        self.members = members        # per-slab sorted global indices
+        self.m = m
+        # per-slab Stage-2 ownership masks over the sorted table entries,
+        # cached so a delta recomputes them for TOUCHED slabs only
+        self._owned: list = [None] * p
+
+    @property
+    def local_spec(self) -> G.GridSpec:
+        """Static spec of one slab table: rps + 2*halo rows, global cols.
+        (min_x/min_y are the GLOBAL origin — ids are always computed
+        globally and offset, never re-derived from a shifted origin.)"""
+        return G.GridSpec(self.spec.min_x, self.spec.min_y,
+                          self.spec.cell_width,
+                          self.rps + 2 * self.halo, self.spec.n_cols)
+
+    @classmethod
+    def build(cls, spec: G.GridSpec, points_xyz, p: int,
+              halo: int) -> "SlabPartition":
+        pts = np.asarray(points_xyz)
+        x, y, z = pts[:, 0], pts[:, 1], pts[:, 2]
+        rps = slab_rows(spec, p)
+        ids = G.cell_ids_host(spec, x, y)
+        row = ids // spec.n_cols
+        n_local = (rps + 2 * halo) * spec.n_cols
+        tables, members = [], []
+        for s in range(p):
+            lo = s * rps
+            mem = np.nonzero((row >= lo - halo)
+                             & (row < lo + rps + halo))[0]
+            lids = ids[mem] - (lo - halo) * spec.n_cols
+            ordr = np.argsort(lids, kind="stable").astype(np.int32)
+            cell_start = np.searchsorted(
+                lids[ordr], np.arange(n_local + 1, dtype=np.int64),
+                side="left").astype(np.int32)
+            tables.append(G.CellTable(
+                x[mem][ordr], y[mem][ordr], z[mem][ordr], cell_start, ordr))
+            members.append(mem.astype(np.int64))
+        return cls(spec, p, rps, halo, tables, members, pts.shape[0])
+
+    def apply_delta(self, inserts=None, deletes=None) -> None:
+        """Patch the owning (and halo-neighbouring) slab tables in place.
+
+        ``deletes`` are indices into the CURRENT dataset order; ``inserts``
+        append after compaction, exactly like
+        :func:`repro.core.pipeline.plan_delta`'s dataset reconstruction —
+        so the partition stays element-identical to a fresh build of that
+        reconstructed dataset.
+        """
+        spec = self.spec
+        dels = np.unique(np.asarray(deletes, dtype=np.int64)) \
+            if deletes is not None and np.size(deletes) else None
+        if dels is not None and (dels[0] < 0 or dels[-1] >= self.m):
+            raise IndexError(f"delete index out of range [0, {self.m})")
+        ins = np.asarray(inserts) if inserts is not None \
+            and np.size(inserts) else None
+        ins_ids = None if ins is None else \
+            G.cell_ids_host(spec, ins[:, 0], ins[:, 1])
+        ins_row = None if ins is None else ins_ids // spec.n_cols
+        m_kept = self.m - (0 if dels is None else dels.size)
+        lspec = self.local_spec
+        for s in range(self.p):
+            lo = s * self.rps
+            base = (lo - self.halo) * spec.n_cols
+            ins_mask = None
+            if ins is not None:
+                ins_mask = (ins_row >= lo - self.halo) \
+                    & (ins_row < lo + self.rps + self.halo)
+            touched_ins = ins_mask is not None and bool(ins_mask.any())
+            # membership always shifts: deletes ANYWHERE compact the
+            # global order that members indexes into
+            dels_local, self.members[s] = member_delta(
+                self.members[s], dels, m_kept,
+                np.nonzero(ins_mask)[0] if touched_ins else None)
+            touched_del = dels_local is not None and dels_local.size > 0
+            if touched_ins or touched_del:
+                t = G.rebin_delta(
+                    lspec, self.tables[s],
+                    inserts=ins[ins_mask] if touched_ins else None,
+                    deletes=dels_local if touched_del else None,
+                    insert_ids=(ins_ids[ins_mask] - base)
+                    if touched_ins else None)
+                self.tables[s] = G.CellTable(
+                    *(np.asarray(a) for a in t))
+                self._owned[s] = None       # mask recomputed on next pull
+        self.m = m_kept + (0 if ins is None else ins.shape[0])
+
+    def device_tables(self, pad_multiple: int = 64) -> dict:
+        """Stacked (P, ...) numpy arrays for the ring executor's rotating
+        packets; point arrays padded to common caps (multiples of
+        ``pad_multiple``, so balanced churn rarely changes array shapes
+        and the compiled executables survive).
+
+        Stage 1 rotates the halo'd slab tables (``sx``/``sy``/
+        ``cell_start``/``row_lo``; values are never needed for kNN).
+        Stage 2 rotates SEPARATE owned-only blocks (``bx``/``by``/``bz``)
+        — halo copies must not contribute to the global Eq. (1) sum twice,
+        and carrying them as dead padded lanes would widen every Stage-2
+        tile by the boundary size, eating the Stage-1 win.  Padded slots
+        hold ``PAD_COORD`` (Stage-2 weight exactly 0) and are NEVER
+        addressed by Stage 1 (``cell_start[-1]`` stops short of them)."""
+        def rounded(n):
+            return max(pad_multiple, -(-n // pad_multiple) * pad_multiple)
+
+        caps = [t.sx.shape[0] for t in self.tables]
+        cap = rounded(max(caps + [1]))
+        dt = self.tables[0].sx.dtype if self.tables else np.float32
+        zt = self.tables[0].sz.dtype if self.tables else np.float32
+        sx = np.full((self.p, cap), PAD_COORD, dt)
+        sy = np.full((self.p, cap), PAD_COORD, dt)
+        cell_start = np.stack([np.asarray(t.cell_start, np.int32)
+                               for t in self.tables])
+        n_cols = self.spec.n_cols
+        owned_sel = []
+        for s, t in enumerate(self.tables):
+            n_s = t.sx.shape[0]
+            sx[s, :n_s] = t.sx
+            sy[s, :n_s] = t.sy
+            if self._owned[s] is None:      # build, or this slab was touched
+                rows = np.repeat(
+                    np.arange(cell_start.shape[1] - 1, dtype=np.int64),
+                    np.diff(cell_start[s].astype(np.int64))) // n_cols
+                self._owned[s] = (rows >= self.halo) \
+                    & (rows < self.halo + self.rps)
+            owned_sel.append(self._owned[s])
+        cap2 = rounded(max([int(o.sum()) for o in owned_sel] + [1]))
+        bx = np.full((self.p, cap2), PAD_COORD, dt)
+        by = np.full((self.p, cap2), PAD_COORD, dt)
+        bz = np.zeros((self.p, cap2), zt)
+        for s, (t, o) in enumerate(zip(self.tables, owned_sel)):
+            n_o = int(o.sum())
+            bx[s, :n_o] = t.sx[o]
+            by[s, :n_o] = t.sy[o]
+            bz[s, :n_o] = t.sz[o]
+        return {"sx": sx, "sy": sy, "cell_start": cell_start,
+                "row_lo": (np.arange(self.p) * self.rps).astype(np.int32),
+                "bx": bx, "by": by, "bz": bz}
 
 
 def make_slab_aidw(

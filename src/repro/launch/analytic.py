@@ -1,5 +1,12 @@
 """Analytic per-cell FLOPs / HBM-traffic model for the roofline.
 
+Also home of the AIDW ring Stage-1 census (:func:`aidw_ring_stage1_census`):
+the candidate-distance accounting that quantifies what the grid-aware ring
+layout buys over the brute-force ring — O(window) candidate evaluations per
+query instead of O(m) — at fixed (m, P).  The session benchmark
+(``benchmarks/session_bench.py`` ring rows) cross-checks the model against
+the MEASURED per-query candidate counts the grid-ring executor reports.
+
 Why analytic: XLA's HLO cost analysis (a) counts while-loop bodies once (the
 layer scan under-reports ~L x), and (b) is unstable across SPMD partitioning
 choices (measured: non-monotonic FLOPs vs depth on the 256-way mesh; see
@@ -21,11 +28,64 @@ Conventions:
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.models import api
 from repro.models.config import ModelConfig
 from repro.nn.moe import moe_capacity
+
+
+@dataclass(frozen=True)
+class RingStage1Census:
+    """Per-query Stage-1 candidate accounting for the two ring layouts."""
+
+    m: int                       # data points
+    p: int                       # ring width (devices / slabs)
+    k: int
+    brute_candidates: float      # brute ring: every point, every query
+    grid_candidates: float       # grid ring: expected window gather
+    grid_offset_gathers: float   # grid ring: CSR level-count int gathers
+    reduction: float             # brute / grid candidate-distance ratio
+
+
+def aidw_ring_stage1_census(m: int, p: int, k: int = 15, *,
+                            window: int = 256, cell_factor: float = 1.0,
+                            area: float = 1.0,
+                            max_level: int | None = None) -> RingStage1Census:
+    """Candidate-distance census: brute ring vs grid-aware ring at (m, P).
+
+    Brute ring Stage 1 merges every rotating O(m/P) block into the running
+    top-k — m candidate distances per query per full rotation, regardless
+    of P.  The grid-aware ring searches the paper's even grid instead: with
+    Eq. (2)'s cell width (x ``cell_factor``) the expected points-per-cell is
+    ``ppc = m * cw^2 / area``; the count pass closes at the first level L
+    with ``(2L+1)^2 * ppc >= k`` plus the safety ring, so the expected
+    gather is ``min(window, (2(L+1)+1)^2 * ppc)`` candidates — from the
+    OWNING slab only (the exactly-once contribution contract leaves
+    non-owner slabs with ~empty masked windows on certified queries).  The
+    level-count machinery costs ``P * 2 * (L_max+1) * (2*L_max+1)`` int32
+    CSR-offset gathers per query per rotation — reported separately
+    because offset gathers are not distance FLOPs.
+
+    The reduction is what the paper's headline measures (grid vs brute kNN,
+    Garcia et al. brute baseline), re-derived for the sharded layouts.
+    """
+    cw = cell_factor / (2.0 * math.sqrt(m / area))
+    ppc = max(m * cw * cw / area, 1e-6)
+    lvl = 0
+    while (2 * lvl + 1) ** 2 * ppc < k:
+        lvl += 1
+    lvl += 1                     # the paper's safety ring
+    grid = min(float(window), (2 * lvl + 1) ** 2 * ppc)
+    if max_level is None:
+        max_level = int(math.ceil(
+            0.5 * (math.sqrt(4.0 * k / ppc) - 1.0))) + 3
+    offset_gathers = float(p) * 2.0 * (max_level + 1) * (2 * max_level + 1)
+    return RingStage1Census(
+        m=m, p=p, k=k, brute_candidates=float(m), grid_candidates=grid,
+        grid_offset_gathers=offset_gathers,
+        reduction=float(m) / max(grid, 1.0))
 
 
 @dataclass(frozen=True)

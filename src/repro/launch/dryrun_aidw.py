@@ -91,6 +91,17 @@ def analytic_aidw(kind: str, n_chips: int, q_block: int) -> dict:
         knn = n_loc * 256 * pair_flops               # local grid search
         wire = (2.0 * m_loc * 12.0                   # halo (both neighbours)
                 + n_chips * (m_loc * 12.0))          # stage-2 rotations
+    elif kind == "grid_ring":
+        # grid-aware ring (PR 5): rotating slab CSR tables; per query the
+        # candidate count comes from the census, the wire adds the slab's
+        # CSR offset array to every rotation
+        from repro.launch.analytic import aidw_ring_stage1_census
+
+        census = aidw_ring_stage1_census(M, n_chips, K_NN,
+                                         cell_factor=CELL_FACTOR)
+        knn = n_loc * census.grid_candidates * pair_flops
+        cells_loc = 4.0 * (M / n_chips)              # ~n_cells/P offsets x 4B
+        wire = 2.0 * n_chips * (m_loc * 12.0 + cells_loc)
     else:
         knn = n_loc * float(M) * pair_flops          # ring brute kNN
         wire = 2.0 * n_chips * (m_loc * 12.0)        # 2 stages x 512 rotations
@@ -135,6 +146,33 @@ def run_cell(kind: str, *, force: bool = False, q_block: int = 512) -> dict:
             jitted = jax.jit(fn, in_shardings=(rep, rep, rep, shq))
             args = (jax.ShapeDtypeStruct((M,), jnp.float32),) * 3 + (
                 jax.ShapeDtypeStruct((N, 2), jnp.float32),)
+        elif kind == "grid_ring":
+            from repro.core.distributed import make_grid_ring_aidw
+            from repro.core.slab import slab_rows
+
+            spec = _unit_square_spec(M, CELL_FACTOR)
+            rps = slab_rows(spec, n_chips)
+            max_level = K.auto_max_level(spec, M // n_chips, K_NN)
+            halo = max_level
+            # cap: owned points + 2*halo rows of boundary copies
+            per_row = M / max(spec.n_rows, 1)
+            cap = int(M // n_chips + 2 * halo * per_row + 64)
+            n_local = (rps + 2 * halo) * spec.n_cols
+            rec["grid"] = {"rows": spec.n_rows, "cols": spec.n_cols,
+                           "rps": rps, "halo": halo, "cap": cap}
+            cap2 = int(M // n_chips + 64)
+            fn = make_grid_ring_aidw(mesh, "ring", spec=spec, rps=rps,
+                                     halo=halo, max_level=max_level,
+                                     k=K_NN, q_block=q_block)
+            args = ((jax.ShapeDtypeStruct((n_chips, cap), jnp.float32),) * 2
+                    + (jax.ShapeDtypeStruct((n_chips, n_local + 1),
+                                            jnp.int32),
+                       jax.ShapeDtypeStruct((n_chips,), jnp.int32))
+                    + (jax.ShapeDtypeStruct((n_chips, cap2),
+                                            jnp.float32),) * 3
+                    + (jax.ShapeDtypeStruct((N, 2), jnp.float32),
+                       jax.ShapeDtypeStruct((), jnp.float32),
+                       jax.ShapeDtypeStruct((), jnp.float32)))
         else:
             qb = 0 if kind == "ring" else q_block
             fn = make_ring_aidw(mesh, "ring", k=K_NN, q_block=qb)
@@ -184,11 +222,12 @@ def run_cell(kind: str, *, force: bool = False, q_block: int = 512) -> dict:
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--cell", default="all",
-                   choices=["paper", "ring", "ring_blocked", "slab", "all"])
+                   choices=["paper", "ring", "ring_blocked", "grid_ring",
+                            "slab", "all"])
     p.add_argument("--force", action="store_true")
     args = p.parse_args()
-    cells = (["paper", "ring", "ring_blocked", "slab"] if args.cell == "all"
-             else [args.cell])
+    cells = (["paper", "ring", "ring_blocked", "grid_ring", "slab"]
+             if args.cell == "all" else [args.cell])
     for c in cells:
         rec = run_cell(c, force=args.force)
         r = rec.get("roofline", {})

@@ -37,7 +37,8 @@ def run_aidw(args) -> None:
     from repro.serving.engine import AidwEngine, InterpolationRequest
 
     n_dev = len(jax.devices())
-    mesh = make_auto_mesh((n_dev,), ("q",)) if args.mesh else None
+    mesh = make_auto_mesh((n_dev,), ("q",)) if args.mesh or \
+        args.layout != "replicated" else None
     pts = spatial_points(args.points, seed=args.seed)
     if args.cluster:
         run_aidw_cluster(args, pts, mesh)
@@ -46,6 +47,7 @@ def run_aidw(args) -> None:
         run_aidw_async(args, pts, mesh)
         return
     engine = AidwEngine(pts, max_batch=args.max_batch, mesh=mesh,
+                        layout=args.layout,
                         query_domain=spatial_queries(1024, seed=1))
 
     def wave(wave_id: int) -> None:
@@ -81,6 +83,7 @@ def run_aidw_async(args, pts, mesh) -> None:
     from repro.serving import AsyncAidwServer
 
     with AsyncAidwServer(pts, max_batch=args.max_batch, mesh=mesh,
+                         layout=args.layout,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         def wave(wave_id: int, deadline_s):
             return [srv.submit(
@@ -123,7 +126,8 @@ def run_aidw_cluster(args, pts, mesh=None) -> None:
 
     with AidwCluster(pts, n_hosts=args.cluster, max_batch=args.max_batch,
                      query_domain=spatial_queries(1024, seed=1),
-                     policy=args.policy, mesh=mesh) as cl:
+                     policy=args.policy, mesh=mesh,
+                     layout=args.layout) as cl:
         def wave(wave_id: int):
             return [cl.submit(
                 spatial_queries(max(args.req_queries - 7 * i, 1),
@@ -162,6 +166,11 @@ def main() -> None:
                    help="serve AIDW interpolation instead of the LM engine")
     p.add_argument("--mesh", action="store_true",
                    help="AIDW: shard the session across all visible devices")
+    p.add_argument("--layout", default="replicated",
+                   choices=("replicated", "ring", "grid_ring"),
+                   help="AIDW mesh layout: replicate the plan, brute-force "
+                        "ring-shard the points, or grid-aware ring-shard "
+                        "them (slab CSR + halo; implies --mesh)")
     p.add_argument("--async", dest="async_", action="store_true",
                    help="AIDW: drive traffic through the AsyncAidwServer "
                         "(admission queue + worker thread + deadlines)")

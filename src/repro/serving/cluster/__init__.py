@@ -44,22 +44,35 @@ Telemetry: per-host log-binned latency histograms merge bin-by-bin into
 fleet p50/p95/p99 + summed QPS (``cluster/telemetry.py``) — the
 ``benchmarks/load_gen.py --cluster --json`` fleet artifact.
 
+Fleet data partitioning (first cut, PR 5):
+:class:`~repro.serving.cluster.fleet.ShardedAidwCluster` serves a dataset
+too large to replicate by row-slab-sharding the points across hosts
+(:func:`~repro.serving.cluster.fleet.fleet_partition` — the grid-aware slab
+decomposition as the partitioning backbone) and fanning each query batch
+out to every shard with a client-side k-way merge: per-shard grid-kNN
+heaps merge into the global top-k (-> adaptive alpha), then per-shard
+Eq. (1) partial sums add up to the global interpolation.  Shard ops are
+epoch-stamped and FIFO-serialized with updates on each host, so a merged
+batch always reflects one consistent epoch.
+
 Entry points: :class:`~repro.serving.cluster.fleet.AidwCluster` (in-process
 fleet or pre-built hosts), :func:`~repro.serving.cluster.bootstrap
 .bootstrap` + ``python -m repro.serving.cluster.rpc`` (process-backed
-fleet over the socket control plane, optionally ``jax.distributed``).
+fleet over the socket control plane, optionally ``jax.distributed``;
+``--shard-of N`` serves one shard of the partitioned fleet).
 """
 
 from .bootstrap import ClusterConfig, ClusterContext, bootstrap, local_mesh
 from .epochs import EpochApplier, EpochCoordinator, EpochUpdate, UpdateHandle
-from .fleet import AidwCluster
+from .fleet import AidwCluster, ShardedAidwCluster, fleet_partition
 from .host import HostServer
 from .router import NoLiveHosts, RoutedRequest, Router
 from .rpc import RemoteHost, serve_host, spawn_worker
 from .telemetry import merge_reports
 
 __all__ = [
-    "AidwCluster", "ClusterConfig", "ClusterContext", "bootstrap",
+    "AidwCluster", "ShardedAidwCluster", "fleet_partition", "ClusterConfig",
+    "ClusterContext", "bootstrap",
     "local_mesh", "EpochApplier", "EpochCoordinator", "EpochUpdate",
     "UpdateHandle", "HostServer", "NoLiveHosts", "RoutedRequest", "Router",
     "RemoteHost", "serve_host", "spawn_worker", "merge_reports",

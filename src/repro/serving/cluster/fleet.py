@@ -23,13 +23,29 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
-from .epochs import EpochCoordinator
+import numpy as np
+
+from .epochs import EpochCoordinator, EpochUpdate
 from .host import HostServer
 from .router import RoutedRequest, Router
 from .telemetry import merge_reports
 
-__all__ = ["AidwCluster"]
+__all__ = ["AidwCluster", "ShardedAidwCluster", "fleet_partition"]
+
+
+def _parallel_hosts(items, fn, max_workers: int | None = None) -> list:
+    """Run ``fn(item)`` for every host-shaped item on a thread pool and
+    return results in order; exceptions re-raise on the caller.  The fleet
+    uses this for warmup/flush/fan-out so per-host waits overlap instead of
+    summing (the one-deadline-for-the-fleet semantics every caller already
+    passes down as absolute remaining time per call)."""
+    items = list(items)
+    if len(items) <= 1:
+        return [fn(it) for it in items]
+    with ThreadPoolExecutor(max_workers=max_workers or len(items)) as pool:
+        return list(pool.map(fn, items))
 
 
 class AidwCluster:
@@ -125,15 +141,49 @@ class AidwCluster:
         """Newest assigned epoch (hosts may still be applying it)."""
         return self.coordinator.epoch
 
+    def warmup(self, queries_xy, *, batches_per_host: int = 3,
+               timeout: float | None = None) -> None:
+        """Prime every host's executables (and execute-time model) in
+        PARALLEL: ``batches_per_host`` copies of ``queries_xy`` submitted
+        DIRECTLY to each host (bypassing the router, so round-robin can
+        never starve a host of its warm batches) and waited on a thread
+        per host under ONE fleet deadline.  Cold-start compiles overlap
+        across hosts instead of summing — the dominant cost of the 2-host
+        CPU bench rows before this existed.  A host that fails its warmup
+        is drained, not fatal."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def warm_one(hid):
+            host = self.router._hosts[hid]
+            try:
+                reqs = [host.submit(queries_xy)
+                        for _ in range(batches_per_host)]
+                for r in reqs:
+                    rem = None if deadline is None \
+                        else max(deadline - time.monotonic(), 0.0)
+                    host.wait(r, timeout=rem)
+            except TimeoutError:
+                # still compiling, not dead: an expired fleet deadline
+                # must leave a COLD host in rotation, not drain it (the
+                # same slowness-is-not-death rule flush applies)
+                pass
+            except Exception:
+                self.router.drain(hid)
+
+        _parallel_hosts(self.router.live_hosts(), warm_one)
+
     def flush(self, timeout: float | None = None) -> None:
         """Wait for every routed request to reach a terminal state.
 
-        Host flushes run first (fast path: lets each worker drain its FIFO);
+        Host flushes run first, IN PARALLEL on a thread per host under one
+        fleet deadline (fast path: lets each worker drain its FIFO; serial
+        waits would sum N drain times where the fleet only needs the max);
         a host that fails its flush is drained and its requests follow the
         router's resubmission path.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
-        for hid in self.router.live_hosts():
+
+        def flush_one(hid):
             rem = None if deadline is None \
                 else max(deadline - time.monotonic(), 0.0)
             try:
@@ -145,6 +195,8 @@ class AidwCluster:
                 pass
             except Exception:
                 self.router.drain(hid)
+
+        _parallel_hosts(self.router.live_hosts(), flush_one)
         self.router.flush(timeout=None if deadline is None
                           else max(deadline - time.monotonic(), 0.0))
 
@@ -182,6 +234,388 @@ class AidwCluster:
             raise errs[0]
 
     def __enter__(self) -> "AidwCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Fleet data partitioning (first cut): each host serves ONE SHARD
+# ---------------------------------------------------------------------------
+
+
+def _spec_area(spec) -> float:
+    return (spec.n_cols * spec.cell_width) * (spec.n_rows * spec.cell_width)
+
+
+def fleet_partition(points_xyz, n_shards: int, *, query_domain=None,
+                    cell_factor: float = 1.0):
+    """Row-slab partition of a dataset for the data-partitioned fleet.
+
+    The grid-aware slab decomposition is the partitioning backbone: the
+    coordinator plans the GLOBAL even grid (same ``plan_grid`` call a
+    full-replica server would make over the same dataset + query domain, so
+    Eq. (2)'s study area matches the replica bitwise) and cuts its rows
+    into ``n_shards`` slabs (``repro.core.slab.slab_rows``), so shard
+    locality matches grid locality — the cross-host analogue of the
+    session's ``grid_ring`` layout, and the substrate future
+    locality-aware routing keys on.  Returns ``(spec, rps, members)`` with
+    ``members[s]`` the sorted dataset indices shard ``s`` owns.
+
+    Deterministic in its inputs: a subprocess worker reconstructing the
+    same dataset computes the identical partition
+    (``repro.serving.cluster.rpc.main --shard-of``).
+    """
+    from repro.core import grid as G
+    from repro.core.slab import slab_rows
+
+    pts = np.asarray(points_xyz)
+    spec = G.plan_grid(
+        pts[:, :2],
+        None if query_domain is None else np.asarray(query_domain),
+        cell_factor=cell_factor)
+    rps = slab_rows(spec, n_shards)
+    rows = G.cell_ids_host(spec, pts[:, 0], pts[:, 1]) // spec.n_cols
+    shard = np.minimum(rows // rps, n_shards - 1)
+    members = [np.nonzero(shard == s)[0].astype(np.int64)
+               for s in range(n_shards)]
+    return spec, rps, members
+
+
+class ShardedQueryResult:
+    """One fleet-merged query batch: values + the Stage-1 stats the merge
+    derived them from, plus the epoch every shard served under."""
+
+    def __init__(self, values, alpha, r_obs, overflow_mask, epoch):
+        self.values = values
+        self.alpha = alpha
+        self.r_obs = r_obs
+        self.overflow_mask = overflow_mask
+        self.overflow = int(np.sum(overflow_mask))
+        self.epoch = epoch
+
+
+class ShardedAidwCluster:
+    """Data-PARTITIONED serving fleet: ``n_hosts`` hosts, each serving one
+    row-slab shard of the dataset (never a replica) — for datasets too
+    large to replicate per host.  First cut of fleet data partitioning
+    (ROADMAP post-PR-4): query batches fan out to ALL shard hosts and merge
+    client-side.
+
+    Query path (two phases, k-way merge — the cross-host mirror of the
+    grid-ring layout's neighbour-heap merge):
+
+    1. **kNN fan-out** — every host answers Stage 1 over its shard
+       (``shard_knn``: top-k squared distances via the paper's grid
+       search on the host's own plan).  The coordinator k-way merges the
+       per-shard heaps into the global top-k, from which r_obs and the
+       adaptive alpha (Eqs. 3-6) follow — using the GLOBAL point count and
+       the fleet spec's study area, which match a full-replica server's
+       plan bitwise (same ``plan_grid`` inputs).
+    2. **partial-sum fan-out** — every host computes Eq. (1) partial sums
+       over its shard at the merged alpha (``shard_partial``); the
+       coordinator sums across shards and divides once.
+
+    Every shard op is FIFO-serialized with epoch updates on its host's
+    worker and stamped with the epoch it executed under; the coordinator
+    verifies all 2N stamps agree and retries the batch when an update
+    landed between phases, so a merged result always reflects ONE
+    consistent epoch.  Values match a full-replica server within f32
+    accumulation tolerance (the partial sums add in shard order);
+    ``overflow_mask`` combines per-shard certification flags with a
+    client-side slab-gap excuse (a flagged shard whose band lies farther
+    than the merged kth distance cannot have corrupted the merge).
+
+    Updates: ``update_dataset`` splits each delta by owning shard (deletes
+    resolved through the coordinator's member bookkeeping) and broadcasts
+    per-shard pieces under one epoch — EVERY host sees every epoch (empty
+    pieces included) so the epoch stream stays dense.  Unlike the
+    replicated cluster there are no replicas to drain to: a failed shard
+    host makes the fleet unusable and errors propagate loudly (re-sharding
+    / shard replication is future work, tracked in ROADMAP).
+    """
+
+    def __init__(self, points_xyz=None, n_hosts: int = 2, cfg=None, *,
+                 hosts=None, query_domain=None, clock=time.monotonic,
+                 **host_kwargs):
+        from repro.core import AidwConfig
+
+        if points_xyz is None:
+            raise ValueError("need the full dataset to partition the fleet "
+                             "(hosts= must match fleet_partition of it)")
+        pts = np.asarray(points_xyz)
+        self.cfg = cfg or AidwConfig()
+        self.clock = clock
+        self._query_domain = None if query_domain is None \
+            else np.asarray(query_domain)
+        self.spec, self.rps, self.members = fleet_partition(
+            pts, int(n_hosts), query_domain=self._query_domain,
+            cell_factor=self.cfg.cell_factor)
+        empty = [s for s, mem in enumerate(self.members) if mem.size == 0]
+        if empty:
+            raise ValueError(
+                f"shards {empty} own no points — use fewer hosts or a "
+                f"denser dataset (empty shards cannot serve)")
+        self.m = pts.shape[0]
+        self.area = _spec_area(self.spec)
+        if hosts is None:
+            hosts = [HostServer(s, pts[self.members[s]], cfg,
+                                query_domain=query_domain, **host_kwargs)
+                     for s in range(int(n_hosts))]
+        self.hosts = list(hosts)
+        if len(self.hosts) != int(n_hosts):
+            # zip() downstream would silently truncate: a shard with no
+            # host (or a host with no shard) must fail LOUDLY here
+            raise ValueError(
+                f"hosts= has {len(self.hosts)} elements for an "
+                f"{n_hosts}-way partition — it must match fleet_partition")
+        self.coordinator = EpochCoordinator()
+        self._bcast = threading.Lock()
+        # one persistent fan-out pool: query() fans out twice per batch,
+        # and spawning a fresh executor per phase is hot-path overhead
+        self._pool = ThreadPoolExecutor(max_workers=len(self.hosts))
+        # global (point count, study area, grid spec, rows-per-slab) BY
+        # EPOCH: alpha AND the overflow excuse must use the state of the
+        # epoch a batch's shard ops actually executed under — reading bare
+        # self.* would race update_dataset's commit (hosts apply the new
+        # epoch before the coordinator thread returns)
+        self._alpha_state = {0: (self.m, self.area, self.spec, self.rps)}
+
+    # -- query path (two-phase fan-out + k-way merge) ------------------------
+
+    def query(self, queries_xy, *, timeout: float | None = None,
+              max_retries: int = 3) -> ShardedQueryResult:
+        """Answer one query batch against the partitioned dataset.
+
+        Validation shares :func:`repro.serving.queue.validate_queries` with
+        the server/router admission surfaces — the shard fan-out must never
+        accept an array the replicated path would bounce.
+        """
+        from repro.serving.queue import validate_queries
+
+        q = validate_queries(queries_xy)
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def rem():
+            return None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+
+        k = self.cfg.k
+        last_epochs: set = set()
+        for _ in range(max_retries):
+            p1 = self._fanout(lambda h: h.shard_knn(q, timeout=rem()))
+            last_epochs = {r[2] for r in p1}
+            if len(last_epochs) != 1:
+                continue                     # churn mid-fan-out: retry
+            epoch = next(iter(last_epochs))
+            merged = np.sort(
+                np.concatenate([r[0] for r in p1], axis=1), axis=1)[:, :k]
+            r_obs = np.sqrt(np.maximum(merged, 0.0)).mean(axis=1)
+            alpha = self._alpha(r_obs, epoch)
+            p2 = self._fanout(
+                lambda h: h.shard_partial(q, alpha, timeout=rem()))
+            last_epochs = {epoch} | {r[2] for r in p2}
+            if len(last_epochs) == 1:
+                swz = np.sum([r[0] for r in p2], axis=0)
+                sw = np.sum([r[1] for r in p2], axis=0)
+                return ShardedQueryResult(
+                    values=swz / sw, alpha=alpha, r_obs=r_obs,
+                    overflow_mask=self._merged_overflow(
+                        q, merged, [r[1] for r in p1], epoch),
+                    epoch=epoch)
+            # an update landed between phases/hosts: the merge would mix
+            # epochs — retry the whole batch (updates are rare vs queries)
+        raise RuntimeError(
+            f"query kept straddling dataset updates after {max_retries} "
+            f"attempts (saw epochs {sorted(last_epochs)})")
+
+    def _fanout(self, fn) -> list:
+        return list(self._pool.map(fn, self.hosts))
+
+    def _epoch_state(self, epoch: int):
+        with self._bcast:
+            return self._alpha_state.get(
+                epoch, (self.m, self.area, self.spec, self.rps))
+
+    def _alpha(self, r_obs: np.ndarray, epoch: int) -> np.ndarray:
+        from repro.core import adaptive_alpha
+
+        m, area, _, _ = self._epoch_state(epoch)
+        return np.asarray(adaptive_alpha(
+            r_obs.astype(np.float32), np.float32(m),
+            np.float32(area), alphas=self.cfg.alphas,
+            r_min=self.cfg.r_min, r_max=self.cfg.r_max))
+
+    def _merged_overflow(self, q, merged_d2, shard_masks,
+                         epoch: int) -> np.ndarray:
+        """Fleet certification: a shard's un-certified Stage-1 only taints
+        a query if points it may have missed could beat the merged kth
+        distance — and every point it owns lies in its row band, so a band
+        farther than ``d_k`` excuses the flag (the client-side mirror of
+        the grid-ring layout's per-slab overflow excuse).  Grid geometry
+        pinned to the batch's EPOCH, like the alpha state — a full refresh
+        committing mid-query must not re-interpret old-epoch distances
+        against the new grid."""
+        from repro.core import grid as G
+
+        _, _, spec, rps = self._epoch_state(epoch)
+        rows = G.cell_ids_host(spec, q[:, 0], q[:, 1]) // spec.n_cols
+        d_k = np.sqrt(np.maximum(merged_d2[:, -1], 0.0))
+        flag = np.zeros(q.shape[0], bool)
+        for s, mask in enumerate(shard_masks):
+            lo = s * rps
+            hi = spec.n_rows if s == len(shard_masks) - 1 \
+                else (s + 1) * rps
+            gap = np.maximum(0, np.maximum(lo - rows, rows - (hi - 1)))
+            flag |= np.asarray(mask, bool) \
+                & (d_k > (gap - 1.0) * spec.cell_width)
+        return flag
+
+    # -- write path (epoch-ordered, split by owning shard) -------------------
+
+    def _split_update(self, points_xyz, inserts, deletes):
+        """Per-host update payloads (epoch filled in at broadcast) + the
+        NEW partition state to commit.  Runs — and VALIDATES — before any
+        epoch is assigned: a rejected update must not consume an epoch, or
+        the gap would wedge every host's EpochApplier forever.
+
+        A FULL refresh re-plans the fleet grid over the new dataset (same
+        ``fleet_partition`` call as construction), so Eq. (2)'s study area
+        and the shard routing track the data exactly like a full-replica
+        server's re-plan would.  A DELTA keeps the spec frozen (the same
+        plan-freeze contract as ``plan_delta``) and therefore REJECTS
+        inserts outside the planned bounding box — the caller re-syncs
+        with a full refresh, matching the replica's fallback behaviour.
+        """
+        from repro.core import grid as G
+        from repro.core.slab import member_delta
+
+        spec, rps, p = self.spec, self.rps, len(self.hosts)
+        if points_xyz is not None:
+            pts = np.asarray(points_xyz)
+            spec2, rps2, members = fleet_partition(
+                pts, p, query_domain=self._query_domain,
+                cell_factor=self.cfg.cell_factor)
+            empty = [s for s, mem in enumerate(members) if mem.size == 0]
+            if empty:
+                raise ValueError(f"full update leaves shards {empty} empty")
+            ups = [{"points_xyz": pts[members[s]]} for s in range(p)]
+            commit = {"members": members, "m": pts.shape[0], "spec": spec2,
+                      "rps": rps2, "area": _spec_area(spec2)}
+            return ups, commit
+        dels = np.unique(np.asarray(deletes, dtype=np.int64)) \
+            if deletes is not None and np.size(deletes) else None
+        if dels is not None and (dels[0] < 0 or dels[-1] >= self.m):
+            raise IndexError(f"delete index out of range [0, {self.m})")
+        ins = np.asarray(inserts) if inserts is not None \
+            and np.size(inserts) else None
+        ins_shard = None
+        if ins is not None:
+            if (ins[:, 0] < spec.min_x).any() or (ins[:, 1] < spec.min_y).any() \
+                    or (ins[:, 0] > spec.min_x
+                        + spec.n_cols * spec.cell_width).any() \
+                    or (ins[:, 1] > spec.min_y
+                        + spec.n_rows * spec.cell_width).any():
+                raise ValueError(
+                    "delta insert outside the fleet's planned grid — "
+                    "re-sync with a full dataset update (the fleet spec "
+                    "is frozen across deltas, like plan_delta's bbox "
+                    "fallback)")
+            rows = G.cell_ids_host(spec, ins[:, 0], ins[:, 1]) // spec.n_cols
+            ins_shard = np.minimum(rows // rps, p - 1)
+        m_kept = self.m - (0 if dels is None else dels.size)
+        ups, members = [], []
+        for s in range(p):
+            sel = None if ins_shard is None else ins_shard == s
+            has_ins = sel is not None and bool(sel.any())
+            dels_local, mem = member_delta(
+                self.members[s], dels, m_kept,
+                np.nonzero(sel)[0] if has_ins else None)
+            # EVERY host gets an update for EVERY epoch — empty pieces
+            # keep the per-host epoch streams dense (the server's
+            # monotonicity guard requires it)
+            ups.append({
+                "inserts": ins[sel] if has_ins
+                else np.zeros((0, 3), np.float32),
+                "deletes": dels_local if dels_local is not None
+                and dels_local.size else None})
+            members.append(mem)
+        commit = {"members": members,
+                  "m": m_kept + (0 if ins is None else ins.shape[0]),
+                  "spec": spec, "rps": rps, "area": self.area}
+        return ups, commit
+
+    def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
+                       deltas=None, timeout: float | None = None) -> int:
+        """Epoch-ordered fleet update, split by owning shard; returns the
+        epoch.  Broadcast-enqueues under the coordinator lock (same FIFO
+        pinning as the replicated cluster), waits for all hosts in
+        parallel on one deadline.  Any per-host failure propagates — with
+        partitioned data there is no surviving replica to drain to."""
+        if deltas is not None:
+            inserts, deletes = deltas
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._bcast:
+            # split + validate FIRST: only a broadcastable update may
+            # consume an epoch (a gap would wedge every host's applier)
+            ups, commit = self._split_update(points_xyz, inserts, deletes)
+            upd = self.coordinator.assign(points_xyz=points_xyz,
+                                          inserts=inserts, deletes=deletes)
+            handles = [host.submit_update(EpochUpdate(epoch=upd.epoch, **u))
+                       for host, u in zip(self.hosts, ups)]
+            # commit the partition state under the lock: the NEXT update's
+            # delete indices reference this epoch's dataset order, and
+            # queries resolve their alpha (m, area) via _alpha_state
+            self.members = commit["members"]
+            self.m = commit["m"]
+            self.spec = commit["spec"]
+            self.rps = commit["rps"]
+            self.area = commit["area"]
+            self._alpha_state[upd.epoch] = (self.m, self.area, self.spec,
+                                            self.rps)
+            for old in [e for e in self._alpha_state
+                        if e < upd.epoch - 8]:   # bounded history
+                del self._alpha_state[old]
+        _parallel_hosts(
+            zip(self.hosts, handles),
+            lambda hw: hw[0].wait_update(
+                hw[1], timeout=None if deadline is None
+                else max(deadline - time.monotonic(), 0.0)))
+        return upd.epoch
+
+    # -- fleet lifecycle -----------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.coordinator.epoch
+
+    def flush(self, timeout: float | None = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        _parallel_hosts(
+            self.hosts,
+            lambda h: h.flush(timeout=None if deadline is None
+                              else max(deadline - time.monotonic(), 0.0)))
+
+    def report(self) -> dict:
+        host_reps = _parallel_hosts(self.hosts, lambda h: h.report())
+        return {"fleet": merge_reports(host_reps) if host_reps else {},
+                "hosts": host_reps, "epoch": self.coordinator.epoch,
+                "n_points": self.m,
+                "shard_sizes": [int(mem.size) for mem in self.members]}
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        errs = []
+        for h in self.hosts:
+            try:
+                h.close(timeout=timeout)
+            except Exception as e:          # noqa: PERF203 — best-effort
+                errs.append(e)
+        self._pool.shutdown(wait=True)
+        if errs:
+            raise errs[0]
+
+    def __enter__(self) -> "ShardedAidwCluster":
         return self
 
     def __exit__(self, *exc) -> None:

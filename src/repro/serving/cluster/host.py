@@ -95,6 +95,19 @@ class HostServer:
             handle.op, timeout=None if deadline is None
             else max(deadline - time.monotonic(), 0.0))
 
+    # -- shard path (fleet data partitioning) --------------------------------
+
+    def shard_knn(self, queries_xy, *, timeout: float | None = None):
+        """This shard's Stage-1 top-k distances (+ certification mask +
+        serving epoch) — FIFO-serialized with epoch updates on the worker
+        (see :meth:`repro.serving.server.AsyncAidwServer.shard_knn`)."""
+        return self.server.shard_knn(queries_xy, timeout=timeout)
+
+    def shard_partial(self, queries_xy, alpha, *,
+                      timeout: float | None = None):
+        """This shard's Stage-2 partial sums at the fleet-merged alpha."""
+        return self.server.shard_partial(queries_xy, alpha, timeout=timeout)
+
     # -- routing / fleet surface ---------------------------------------------
 
     @property

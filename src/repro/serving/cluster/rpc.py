@@ -242,6 +242,26 @@ class RemoteHost:
             raise TimeoutError(f"epoch {handle.epoch} not applied on host "
                                f"{self.host_id} after {timeout}s")
 
+    def shard_knn(self, queries_xy, *, timeout: float | None = None):
+        # like wait()/wait_update(): an unbounded caller wait must not be
+        # cut off by a transport cap (a cold shard's first-bucket compile
+        # can far outlast any fixed bound on the CPU CI mesh)
+        reply = self._call(
+            "shard_knn", timeout=None if timeout is None else timeout + 30.0,
+            q=enc_array(np.asarray(queries_xy)), wait_s=timeout)
+        return (dec_array(reply["d2"]), dec_array(reply["overflow"]),
+                reply.get("epoch"))
+
+    def shard_partial(self, queries_xy, alpha, *,
+                      timeout: float | None = None):
+        reply = self._call(
+            "shard_partial",
+            timeout=None if timeout is None else timeout + 30.0,
+            q=enc_array(np.asarray(queries_xy)),
+            alpha=enc_array(np.asarray(alpha)), wait_s=timeout)
+        return (dec_array(reply["swz"]), dec_array(reply["sw"]),
+                reply.get("epoch"))
+
     @property
     def epoch(self) -> int:
         return int(self._call("epoch", timeout=30.0)["epoch"])
@@ -425,6 +445,16 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                 with rlock:
                     updates.pop(int(msg["epoch"]), None)
                 reply(mid, ok=1)
+            elif op == "shard_knn":
+                d2, ovf, epoch = host.shard_knn(dec_array(msg["q"]),
+                                                timeout=msg.get("wait_s"))
+                reply(mid, d2=enc_array(d2), overflow=enc_array(ovf),
+                      epoch=epoch)
+            elif op == "shard_partial":
+                swz, sw, epoch = host.shard_partial(
+                    dec_array(msg["q"]), dec_array(msg["alpha"]),
+                    timeout=msg.get("wait_s"))
+                reply(mid, swz=enc_array(swz), sw=enc_array(sw), epoch=epoch)
             elif op == "depth":
                 reply(mid, depth=host.queue_depth())
             elif op == "probe":
@@ -461,7 +491,7 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
     # the item is in the FIFO, and callers block on that reply before
     # issuing their next op.
     _BLOCKING = {"await", "flush", "update_wait", "close", "submit",
-                 "update"}
+                 "update", "shard_knn", "shard_partial"}
     try:
         while not stop.is_set():
             line = rfile.readline()
@@ -487,8 +517,15 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
                  control_port: int = 29900, max_batch: int = 4096,
                  query_domain_n: int = 1024,
                  jax_coordinator: str | None = None,
+                 shard_of: int = 0,
                  env: dict | None = None) -> subprocess.Popen:
-    """Launch one fleet host as a subprocess running :func:`main`."""
+    """Launch one fleet host as a subprocess running :func:`main`.
+
+    ``shard_of=N`` makes the worker serve shard ``host_id`` of an N-way
+    :func:`~repro.serving.cluster.fleet.fleet_partition` of the
+    reconstructed dataset instead of a full replica (the
+    :class:`~repro.serving.cluster.fleet.ShardedAidwCluster` deployment
+    shape)."""
     # -c instead of -m: runpy re-executing a module the package __init__
     # already imported would warn (and double-define the rpc classes)
     cmd = [sys.executable, "-c",
@@ -499,6 +536,8 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
            "--control-port", str(control_port),
            "--max-batch", str(max_batch),
            "--query-domain", str(query_domain_n)]
+    if shard_of:
+        cmd += ["--shard-of", str(shard_of)]
     if jax_coordinator:
         cmd += ["--jax-coordinator", jax_coordinator]
     return subprocess.Popen(cmd, env=env)
@@ -523,6 +562,9 @@ def main(argv=None) -> None:
     p.add_argument("--jax-coordinator", default=None,
                    help="host:port for jax.distributed.initialize "
                         "(omit for a transport-only fleet)")
+    p.add_argument("--shard-of", type=int, default=0, metavar="N",
+                   help="serve shard <host-id> of an N-way fleet_partition "
+                        "of the dataset instead of a full replica")
     args = p.parse_args(argv)
 
     ctx = bootstrap(ClusterConfig(
@@ -534,6 +576,14 @@ def main(argv=None) -> None:
     pts = spatial_points(args.points, seed=args.seed)
     qd = spatial_queries(args.query_domain, seed=1) \
         if args.query_domain else None
+    if args.shard_of:
+        # deterministic partition: the coordinator computes the identical
+        # split from the same (n, seed, query_domain) inputs
+        from .fleet import fleet_partition
+
+        _, _, members = fleet_partition(pts, args.shard_of,
+                                        query_domain=qd)
+        pts = pts[members[ctx.host_id]]
     host = HostServer(ctx.host_id, pts, max_batch=args.max_batch,
                       query_domain=qd, mesh=ctx.mesh)
     serve_host(host, ctx.cfg.control_address(ctx.host_id))

@@ -16,9 +16,12 @@ Two workloads share this module:
   microbatches of at most ``max_batch`` queries, and the session's
   power-of-two bucketing keeps a stream of odd-sized microbatches on one
   compiled executable.  With ``mesh=`` the session serves each microbatch
-  across the whole mesh (queries partitioned over every axis, plan
-  replicated or ring-sharded), and ``update_dataset(inserts=/deletes=)``
-  refreshes a high-churn dataset incrementally without a Stage-1 rebuild.
+  across the whole mesh (queries partitioned over every axis; the plan
+  replicated, brute-force ring-sharded, or grid-aware ring-sharded with
+  ``layout='grid_ring'`` — per-slab CSR tables + halo, the O(window)
+  Stage-1 at O(m/P) memory), and ``update_dataset(inserts=/deletes=)``
+  refreshes a high-churn dataset incrementally without a Stage-1 rebuild
+  (grid-ring: patching only the owning slabs' tables).
 
 :class:`AidwEngine` is the SYNCHRONOUS drive mode of the serving subsystem:
 the caller hands it a request list per step and it drives the shared

@@ -42,8 +42,8 @@ import numpy as np
 from repro.core.session import bucket_size
 
 __all__ = ["DeadlineCoalescer", "ExecuteTimeModel", "dispatch_batch",
-           "shed_request", "STATUS_PENDING", "STATUS_QUEUED", "STATUS_DONE",
-           "STATUS_SHED"]
+           "launch_batch", "scatter_batch", "shed_request",
+           "STATUS_PENDING", "STATUS_QUEUED", "STATUS_DONE", "STATUS_SHED"]
 
 STATUS_PENDING = "pending"   # created, not yet admitted
 STATUS_QUEUED = "queued"     # admitted, waiting for a batch
@@ -213,22 +213,35 @@ class DeadlineCoalescer:
         return groups, shed
 
 
-def dispatch_batch(session, group, *, estimator: ExecuteTimeModel | None
-                   = None, telemetry=None, clock=time.monotonic):
-    """Execute one coalesced group on ``session`` and scatter results back.
-
-    Concatenates the group's queries (arrival order), runs ONE
-    ``session.query``, slices values AND the per-query overflow mask back to
-    each owning request (so a client can tell ITS bucket overflowed, not just
-    that some query in some batch did), stamps timestamps/status, and feeds
-    the measured execute time into the scheduler's estimate.
-    Returns the batch-level :class:`repro.core.pipeline.AidwResult`.
+def launch_batch(session, group, *, clock=time.monotonic):
+    """Dispatch one coalesced group on ``session`` WITHOUT materializing
+    results.  JAX dispatch is asynchronous — ``session.query`` returns
+    device arrays before the computation finishes — so a worker can form
+    and launch batch N+1 while batch N's results transfer, hiding the
+    host-side scatter latency (the pipelined drive mode:
+    ``AsyncAidwServer(pipeline_depth=...)``).  Returns ``(res, t0)`` for a
+    later :func:`scatter_batch`.
     """
-    batch = np.concatenate([r.queries_xy for r in group], axis=0)
     t0 = clock()
     for r in group:
         r.t_dispatch = t0
-    res = session.query(batch)
+    res = session.query(np.concatenate(
+        [r.queries_xy for r in group], axis=0))
+    return res, t0
+
+
+def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
+                  = None, telemetry=None, clock=time.monotonic):
+    """Materialize a launched batch and scatter results to their requests.
+
+    Slices values AND the per-query overflow mask back to each owning
+    request (so a client can tell ITS bucket overflowed, not just that
+    some query in some batch did), stamps timestamps/status, and feeds the
+    measured execute time into the scheduler's estimate.  Under pipelined
+    dispatch the measured span includes the overlap window, so the
+    estimator's deadline forecasts become conservative — acceptable for a
+    measured experiment, one reason pipelining is off by default.
+    """
     vals = np.asarray(res.values)            # host sync: results materialized
     mask = None if res.overflow_mask is None \
         else np.asarray(res.overflow_mask)
@@ -243,7 +256,18 @@ def dispatch_batch(session, group, *, estimator: ExecuteTimeModel | None
         r.t_done = t1
         off += n
     if estimator is not None:
-        estimator.record(batch.shape[0], t1 - t0)
+        estimator.record(off, t1 - t0)
     if telemetry is not None:
         telemetry.record_batch(group, t1 - t0)
     return res
+
+
+def dispatch_batch(session, group, *, estimator: ExecuteTimeModel | None
+                   = None, telemetry=None, clock=time.monotonic):
+    """Execute one coalesced group and scatter results back (launch +
+    scatter, back to back — the default, non-pipelined drive mode).
+    Returns the batch-level :class:`repro.core.pipeline.AidwResult`.
+    """
+    res, t0 = launch_batch(session, group, clock=clock)
+    return scatter_batch(group, res, t0, estimator=estimator,
+                         telemetry=telemetry, clock=clock)

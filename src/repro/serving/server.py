@@ -63,6 +63,33 @@ class _UpdateOp:
     applied: threading.Event = field(default_factory=threading.Event)
 
 
+@dataclass
+class _ShardOp:
+    """Shard-local compute op for the fleet's data-partitioned query path
+    (``repro.serving.cluster.fleet.ShardedAidwCluster``).
+
+    Like :class:`_UpdateOp` it carries no ``queries_xy``, so the coalescer
+    treats it as a batch boundary and the worker executes it inline —
+    which is exactly the consistency hook: a shard op is FIFO-ordered with
+    epoch updates through the one admission queue, and is stamped with the
+    epoch it executed under, so the fleet can detect (and retry) a query
+    whose two phases straddled an update.
+
+    ``kind``: ``"knn"`` (Stage 1 — this shard's top-k squared distances +
+    certification mask) or ``"partial"`` (Stage 2 — Eq. (1) partial sums
+    at the client-merged per-query ``alpha``).
+    """
+
+    kind: str
+    queries: object
+    alpha: object = None
+    result: tuple | None = None
+    epoch: int | None = None
+    error: BaseException | None = None
+    cancelled: bool = False          # timed-out caller withdrew the op
+    applied: threading.Event = field(default_factory=threading.Event)
+
+
 class AsyncAidwServer:
     """Admission queue + worker thread + deadline-aware coalescing over one
     :class:`repro.core.session.InterpolationSession`.
@@ -80,7 +107,7 @@ class AsyncAidwServer:
                  max_depth: int = 1024, query_domain=None,
                  min_bucket: int = 64, mesh=None, layout: str = "replicated",
                  slack_s: float = 0.0, linger_s: float = 0.0,
-                 clock=time.monotonic):
+                 pipeline_depth: int = 0, clock=time.monotonic):
         # ONE construction path for the session/estimator/coalescer/
         # telemetry stack: the engine builds it, the server drives it from
         # a worker thread (and the sync facade stays usable via .engine)
@@ -95,6 +122,12 @@ class AsyncAidwServer:
         self.telemetry = self.engine.telemetry
         self.queue = AdmissionQueue(max_depth, clock=clock)
         self.linger_s = float(linger_s)
+        # pipeline_depth > 0: launch up to that many batches ahead of the
+        # host-side scatter (jax async dispatch overlap — measured
+        # experiment, see scheduler.launch_batch; 0 = classic dispatch,
+        # byte-for-byte the synchronous engine's batch composition)
+        self.pipeline_depth = int(pipeline_depth)
+        self._pipeline: deque = deque()     # worker-local (group, res, t0)
         # dataset epoch: 0 for the construction-time dataset, bumped by every
         # applied update (or pinned to the update's explicit cluster epoch);
         # requests are stamped with the epoch they were SERVED under.
@@ -267,6 +300,49 @@ class AsyncAidwServer:
                 "dataset update was withdrawn after an earlier timeout; "
                 "it never applied")
 
+    def shard_knn(self, queries_xy, *, timeout: float | None = None):
+        """Stage-1-only pass over THIS server's dataset: returns
+        ``(d2 (n, k), overflow (n,), epoch)``.  The fleet's
+        data-partitioned query path fans this out to every shard host and
+        k-way merges the distances client-side; FIFO-serialized with
+        dataset updates through the admission queue (the returned epoch is
+        the witness)."""
+        return self._run_shard_op(_ShardOp(
+            kind="knn", queries=validate_queries(queries_xy)), timeout)
+
+    def shard_partial(self, queries_xy, alpha, *,
+                      timeout: float | None = None):
+        """Stage-2 partial sums over THIS server's dataset at a
+        caller-supplied per-query ``alpha``: returns
+        ``(sum_wz (n,), sum_w (n,), epoch)``."""
+        q = validate_queries(queries_xy)
+        a = np.asarray(alpha)
+        if a.shape != (q.shape[0],):
+            raise ValueError(f"alpha must be shape ({q.shape[0]},), "
+                             f"got {a.shape}")
+        return self._run_shard_op(
+            _ShardOp(kind="partial", queries=q, alpha=a), timeout)
+
+    def _run_shard_op(self, op: _ShardOp, timeout: float | None):
+        self._raise_worker_error()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        self.queue.put(op, timeout=timeout)
+        # short-slice poll like wait_update: a worker that dies mid-op must
+        # surface, never strand the fleet coordinator
+        while not op.applied.wait(timeout=0.05):
+            self._raise_worker_error()
+            if deadline is not None and time.monotonic() > deadline:
+                # withdraw (best effort): the fleet retries the whole
+                # batch, so an orphaned op still in the FIFO must not burn
+                # a full kNN/partial pass for a result nobody reads
+                op.cancelled = True
+                raise TimeoutError(
+                    f"shard {op.kind} not executed after {timeout}s "
+                    f"(op withdrawn)")
+        if op.error is not None:
+            raise op.error
+        return op.result + (op.epoch,)
+
     def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
                        deltas=None, epoch: int | None = None,
                        timeout: float | None = None) -> None:
@@ -374,14 +450,37 @@ class AsyncAidwServer:
         finally:
             op.applied.set()
 
+    def _run_shard(self, op: _ShardOp) -> None:
+        if op.cancelled:                # withdrawn by a timed-out caller
+            op.applied.set()
+            return
+        try:
+            if op.kind == "knn":
+                d2, ovf = self.session.knn(op.queries)
+                op.result = (np.asarray(d2), np.asarray(ovf))
+            elif op.kind == "partial":
+                swz, sw = self.session.partial_interpolate(op.queries,
+                                                           op.alpha)
+                op.result = (np.asarray(swz), np.asarray(sw))
+            else:
+                raise ValueError(f"unknown shard op kind {op.kind!r}")
+            op.epoch = self.epoch
+        except BaseException as e:          # surface to the waiting client
+            op.error = e
+        finally:
+            op.applied.set()
+
     def _step(self, pending: deque) -> None:
         """One worker step over the front of ``pending``: apply an update
-        barrier, or form + dispatch one coalesced batch (shared by the live
-        loop and the drain-on-close loop)."""
+        barrier, run a shard op, or form + dispatch one coalesced batch
+        (shared by the live loop and the drain-on-close loop)."""
         head = pending[0]
-        if not hasattr(head, "queries_xy"):               # update barrier
+        if not hasattr(head, "queries_xy"):    # update barrier / shard op
             pending.popleft()
-            self._apply_update(head)
+            if isinstance(head, _ShardOp):
+                self._run_shard(head)
+            else:
+                self._apply_update(head)
             with self._cv:
                 self._cv.notify_all()
             return
@@ -394,12 +493,33 @@ class AsyncAidwServer:
             # the whole group (the cluster's consistency-contract witness)
             for r in group:
                 r.epoch = self.epoch
-            S.dispatch_batch(self.session, group, estimator=self.estimator,
-                             telemetry=self.telemetry, clock=self.clock)
+            if self.pipeline_depth:
+                res, t0 = S.launch_batch(self.session, group,
+                                         clock=self.clock)
+                self._pipeline.append((group, res, t0))
+                while len(self._pipeline) > self.pipeline_depth:
+                    self._scatter_oldest()
+                group = []                  # in flight: resolve at scatter
+            else:
+                S.dispatch_batch(self.session, group,
+                                 estimator=self.estimator,
+                                 telemetry=self.telemetry, clock=self.clock)
         if group or shed:
             with self._cv:
                 self._inflight -= len(group) + len(shed)
                 self._cv.notify_all()
+
+    def _scatter_oldest(self) -> None:
+        group, res, t0 = self._pipeline.popleft()
+        S.scatter_batch(group, res, t0, estimator=self.estimator,
+                        telemetry=self.telemetry, clock=self.clock)
+        with self._cv:
+            self._inflight -= len(group)
+            self._cv.notify_all()
+
+    def _drain_pipeline(self) -> None:
+        while self._pipeline:
+            self._scatter_oldest()
 
     def _work(self) -> None:
         """Worker loop: drain admissions, apply barriers, dispatch batches.
@@ -413,6 +533,9 @@ class AsyncAidwServer:
         try:
             while True:
                 if not pending:
+                    # idle: materialize pipelined batches before blocking
+                    # (flush waits on in-flight hitting zero)
+                    self._drain_pipeline()
                     item = self.queue.get(timeout=0.1)
                     if item is None:
                         if self.queue.closed:
@@ -439,6 +562,7 @@ class AsyncAidwServer:
             pending.extend(self.queue.drain())
             while pending:
                 self._step(pending)
+            self._drain_pipeline()
         except BaseException as e:
             self._worker_error = e
             # a dead worker must not strand anyone: wake blocked putters,

@@ -582,3 +582,202 @@ def test_load_gen_cluster_procs_merged_report():
     # per-host histograms really merged: fleet count = sum of host counts
     assert fleet["latency"]["total"]["count"] == sum(
         h["latency"]["total"]["count"] for h in rep["hosts"])
+
+
+# ---------------------------------------------------------------------------
+# fleet data partitioning (ShardedAidwCluster; PR 5 acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_cluster_matches_replica():
+    """Acceptance: a 2-shard cluster (points PARTITIONED, not replicated)
+    answers a query batch within f32 accumulation tolerance of a 1-host
+    full-replica server — the client-side k-way merge over per-shard grid
+    kNN + Eq. (1) partial sums."""
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(8192, seed=0)
+    qd = spatial_queries(1024, seed=1)
+    qs = spatial_queries(500, seed=2)
+    with AsyncAidwServer(pts, query_domain=qd) as replica, \
+            ShardedAidwCluster(pts, n_hosts=2, query_domain=qd) as fleet:
+        want = replica.result(replica.submit(qs))
+        got = fleet.query(qs, timeout=300)
+        assert got.epoch == 0
+        err = np.abs(np.asarray(want.values) - got.values).max()
+        assert err < 1e-4, err
+        rep = fleet.report()
+        assert rep["n_points"] == pts.shape[0]
+        assert sum(rep["shard_sizes"]) == pts.shape[0]
+        assert min(rep["shard_sizes"]) > 0       # really partitioned
+
+
+def test_sharded_cluster_delta_routing_and_epochs():
+    """Deltas split by owning shard under one epoch (empty pieces keep the
+    per-host epoch streams dense); post-delta results still match the
+    replica applying the same global delta; concurrent churn retries keep
+    every merged batch on ONE epoch."""
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(8192, seed=0)
+    qd = spatial_queries(1024, seed=1)
+    qs = spatial_queries(300, seed=2)
+    rng = np.random.default_rng(5)
+    with AsyncAidwServer(pts, query_domain=qd) as replica, \
+            ShardedAidwCluster(pts, n_hosts=2, query_domain=qd) as fleet:
+        dels = rng.choice(pts.shape[0], 120, replace=False)
+        ins = spatial_points(100, seed=9)
+        replica.update_dataset(inserts=ins, deletes=dels)
+        assert fleet.update_dataset(inserts=ins, deletes=dels,
+                                    timeout=300) == 1
+        assert fleet.m == pts.shape[0] - 120 + 100
+        # every host saw epoch 1 (even if its piece was small/empty)
+        assert all(h.epoch == 1 for h in fleet.hosts)
+        want = replica.result(replica.submit(qs))
+        got = fleet.query(qs, timeout=300)
+        assert got.epoch == 1
+        err = np.abs(np.asarray(want.values) - got.values).max()
+        assert err < 1e-4, err
+
+        # interleave queries with churn: merged batches stay epoch-pure
+        done = []
+
+        def churn():
+            for i in range(3):
+                fleet.update_dataset(
+                    inserts=spatial_points(40, seed=20 + i),
+                    deletes=np.arange(40) * 2, timeout=300)
+
+        t = threading.Thread(target=churn)
+        t.start()
+        for i in range(6):
+            out = fleet.query(spatial_queries(80, seed=40 + i), timeout=300)
+            assert np.isfinite(out.values).all()
+            done.append(out.epoch)
+        t.join()
+        assert fleet.epoch == 4
+        assert all(e in range(0, 5) for e in done)
+
+
+def test_sharded_cluster_validates_queries_like_the_router():
+    """The shard fan-out shares validate_queries with the server/router
+    admission surfaces: malformed arrays bounce at the boundary instead of
+    reaching (and killing) shard workers."""
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(2048, seed=0)
+    with ShardedAidwCluster(pts, n_hosts=2,
+                            query_domain=spatial_queries(256, seed=1)) as fl:
+        for bad in (np.zeros((0, 2), np.float32),
+                    np.zeros((4, 3), np.float32),
+                    np.zeros((4, 2), np.int32)):
+            with pytest.raises(ValueError):
+                fl.query(bad)
+        # a shard op reaching the server directly hits the same check
+        with pytest.raises(ValueError):
+            fl.hosts[0].shard_knn(np.zeros((4, 3), np.float32))
+
+
+@pytest.mark.slow
+def test_sharded_cluster_subprocess_shard_worker():
+    """The fleet-partitioned deployment shape across a REAL process
+    boundary: host 1 is a subprocess serving shard 1 of the deterministic
+    fleet_partition (rpc --shard-of), shard ops travel the socket control
+    plane, and the merged results still match the full-replica server."""
+    import os
+
+    from repro.serving.cluster import (HostServer as HS, RemoteHost,
+                                       ShardedAidwCluster, fleet_partition)
+    from repro.serving.cluster.rpc import free_port_base, spawn_worker
+
+    n_pts, seed = 4096, 0
+    pts = spatial_points(n_pts, seed=seed)
+    qd = spatial_queries(1024, seed=1)
+    qs = spatial_queries(300, seed=2)
+    _, _, members = fleet_partition(pts, 2, query_domain=qd)
+    base = free_port_base(2)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    worker = spawn_worker(1, 2, points=n_pts, seed=seed, control_port=base,
+                          shard_of=2, env=env)
+    try:
+        hosts = [HS(0, pts[members[0]], query_domain=qd),
+                 RemoteHost(1, ("127.0.0.1", base + 1),
+                            connect_timeout_s=300)]
+        with AsyncAidwServer(pts, query_domain=qd) as replica, \
+                ShardedAidwCluster(pts, n_hosts=2, hosts=hosts,
+                                   query_domain=qd) as fleet:
+            want = replica.result(replica.submit(qs))
+            got = fleet.query(qs, timeout=300)
+            err = np.abs(np.asarray(want.values) - got.values).max()
+            assert err < 1e-4, err
+            # delta routed across the process boundary under one epoch
+            dels = np.arange(0, 200, 2)
+            ins = spatial_points(64, seed=9)
+            replica.update_dataset(inserts=ins, deletes=dels)
+            assert fleet.update_dataset(inserts=ins, deletes=dels,
+                                        timeout=300) == 1
+            want2 = replica.result(replica.submit(qs))
+            got2 = fleet.query(qs, timeout=300)
+            assert got2.epoch == 1
+            err2 = np.abs(np.asarray(want2.values) - got2.values).max()
+            assert err2 < 1e-4, err2
+    finally:
+        try:
+            worker.wait(timeout=60)
+        except Exception:
+            worker.kill()
+
+
+def test_sharded_cluster_rejected_update_consumes_no_epoch():
+    """Review-driven regression: a REJECTED update (bad delete index /
+    empty-shard full refresh) must not consume an epoch — a gap would
+    wedge every host's EpochApplier forever.  Validation runs before
+    assignment, so the fleet stays fully usable."""
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(4096, seed=0)
+    with ShardedAidwCluster(pts, n_hosts=2,
+                            query_domain=spatial_queries(256, seed=1)) as fl:
+        with pytest.raises(IndexError):
+            fl.update_dataset(deletes=[10**6])
+        with pytest.raises(ValueError):      # all points into one shard
+            fl.update_dataset(points_xyz=np.concatenate(
+                [np.zeros((64, 2), np.float32) + 0.01,
+                 np.ones((64, 1), np.float32)], axis=1))
+        assert fl.epoch == 0                 # nothing consumed
+        assert fl.update_dataset(inserts=spatial_points(32, seed=5),
+                                 deletes=np.arange(32), timeout=300) == 1
+        out = fl.query(spatial_queries(64, seed=2), timeout=300)
+        assert out.epoch == 1
+        assert np.isfinite(out.values).all()
+
+
+def test_sharded_cluster_full_refresh_replans_and_bbox_guard():
+    """Review-driven regression: a FULL refresh re-plans the fleet grid
+    (study area + shard routing track the new data like a full-replica
+    re-plan), while an out-of-bbox DELTA insert is rejected without
+    consuming an epoch (the fleet spec is frozen across deltas, like
+    plan_delta's bbox fallback)."""
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(8192, seed=0)
+    qd = spatial_queries(512, seed=1)
+    with AsyncAidwServer(pts, query_domain=qd) as rep, \
+            ShardedAidwCluster(pts, n_hosts=2, query_domain=qd) as fl:
+        with pytest.raises(ValueError):
+            fl.update_dataset(
+                inserts=np.array([[9.0, 9.0, 1.0]], np.float32))
+        assert fl.epoch == 0
+        old_area = fl.area
+        pts2 = spatial_points(8192, seed=7) \
+            * np.array([2.0, 2.0, 1.0], np.float32)
+        rep.update_dataset(points_xyz=pts2)
+        assert fl.update_dataset(points_xyz=pts2, timeout=300) == 1
+        assert fl.area > 2 * old_area        # spec really re-planned
+        qs2 = (spatial_queries(200, seed=8) * 2.0).astype(np.float32)
+        want = rep.result(rep.submit(qs2))
+        got = fl.query(qs2, timeout=300)
+        assert got.epoch == 1
+        err = np.abs(np.asarray(want.values) - got.values).max()
+        assert err < 1e-4, err
