@@ -22,16 +22,24 @@ same offered load against 1-host and 2-host serving fleets
 efficiency alongside single-host latency.
 
 ``--json`` additionally writes the rows (plus environment metadata) to a
-repo-root perf-trajectory artifact — ``BENCH_PR5.json`` by default — which
-the CI mesh-suite job regenerates and uploads per PR.
+repo-root perf-trajectory artifact.  The artifact name is derived per PR —
+``BENCH_<tag>.json`` where ``<tag>`` comes from ``--artifact-tag`` or the
+``BENCH_ARTIFACT_TAG`` env var (so CI never re-overwrites an earlier PR's
+trajectory file the way a hardcoded name would) — and the CI mesh-suite job
+regenerates and uploads it per PR.  An explicit ``--json PATH`` still wins.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
-DEFAULT_ARTIFACT = "BENCH_PR5.json"
+DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR6")
+
+
+def default_artifact(tag: str = DEFAULT_TAG) -> str:
+    return f"BENCH_{tag}.json"
 
 
 def main() -> None:
@@ -47,11 +55,15 @@ def main() -> None:
                    help="skip the async-serving load-generator rows")
     p.add_argument("--skip-cluster", action="store_true",
                    help="skip the 1-host-vs-2-host fleet scale-out rows")
-    p.add_argument("--json", nargs="?", const=DEFAULT_ARTIFACT, default=None,
+    p.add_argument("--artifact-tag", default=DEFAULT_TAG, metavar="TAG",
+                   help="perf-trajectory artifact tag: --json with no PATH "
+                        "writes BENCH_<TAG>.json (env BENCH_ARTIFACT_TAG "
+                        f"overrides the default, currently {DEFAULT_TAG})")
+    p.add_argument("--json", nargs="?", const="", default=None,
                    metavar="PATH",
-                   help=f"also write the rows as a JSON perf-trajectory "
-                        f"artifact at the repo root (default "
-                        f"{DEFAULT_ARTIFACT})")
+                   help="also write the rows as a JSON perf-trajectory "
+                        "artifact at the repo root (default "
+                        "BENCH_<artifact-tag>.json)")
     args = p.parse_args()
 
     rows: list[tuple] = []
@@ -98,14 +110,14 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
-    if args.json:
+    if args.json is not None:
         import json
         import platform
         from pathlib import Path
 
         import jax
 
-        out = Path(args.json)
+        out = Path(args.json or default_artifact(args.artifact_tag))
         if not out.is_absolute():
             out = Path(__file__).resolve().parents[1] / out
         out.write_text(json.dumps({

@@ -3,7 +3,31 @@
 Stage 2 of the improved algorithm: given the observed mean nearest-neighbour
 distance ``r_obs`` per interpolated point (from Stage 1 / kNN), adaptively
 determine the distance-decay parameter ``alpha`` and take the inverse-distance
-weighted average over ALL data points (Eq. 1).
+weighted average over data points (Eq. 1).
+
+Stage-2 mode contract (``AidwConfig.stage2``):
+
+* **global** (``'naive'``/``'tiled'``) — Eq. (1) exactly as written: the
+  weighted average runs over ALL m data points.
+* **local** — Eq. (1) truncated to the k merged nearest neighbours that
+  Stage 1 already produced (:func:`topk_weighted_partial_sums`).  Because
+  Stage 1 is untouched, ``r_obs`` and therefore ``alpha`` are **bit-identical**
+  to global mode by construction; only the predicted values differ, and they
+  differ exactly by the truncated far-field tail
+  ``sum_{i>k} w_i (z_i - Z_local) / sum_{i<=k} w_i`` — a relative error that
+  shrinks like the tail weight mass ``O(k^(1-alpha/2))`` for alpha > 2 and
+  vanishes as k -> n.  Because the tail mass is set by the alpha that
+  Eq. (6) itself picks, the regimes split the opposite way from naive
+  intuition: UNIFORM patterns (R-statistic near 1) get alpha >= 2 — fast
+  decay, tight bound — while CLUSTERED patterns get alpha ~ 0.5 near the
+  clusters, whose heavy far-field tail makes local mode loosest exactly
+  there; ``tests/test_local_stage2.py`` pins both regimes against the
+  analytic f64 tail bound.
+
+Zero-weight contract: every division by ``sum_i w_i`` in this module is
+guarded (:func:`guarded_values`).  A query so far from all data that every
+f32 weight underflows to zero yields the sentinel value 0.0 and a raised bit
+in the per-query ``zero_weight_mask`` — never NaN.
 """
 
 from __future__ import annotations
@@ -130,6 +154,51 @@ def weighted_partial_sums(queries_xy, points_xy, values, alpha,
     return swz.reshape(-1)[:n], sw.reshape(-1)[:n]
 
 
+ZERO_WEIGHT_SENTINEL = 0.0  # value reported where sum(w) underflowed to zero
+
+
+def guarded_values(swz, sw):
+    """Eq. (1) final division with the zero-denominator guard.
+
+    Returns ``(values, zero_weight_mask)``.  Where the f32 weight sum
+    underflowed to exactly zero (query far from all data with large alpha),
+    the value is the explicit sentinel ``ZERO_WEIGHT_SENTINEL`` (0.0) and the
+    mask bit is set — the NaN that plain ``swz / sw`` would emit never
+    escapes.  Everywhere else the division is performed verbatim, keeping
+    guarded results bit-identical to the unguarded ones.
+    """
+    zero = sw <= 0.0
+    vals = jnp.where(zero, ZERO_WEIGHT_SENTINEL,
+                     swz / jnp.where(zero, 1.0, sw))
+    return vals, zero
+
+
+def topk_weighted_partial_sums(d2, z, alpha):
+    """Local-mode Eq. (1) partials over the k merged Stage-1 neighbours.
+
+    ``d2``: (n, k) squared distances to the k nearest neighbours,
+    ``z``: (n, k) the neighbours' data values (gathered via the kNN indices),
+    ``alpha``: per-query (n,) or scalar decay.  Padded / missing neighbour
+    slots carry ``d2 = inf``, whose weight is exactly 0.0 for every
+    alpha > 0 — padding the k axis never perturbs the sums bitwise.
+
+    Accumulation over the k axis is SEQUENTIAL (pinned left-to-right order)
+    rather than ``jnp.sum``'s shape-dependent reduction tree: appending
+    zero-weight slots then changes nothing bitwise, which is what lets the
+    Pallas local kernel (lane-padded k) reproduce this path bit-for-bit.
+    """
+    alpha = jnp.asarray(alpha, z.dtype)
+    if alpha.ndim == 1:
+        alpha = alpha[:, None]
+    w = idw_weights_sq(d2, alpha)
+    wz = w * z
+    swz, sw = wz[..., 0], w[..., 0]
+    for i in range(1, d2.shape[-1]):
+        swz = swz + wz[..., i]
+        sw = sw + w[..., i]
+    return swz, sw
+
+
 @partial(jax.jit, static_argnums=(4, 5))
 def weighted_interpolate(queries_xy, points_xy, values, alpha,
                          block: int = 1024, data_block: int = 0):
@@ -140,7 +209,11 @@ def weighted_interpolate(queries_xy, points_xy, values, alpha,
     (sum w*z, sum w) accumulators, bounding the tile at
     (block x data_block) for billion-point datasets — the pure-jnp analogue
     of the Pallas kernel's accumulate-over-data-blocks grid dimension.
+
+    The division is guarded: zero-weight queries produce the 0.0 sentinel,
+    never NaN (see :func:`guarded_values`; callers needing the mask use
+    ``guarded_values(*weighted_partial_sums(...))`` directly).
     """
     swz, sw = weighted_partial_sums(queries_xy, points_xy, values, alpha,
                                     block, data_block)
-    return swz / sw
+    return guarded_values(swz, sw)[0]

@@ -47,6 +47,15 @@ points nor the queries fit (or should sit) on one chip.  Two schemes:
   Comms per step: one neighbour permute of the slab packet — points, CSR
   offsets, row offset — O(m/P + boundary) bytes, same wire profile as the
   brute ring plus the O(n_cells/P) offset array.
+
+Both ring builders accept ``stage2_local=True`` (the session's
+``AidwConfig(stage2='local')``): Stage 1 co-merges the rotating blocks' data
+VALUES alongside the distances through the same ``top_k`` selection, and
+Eq. (1) is evaluated over just those k merged neighbours after the scan —
+the Stage-2 rotation disappears entirely (O(window + k) per query in the
+grid-aware ring).  r_obs/alpha are bit-identical to global mode by
+construction; the interpolated values differ by the truncated far-field
+tail (see ``repro.core.aidw``).
 """
 
 from __future__ import annotations
@@ -106,25 +115,46 @@ def _blocked_map(fn, qxy, block: int):
 
 
 def _ring_knn_step(ring_axis: str, perm, qx, qy, carry_d2, blk,
-                   q_block: int = 0):
+                   q_block: int = 0, carry_z=None):
     """Merge the rotating data block into the running top-k, then rotate.
 
     ``q_block`` chunks the queries so the (q, m_loc) distance tile stays
     VMEM/HBM-bounded (§Perf AIDW iteration: baseline materializes the full
-    tile; blocked version fits at 1B-point scale)."""
+    tile; blocked version fits at 1B-point scale).
+
+    With ``carry_z`` (local Stage-2 mode) the block's data VALUES co-merge
+    through the SAME ``top_k`` call — the selected distances (and hence
+    r_obs/alpha) are bitwise what the distance-only merge selects."""
     bx, by = blk[:, 0], blk[:, 1]
     k = carry_d2.shape[1]
 
-    def merge(args):
-        cqx, cqy, ctop = args
+    if carry_z is None:
+        def merge(args):
+            cqx, cqy, ctop = args
+            d2 = (cqx[:, None] - bx[None, :]) ** 2 + (cqy[:, None] - by[None, :]) ** 2
+            cat = jnp.concatenate([ctop, d2], axis=1)
+            neg_top, _ = jax.lax.top_k(-cat, k)
+            return -neg_top
+
+        carry_d2 = _blocked_map(merge, (qx, qy, carry_d2), q_block)
+        blk = jax.lax.ppermute(blk, ring_axis, perm)
+        return carry_d2, blk
+
+    bz = blk[:, 2]
+
+    def merge_z(args):
+        cqx, cqy, ctop, ctz = args
         d2 = (cqx[:, None] - bx[None, :]) ** 2 + (cqy[:, None] - by[None, :]) ** 2
         cat = jnp.concatenate([ctop, d2], axis=1)
-        neg_top, _ = jax.lax.top_k(-cat, k)
-        return -neg_top
+        catz = jnp.concatenate(
+            [ctz, jnp.broadcast_to(bz[None, :], d2.shape)], axis=1)
+        neg_top, sel = jax.lax.top_k(-cat, k)
+        return -neg_top, jnp.take_along_axis(catz, sel, axis=1)
 
-    carry_d2 = _blocked_map(merge, (qx, qy, carry_d2), q_block)
+    carry_d2, carry_z = _blocked_map(
+        merge_z, (qx, qy, carry_d2, carry_z), q_block)
     blk = jax.lax.ppermute(blk, ring_axis, perm)
-    return carry_d2, blk
+    return (carry_d2, carry_z), blk
 
 
 def _ring_interp_step(ring_axis: str, perm, qx, qy, alpha, carry, blk,
@@ -154,6 +184,7 @@ def make_ring_aidw(
     r_min: float = A.DEFAULT_R_MIN,
     r_max: float = A.DEFAULT_R_MAX,
     q_block: int = 0,
+    stage2_local: bool = False,
     return_stats: bool = False,
 ):
     """Build the domain-decomposed AIDW step for ``mesh``.
@@ -162,8 +193,15 @@ def make_ring_aidw(
     on GLOBAL arrays whose leading dims are divisible by the mesh factors:
     data sharded along ``ring_axis`` only; queries sharded along every axis.
     ``n_points``/``area`` are the true (unpadded) study statistics for Eq.(2).
-    With ``return_stats=True`` the step returns ``(values, alpha, r_obs)``
-    instead — the per-query stats the sharded ring-layout session reports.
+    With ``return_stats=True`` the step returns ``(values, alpha, r_obs,
+    zero_weight_mask)`` instead — the per-query stats the sharded ring-layout
+    session reports.
+
+    ``stage2_local=True`` drops the Stage-2 rotation entirely: the Stage-1
+    scan co-merges the blocks' data VALUES alongside the distances (same
+    ``top_k`` selection — r_obs/alpha stay bitwise what global mode
+    computes) and Eq. (1) is evaluated over just those k neighbours after
+    the scan, O(k) per query instead of a second O(m) sweep.
     """
     all_axes = tuple(mesh.axis_names)
     p_ring = mesh.shape[ring_axis]
@@ -171,6 +209,7 @@ def make_ring_aidw(
 
     def local_fn(points, queries, n_points, area):
         qx, qy = queries[:, 0], queries[:, 1]
+        n_q = queries.shape[0]
 
         # ---- Stage 1: ring kNN (lax.scan: HLO is O(1) in ring size) ----
         def knn_step(carry, _):
@@ -179,16 +218,33 @@ def make_ring_aidw(
                                        q_block)
             return (topk, blk), None
 
+        def knn_z_step(carry, _):
+            (topk, tz), blk = carry
+            (topk, tz), blk = _ring_knn_step(ring_axis, perm, qx, qy, topk,
+                                             blk, q_block, carry_z=tz)
+            return ((topk, tz), blk), None
+
         topk0 = pvary(
-            jnp.full((queries.shape[0], k), jnp.inf, points.dtype),
+            jnp.full((n_q, k), jnp.inf, points.dtype),
             all_axes)  # carry inherits the queries' full varying-axes set
-        (topk, _), _ = jax.lax.scan(knn_step, (topk0, points), None,
-                                    length=p_ring)
+        if stage2_local:
+            tz0 = pvary(jnp.zeros((n_q, k), points.dtype), all_axes)
+            ((topk, topk_z), _), _ = jax.lax.scan(
+                knn_z_step, ((topk0, tz0), points), None, length=p_ring)
+        else:
+            (topk, _), _ = jax.lax.scan(knn_step, (topk0, points), None,
+                                        length=p_ring)
         r_obs = jnp.sqrt(jnp.maximum(topk, 0.0)).mean(axis=1)
         alpha = A.adaptive_alpha(r_obs, n_points, area,
                                  alphas=alphas, r_min=r_min, r_max=r_max)
 
-        # ---- Stage 2: ring weighted interpolation ----
+        if stage2_local:
+            # ---- Stage 2 (local): Eq. (1) over the merged k neighbours ----
+            swz, sw = A.topk_weighted_partial_sums(topk, topk_z, alpha)
+            vals, zero = A.guarded_values(swz, sw)
+            return (vals, alpha, r_obs, zero) if return_stats else vals
+
+        # ---- Stage 2 (global): ring weighted interpolation ----
         def interp_step(carry, _):
             acc, blk = carry
             acc, blk = _ring_interp_step(ring_axis, perm, qx, qy, alpha, acc,
@@ -198,8 +254,8 @@ def make_ring_aidw(
         acc0 = (jnp.zeros_like(qx), jnp.zeros_like(qx))
         ((sum_wz, sum_w), _), _ = jax.lax.scan(
             interp_step, (acc0, points), None, length=p_ring)
-        vals = sum_wz / sum_w
-        return (vals, alpha, r_obs) if return_stats else vals
+        vals, zero = A.guarded_values(sum_wz, sum_w)
+        return (vals, alpha, r_obs, zero) if return_stats else vals
 
     data_spec = P(ring_axis, None)
     query_spec = P(all_axes, None)
@@ -226,24 +282,32 @@ def make_grid_ring_aidw(
     r_min: float = A.DEFAULT_R_MIN,
     r_max: float = A.DEFAULT_R_MAX,
     q_block: int = 0,
+    stage2_local: bool = False,
     return_stats: bool = False,
 ):
     """Build the grid-aware ring AIDW step for ``mesh`` (module docstring).
 
-    Returns ``fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
-    area)`` where the first seven arguments are the stacked packets from
-    :meth:`repro.core.slab.SlabPartition.device_tables` — the halo'd slab
-    CSR tables Stage 1 rotates, and the owned-only point blocks Stage 2
-    rotates — all sharded along ``ring_axis``; queries are sharded over
-    EVERY mesh axis.  ``spec`` is the GLOBAL grid spec and
+    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
+    n_points, area)`` where the first eight arguments are the stacked
+    packets from :meth:`repro.core.slab.SlabPartition.device_tables` — the
+    halo'd slab CSR tables Stage 1 rotates, and the owned-only point blocks
+    Stage 2 rotates — all sharded along ``ring_axis``; queries are sharded
+    over EVERY mesh axis.  ``spec`` is the GLOBAL grid spec and
     ``rps``/``halo``/``max_level`` the slab geometry — all static.
 
     With ``return_stats=True`` the step returns ``(values, alpha, r_obs,
-    overflow, n_candidates)``: per-query overflow is the merged
-    certification flag (kth merged distance vs the worst un-excused slab
-    overflow), and ``n_candidates`` counts Stage-1 candidate distance
+    overflow, n_candidates, zero_weight_mask)``: per-query overflow is the
+    merged certification flag (kth merged distance vs the worst un-excused
+    slab overflow), and ``n_candidates`` counts Stage-1 candidate distance
     evaluations per query summed over all slabs — the measured O(window)
     quantity the analytic census cross-checks against brute force's O(m).
+
+    ``stage2_local=True`` drops the Stage-2 block rotation entirely: the
+    Stage-1 packet additionally rotates the slab's sorted VALUES (``sz``),
+    each slab's top-k indices gather them, and the (d2, z) pairs co-merge
+    through the SAME ``top_k`` call — so r_obs/alpha (and the whole
+    certification story) stay bitwise what global mode computes while
+    per-query Stage-2 work drops from O(m) to O(k): O(window + k) total.
     """
     from . import knn as K
 
@@ -251,40 +315,69 @@ def make_grid_ring_aidw(
     p_ring = mesh.shape[ring_axis]
     perm = [(i, (i + 1) % p_ring) for i in range(p_ring)]
 
-    def local_fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
-                 area):
+    def local_fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
+                 n_points, area):
         qx, qy = queries[:, 0], queries[:, 1]
         n_q = queries.shape[0]
 
         # ---- Stage 1: grid-aware ring kNN -----------------------------
         # the rotating packet carries the slab's sorted points + CSR
-        # offsets + row offset; `own` is consumed locally by Stage 2 only
+        # offsets + row offset; `own` is consumed locally by Stage 2 only.
+        # Local mode rotates sz too and co-merges the gathered values.
         def knn_step(carry, _):
-            topk, excuse, cand, pk = carry
-            psx, psy, pcs, prl = pk
+            if stage2_local:
+                topk, topk_z, excuse, cand, pk = carry
+                psx, psy, psz, pcs, prl = pk
+            else:
+                topk, excuse, cand, pk = carry
+                psx, psy, pcs, prl = pk
+            # `order` = iota: res.idx indexes the slab's SORTED arrays,
+            # which is exactly what the in-scan value gather wants (global
+            # mode never reads idx, so zeros vs iota is indifferent there)
             res = K.slab_knn(spec, rps, halo, pcs[0], psx[0], psy[0],
-                             jnp.zeros_like(psx[0], jnp.int32), prl[0],
+                             jax.lax.iota(jnp.int32, psx.shape[1]), prl[0],
                              queries, k, max_level, window, knn_block)
             cat = jnp.concatenate([topk, res.d2], axis=1)
-            neg, _ = jax.lax.top_k(-cat, k)
+            neg, sel = jax.lax.top_k(-cat, k)
             pk = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, ring_axis, perm), pk)
+            if stage2_local:
+                catz = jnp.concatenate([topk_z, psz[0][res.idx]], axis=1)
+                topk_z = jnp.take_along_axis(catz, sel, axis=1)
+                return (-neg, topk_z, jnp.minimum(excuse, res.excuse),
+                        cand + res.n_candidates, pk), None
             return (-neg, jnp.minimum(excuse, res.excuse),
                     cand + res.n_candidates, pk), None
 
         topk0 = pvary(jnp.full((n_q, k), jnp.inf, queries.dtype), all_axes)
         excuse0 = pvary(jnp.full((n_q,), jnp.inf, queries.dtype), all_axes)
         cand0 = pvary(jnp.zeros((n_q,), jnp.int32), all_axes)
-        packet0 = (sx, sy, cell_start, row_lo)
-        (topk, excuse, cand, _), _ = jax.lax.scan(
-            knn_step, (topk0, excuse0, cand0, packet0), None, length=p_ring)
+        if stage2_local:
+            tz0 = pvary(jnp.zeros((n_q, k), sz.dtype), all_axes)
+            packet0 = (sx, sy, sz, cell_start, row_lo)
+            (topk, topk_z, excuse, cand, _), _ = jax.lax.scan(
+                knn_step, (topk0, tz0, excuse0, cand0, packet0), None,
+                length=p_ring)
+        else:
+            packet0 = (sx, sy, cell_start, row_lo)
+            (topk, excuse, cand, _), _ = jax.lax.scan(
+                knn_step, (topk0, excuse0, cand0, packet0), None,
+                length=p_ring)
 
         r_obs = jnp.sqrt(jnp.maximum(topk, 0.0)).mean(axis=1)
         overflow = jnp.sqrt(jnp.maximum(topk[:, -1], 0.0)) > excuse
         alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=alphas,
                                  r_min=r_min, r_max=r_max)
 
-        # ---- Stage 2: ring rotation over OWNED point blocks only ------
+        if stage2_local:
+            # ---- Stage 2 (local): no rotation — the merged neighbour
+            # carry already holds everything Eq. (1) needs ---------------
+            swz, sw = A.topk_weighted_partial_sums(topk, topk_z, alpha)
+            vals, zero = A.guarded_values(swz, sw)
+            return (vals, alpha, r_obs, overflow, cand, zero) \
+                if return_stats else vals
+
+        # ---- Stage 2 (global): ring rotation over OWNED blocks only ---
         # (halo copies never enter: they would double-count in Eq. (1),
         # and their dead lanes would widen every Stage-2 tile)
         blk0 = jnp.stack([bx[0], by[0], bz[0]], axis=1)
@@ -298,16 +391,16 @@ def make_grid_ring_aidw(
         acc0 = (jnp.zeros_like(qx), jnp.zeros_like(qx))
         ((swz, sw), _), _ = jax.lax.scan(interp_step, (acc0, blk0), None,
                                          length=p_ring)
-        vals = swz / sw
-        return (vals, alpha, r_obs, overflow, cand) if return_stats \
+        vals, zero = A.guarded_values(swz, sw)
+        return (vals, alpha, r_obs, overflow, cand, zero) if return_stats \
             else vals
 
     data2 = P(ring_axis, None)
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(data2, data2, data2, P(ring_axis), data2, data2, data2,
-                  P(all_axes, None), P(), P()),
-        out_specs=tuple(P(all_axes) for _ in range(5)) if return_stats
+        in_specs=(data2, data2, data2, data2, P(ring_axis), data2, data2,
+                  data2, P(all_axes, None), P(), P()),
+        out_specs=tuple(P(all_axes) for _ in range(6)) if return_stats
         else P(all_axes),
     )
     return jax.jit(fn)

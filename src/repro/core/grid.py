@@ -207,12 +207,16 @@ def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
     delta's data movement is memcpy-bound, not compute-bound.
     """
     _DELTA_REBINS[0] += 1
-    sx = np.asarray(table.sx)
-    sy = np.asarray(table.sy)
-    sz = np.asarray(table.sz)
-    order = np.asarray(table.order).astype(np.int64)
     counts = np.diff(np.asarray(table.cell_start, dtype=np.int64))
-    m = sx.shape[0]
+    # capacity-padded tables (repro.core.pipeline.pad_plan) carry sentinel
+    # tail slots beyond the true point count cell_start[-1]; the delta
+    # machinery operates on the EXACT arrays (array length must equal the
+    # sum of cell counts) and the caller re-pads the result
+    m = int(np.asarray(table.cell_start)[-1])
+    sx = np.asarray(table.sx)[:m]
+    sy = np.asarray(table.sy)[:m]
+    sz = np.asarray(table.sz)[:m]
+    order = np.asarray(table.order)[:m].astype(np.int64)
 
     # -- tombstone deletes out of the sorted arrays --------------------------
     if deletes is not None and np.size(deletes):

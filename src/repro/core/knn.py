@@ -109,7 +109,10 @@ def _query_knn(
     counts = row_cnt.sum(axis=1)                                      # (n_lvl,)
 
     # first level with >= k candidates; paper's Remark: expand one extra ring.
-    enough = counts >= jnp.minimum(k, sx.shape[0])
+    # The true point count is cell_start[-1], NOT sx.shape[0]: capacity-padded
+    # tables (pipeline plan padding) carry sentinel tail slots outside every
+    # CSR range, and the count floor must ignore them.
+    enough = counts >= jnp.minimum(k, jnp.maximum(cell_start[-1], 1))
     first = jnp.where(jnp.any(enough), jnp.argmax(enough), max_level)
     lvl = jnp.minimum(first.astype(jnp.int32) + 1, max_level)
 

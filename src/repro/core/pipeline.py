@@ -80,8 +80,19 @@ layouts:
   tolerance (Stage 2 sums slab partials in rotation order; the Stage-2
   tile shape follows the padded query bucket, so values may additionally
   vary ~1 ulp across batch compositions — Stage-1 outputs never do).
-  Unlike the other layouts, ``n_points`` is traced, so resizing churn
-  never retraces the executor.
+
+Stage-2 mode rules (``AidwConfig.stage2``; see ``repro.core.aidw``):
+
+``'naive'``/``'tiled'`` (alias ``'global'``) evaluate Eq. (1) over ALL data
+points — jnp-blocked or Pallas-tiled.  ``'local'`` truncates Eq. (1) to the
+k merged Stage-1 neighbours: ``r_obs``/``alpha`` are bit-identical to global
+mode by construction (Stage 1 is untouched), values differ by the truncated
+far-field tail, and per-query work drops from O(m) to O(k)
+(``fused=True`` routes through the Pallas gather+weighting kernel —
+bit-identical to the unfused jnp top-k path eagerly, within 1 ulp under
+jit where XLA contracts the jnp path's mul+add).  In the ``grid_ring`` layout
+local mode also drops the whole Stage-2 ring rotation — O(window + k) per
+query end-to-end.
 
 Incremental-binning rules (:func:`plan_delta` / ``session.update(deltas=...)``):
 
@@ -94,9 +105,12 @@ re-plan (fresh spec, full :func:`~repro.core.grid.bin_points`) when the
 incremental result would be invalid or degraded: any insert landing outside
 the planned grid's bounding box (it would be clamped to a border cell), or a
 delta larger than ``max_delta_frac`` of the dataset (grid density drifts off
-Eq. (2)).  Changing the point count retraces the execute jit once per new
-count (``n_points`` is a static arg); a balanced churn (equal inserts and
-deletes) retraces nothing.
+Eq. (2)).  ``n_points`` is TRACED in every layout, and :func:`plan` /
+:func:`plan_delta` capacity-pad the plan arrays to
+:data:`PLAN_PAD_MULTIPLE`-sized buckets (sentinel coordinates contribute
+exactly zero weight), so dataset-resizing churn retraces NOTHING while the
+point count stays inside one capacity bucket; crossing a bucket boundary
+retraces once per new capacity, not once per new count.
 """
 
 from __future__ import annotations
@@ -130,11 +144,18 @@ class AidwConfig:
     knn_block: int = 4096
     interp_block: int = 1024
     interp_data_block: int = 0     # chunk Stage-2 data axis (0 = whole dataset)
-    stage2: Literal["naive", "tiled"] = "naive"
-    fused: bool = False            # tiled only: alpha-in-kernel single launch
+    stage2: Literal["naive", "tiled", "local", "global"] = "naive"
+    fused: bool = False            # tiled/local: alpha-in-kernel single launch
     tile_q: int = 256              # Pallas query-block
     tile_d: int = 512              # Pallas data-block
     interpret: bool = True         # CPU container: run Pallas in interpret mode
+
+    def __post_init__(self):
+        # 'global' is the documented alias for the default all-points Eq. (1)
+        # path; normalize it at construction so config-keyed executor caches
+        # (and jit static args) see ONE canonical spelling.
+        if self.stage2 == "global":
+            object.__setattr__(self, "stage2", "naive")
 
 
 @dataclass
@@ -148,24 +169,82 @@ class AidwResult:
     # overflow_mask lets batch owners (the serving coalescer) attribute
     # overflowed queries to the request that contributed them; ``overflow``
     # stays the batch-level sum for one-shot callers.
+    zero_weight_mask: jax.Array | None = None     # (n,) bool: sum(w) underflow
+    # zero_weight_mask flags queries whose every f32 weight underflowed to
+    # zero; their ``values`` entry is the 0.0 sentinel, never NaN (see
+    # repro.core.aidw.guarded_values).
 
 
 @dataclass(frozen=True)
 class AidwPlan:
     """Reusable Stage-1 build: everything that depends only on the dataset.
 
-    ``spec``/``cfg``/``n_points``/``area`` are static (hashable) and safe as
-    jit static args; ``table``/``points_xy``/``values`` are device-resident
-    arrays reused — never donated — across queries.
+    ``spec``/``cfg``/``area`` are static (hashable) and safe as jit static
+    args; ``n_points`` is the TRUE point count and rides through the
+    executors as a traced scalar (churn never retraces);
+    ``table``/``points_xy``/``values`` are device-resident arrays reused —
+    never donated — across queries, capacity-padded to
+    :data:`PLAN_PAD_MULTIPLE` buckets by :func:`pad_plan` (rows beyond
+    ``n_points`` hold sentinel coordinates whose Stage-2 weight is exactly
+    zero and which no CSR cell range ever addresses).
     """
 
     spec: G.GridSpec
     table: G.CellTable | None      # None only for unbinned (ring-only) plans
-    points_xy: jax.Array           # (m, 2)
-    values: jax.Array              # (m,)
+    points_xy: jax.Array           # (cap, 2); rows [n_points:] are sentinels
+    values: jax.Array              # (cap,)
     n_points: int
     area: float
     cfg: AidwConfig
+
+
+# Plan arrays pad to this capacity multiple: small dataset churn keeps every
+# array shape (and therefore every compiled executable) stable.  Matches the
+# grid_ring slab packet's pad multiple (repro.core.slab.device_tables).
+PLAN_PAD_MULTIPLE = 64
+
+
+def pad_plan(pln: AidwPlan, multiple: int = PLAN_PAD_MULTIPLE) -> AidwPlan:
+    """Capacity-pad a plan's point arrays to a ``multiple``-sized bucket.
+
+    Padded point rows carry :data:`repro.core.aidw.PAD_SENTINEL` coordinates:
+    their squared distance to any real query overflows f32 to inf, so their
+    Eq. (1) weight is exactly 0.0 and no result bit changes.  Padded CSR tail
+    slots sit beyond ``cell_start[-1]`` and are never addressed by a cell
+    range.  ``n_points`` keeps the TRUE count (Eq. (2) and the kNN count
+    floor read it, not the array shape).
+    """
+    m = pln.n_points
+    cap = -(-max(m, 1) // multiple) * multiple
+    pad = cap - pln.points_xy.shape[0]
+    if pad == 0:
+        return pln
+    if pad < 0:
+        raise ValueError(f"plan arrays ({pln.points_xy.shape[0]}) exceed "
+                         f"capacity bucket {cap} for n_points={m}")
+    big = jnp.float32(A.PAD_SENTINEL)
+    points_xy = jnp.pad(pln.points_xy, ((0, pad), (0, 0)),
+                        constant_values=big)
+    values = jnp.pad(pln.values, (0, pad))
+    table = pln.table
+    if table is not None:
+        tpad = cap - table.sx.shape[0]
+        table = G.CellTable(
+            sx=jnp.pad(table.sx, (0, tpad), constant_values=big),
+            sy=jnp.pad(table.sy, (0, tpad), constant_values=big),
+            sz=jnp.pad(table.sz, (0, tpad)),
+            cell_start=table.cell_start,
+            order=jnp.pad(table.order, (0, tpad)),
+        )
+    return AidwPlan(spec=pln.spec, table=table, points_xy=points_xy,
+                    values=values, n_points=m, area=pln.area, cfg=pln.cfg)
+
+
+def plan_host_points(pln: AidwPlan) -> np.ndarray:
+    """The TRUE (n_points, 3) dataset from a (possibly capacity-padded) plan."""
+    return np.concatenate(
+        [np.asarray(pln.points_xy)[:pln.n_points],
+         np.asarray(pln.values)[:pln.n_points, None]], axis=1)
 
 
 @dataclass(frozen=True)
@@ -243,9 +322,7 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
         max_level = cfg.max_level if cfg.max_level is not None \
             else K.auto_max_level(pln.spec, pln.n_points, cfg.k)
         if host_points is None:
-            host_points = np.concatenate(
-                [np.asarray(pln.points_xy),
-                 np.asarray(pln.values)[:, None]], axis=1)
+            host_points = plan_host_points(pln)
         part = SlabPartition.build(pln.spec, host_points,
                                    int(mesh.shape[ring_axis]),
                                    halo=max_level)
@@ -256,9 +333,13 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
             rps=part.rps, halo=part.halo, max_level=max_level)
     from .distributed import pad_to_multiple
 
+    # pad to a CAPACITY bucket (64 rows per ring device), not just to the
+    # device count: like the other layouts, churn that stays inside the
+    # bucket keeps the ring executor's shapes (and its compiled trace) stable
     pts = pad_to_multiple(
-        jnp.concatenate([pln.points_xy, pln.values[:, None]], axis=1),
-        mesh.shape[ring_axis])
+        jnp.concatenate([pln.points_xy[:pln.n_points],
+                         pln.values[:pln.n_points, None]], axis=1),
+        PLAN_PAD_MULTIPLE * int(mesh.shape[ring_axis]))
     pts = jax.device_put(
         pts, NamedSharding(mesh, PartitionSpec(ring_axis, None)))
     return ShardedAidwPlan(base=pln, mesh=mesh, layout="ring",
@@ -330,9 +411,10 @@ def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
     spec = G.plan_grid(np.asarray(points_xyz[:, :2]), qd,
                        cell_factor=cfg.cell_factor)
     table = G.bin_points(spec, px, py, pz) if bin else None
-    return AidwPlan(spec=spec, table=table, points_xy=points_xyz[:, :2],
-                    values=pz, n_points=points_xyz.shape[0],
-                    area=_study_area(spec), cfg=cfg)
+    return pad_plan(AidwPlan(
+        spec=spec, table=table, points_xy=points_xyz[:, :2],
+        values=pz, n_points=points_xyz.shape[0],
+        area=_study_area(spec), cfg=cfg))
 
 
 def _stage1(spec: G.GridSpec, cfg: AidwConfig, table: G.CellTable, queries_xy):
@@ -343,6 +425,7 @@ def _stage1(spec: G.GridSpec, cfg: AidwConfig, table: G.CellTable, queries_xy):
 
 
 def _stage2(queries_xy, points_xy, values, alpha, cfg: AidwConfig):
+    """Global Eq. (1): returns ``(values, zero_weight_mask)``."""
     if cfg.stage2 == "tiled":
         from repro.kernels.aidw import ops as aidw_ops
 
@@ -350,47 +433,88 @@ def _stage2(queries_xy, points_xy, values, alpha, cfg: AidwConfig):
             queries_xy, points_xy, values, alpha,
             tile_q=cfg.tile_q, tile_d=cfg.tile_d, interpret=cfg.interpret,
         )
-    return A.weighted_interpolate(queries_xy, points_xy, values, alpha,
-                                  cfg.interp_block, cfg.interp_data_block)
+    swz, sw = A.weighted_partial_sums(queries_xy, points_xy, values, alpha,
+                                      cfg.interp_block, cfg.interp_data_block)
+    return A.guarded_values(swz, sw)
 
 
 def _stage2_fused(queries_xy, points_xy, values, r_obs, n_points, area,
                   cfg: AidwConfig):
-    """Alpha-in-kernel Stage 2: Eqs. (2)/(4)/(5)/(6) + Eq. (1) in ONE launch."""
+    """Alpha-in-kernel Stage 2: Eqs. (2)/(4)/(5)/(6) + Eq. (1) in ONE launch.
+
+    Returns ``(values, zero_weight_mask)``; ``n_points``/``area`` ride
+    through as traced scalars."""
     from repro.kernels.aidw import ops as aidw_ops
 
     return aidw_ops.fused_stage2(
         queries_xy, points_xy, values, r_obs,
-        n_points=float(n_points), area=float(area), alphas=tuple(cfg.alphas),
-        r_min=cfg.r_min, r_max=cfg.r_max,
+        n_points=jnp.float32(n_points), area=jnp.float32(area),
+        alphas=tuple(cfg.alphas), r_min=cfg.r_min, r_max=cfg.r_max,
         tile_q=cfg.tile_q, tile_d=cfg.tile_d, interpret=cfg.interpret,
     )
 
 
-def _execute_core(spec: G.GridSpec, cfg: AidwConfig, n_points: int,
-                  area: float, table: G.CellTable, points_xy, values,
-                  queries_xy):
-    """Stage 1 + Stage 2 over a prebuilt plan (jit-safe; spec/cfg static)."""
+def _stage2_local(knn_res: K.KnnResult, values, r_obs, alpha, n_points, area,
+                  cfg: AidwConfig):
+    """Local (exact-k) Eq. (1) over the merged Stage-1 neighbours.
+
+    ``fused=True`` launches the Pallas gather+weighting kernel at the
+    session's alpha (neighbour gather + sequential weighting in ONE
+    launch); otherwise the jnp top-k path gathers ``values[idx]`` and runs
+    :func:`repro.core.aidw.topk_weighted_partial_sums`.  Both return
+    ``(values, zero_weight_mask)``; eagerly they are bit-identical
+    (sequential k-axis accumulation; the kernel's lane padding is a no-op —
+    tests/test_kernels.py), under jit XLA's FMA contraction on the jnp
+    path can shift values by 1 ulp.
+    The alpha-in-kernel variant
+    (:func:`repro.kernels.aidw.ops.fused_local_stage2`) stays kernel-layer
+    only: recomputing Eqs. (2)-(6) inside the interpreter and outside jit
+    can differ from the compiled host chain by ~1 ulp, which would break
+    the session's fused==unfused bitwise contract.
+    """
+    if cfg.fused:
+        from repro.kernels.aidw import ops as aidw_ops
+
+        return aidw_ops.local_interpolate(
+            knn_res.d2, knn_res.idx, values, alpha,
+            tile_q=cfg.tile_q, interpret=cfg.interpret,
+        )
+    z = values[knn_res.idx]
+    swz, sw = A.topk_weighted_partial_sums(knn_res.d2, z, alpha)
+    return A.guarded_values(swz, sw)
+
+
+def _execute_core(spec: G.GridSpec, cfg: AidwConfig, area: float,
+                  table: G.CellTable, points_xy, values, queries_xy,
+                  n_points):
+    """Stage 1 + Stage 2 over a prebuilt plan (jit-safe; spec/cfg/area
+    static, ``n_points`` TRACED so churn never retraces).  Returns
+    ``(values, alpha, r_obs, overflow_mask, zero_weight_mask)``."""
     _EXECUTE_TRACES[0] += 1
+    n_points = jnp.float32(n_points)
     res, r_obs = _stage1(spec, cfg, table, queries_xy)
     alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=cfg.alphas,
                              r_min=cfg.r_min, r_max=cfg.r_max)
-    if cfg.fused and cfg.stage2 == "tiled":
-        out = _stage2_fused(queries_xy, points_xy, values, r_obs,
-                            n_points, area, cfg)
+    if cfg.stage2 == "local":
+        out, zero = _stage2_local(res, values, r_obs, alpha, n_points, area,
+                                  cfg)
+    elif cfg.fused and cfg.stage2 == "tiled":
+        out, zero = _stage2_fused(queries_xy, points_xy, values, r_obs,
+                                  n_points, area, cfg)
     else:
-        out = _stage2(queries_xy, points_xy, values, alpha, cfg)
-    return out, alpha, r_obs, res.overflow
+        out, zero = _stage2(queries_xy, points_xy, values, alpha, cfg)
+    return out, alpha, r_obs, res.overflow, zero
 
 
-# The session entry points: one compiled executable per (spec, cfg, n_points,
-# area, array shapes).  Bucketed query padding makes the shape key coarse, so
-# repeated odd-sized batches all hit the same executable.  The donating
-# variant gives up the padded query buffer (argnums 7) — see the module
-# docstring's donation rules.
-_session_execute = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3))
-_session_execute_donate = jax.jit(_execute_core, static_argnums=(0, 1, 2, 3),
-                                  donate_argnums=(7,))
+# The session entry points: one compiled executable per (spec, cfg, area,
+# array shapes) — n_points is traced (argnum 7), so dataset churn inside one
+# capacity bucket reuses the executable.  Bucketed query padding makes the
+# shape key coarse, so repeated odd-sized batches all hit the same
+# executable.  The donating variant gives up the padded query buffer
+# (argnums 6) — see the module docstring's donation rules.
+_session_execute = jax.jit(_execute_core, static_argnums=(0, 1, 2))
+_session_execute_donate = jax.jit(_execute_core, static_argnums=(0, 1, 2),
+                                  donate_argnums=(6,))
 
 
 # Mesh-parallel session entry points: one jitted shard_map wrapper per
@@ -409,19 +533,20 @@ def sharded_session_execute(mesh: Mesh, donate: bool = False):
     if fn is None:
         axes = tuple(mesh.axis_names)
 
-        def run(spec, cfg, n_points, area, table, points_xy, values,
-                queries_xy):
+        def run(spec, cfg, area, table, points_xy, values, queries_xy,
+                n_points):
             body = shard_map(
-                partial(_execute_core, spec, cfg, n_points, area),
+                partial(_execute_core, spec, cfg, area),
                 mesh=mesh,
                 in_specs=(PartitionSpec(), PartitionSpec(), PartitionSpec(),
-                          PartitionSpec(axes, None)),
+                          PartitionSpec(axes, None), PartitionSpec()),
                 out_specs=PartitionSpec(axes),
             )
-            return body(table, points_xy, values, queries_xy)
+            return body(table, points_xy, values, queries_xy,
+                        jnp.float32(n_points))
 
-        fn = jax.jit(run, static_argnums=(0, 1, 2, 3),
-                     donate_argnums=(7,) if donate else ())
+        fn = jax.jit(run, static_argnums=(0, 1, 2),
+                     donate_argnums=(6,) if donate else ())
         _SHARDED_EXECUTE_CACHE[key] = fn
     return fn
 
@@ -433,15 +558,19 @@ def ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig):
     """The ring-rotation executor for a ``layout='ring'`` sharded plan.
 
     Returns ``fn(points_xyz_padded, queries_xy, n_points, area) ->
-    (values, alpha, r_obs)``; brute-force ring kNN, so ~1e-5 of the grid
-    path, never bitwise (module docstring, 'Sharding rules')."""
+    (values, alpha, r_obs, zero_weight_mask)``; brute-force ring kNN, so
+    ~1e-5 of the grid path, never bitwise (module docstring, 'Sharding
+    rules').  ``cfg.stage2='local'`` skips the Stage-2 interpolation
+    rotation and weights the k merged neighbours directly."""
     from .distributed import make_ring_aidw
 
-    key = (mesh, ring_axis, cfg.k, tuple(cfg.alphas), cfg.r_min, cfg.r_max)
+    key = (mesh, ring_axis, cfg.k, tuple(cfg.alphas), cfg.r_min, cfg.r_max,
+           cfg.stage2 == "local")
     fn = _RING_EXECUTE_CACHE.get(key)
     if fn is None:
         fn = make_ring_aidw(mesh, ring_axis, k=cfg.k, alphas=cfg.alphas,
                             r_min=cfg.r_min, r_max=cfg.r_max,
+                            stage2_local=cfg.stage2 == "local",
                             return_stats=True)
         _RING_EXECUTE_CACHE[key] = fn
     return fn
@@ -455,12 +584,15 @@ def grid_ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig,
                               max_level: int):
     """The grid-aware ring executor for a ``layout='grid_ring'`` plan.
 
-    Returns ``fn(sx, sy, cell_start, row_lo, bx, by, bz, queries, n_points,
-    area) -> (values, alpha, r_obs, overflow, n_candidates)`` — see
+    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
+    n_points, area) -> (values, alpha, r_obs, overflow, n_candidates,
+    zero_weight_mask)`` — see
     :func:`repro.core.distributed.make_grid_ring_aidw`.  Cached per
     (mesh, ring_axis, cfg, slab geometry): a delta update that keeps the
     spec reuses the compiled executable, and because ``n_points`` is traced
     a delta that RESIZES the dataset reuses it too.
+    ``cfg.stage2='local'`` drops the Stage-2 block rotation entirely —
+    values come straight from the merged (d2, z) neighbour carry.
     """
     key = (mesh, ring_axis, cfg, spec, rps, halo, max_level)
     fn = _GRID_RING_EXECUTE_CACHE.get(key)
@@ -471,21 +603,24 @@ def grid_ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig,
             mesh, ring_axis, spec=spec, rps=rps, halo=halo,
             max_level=max_level, k=cfg.k, window=cfg.window,
             knn_block=cfg.knn_block, alphas=cfg.alphas, r_min=cfg.r_min,
-            r_max=cfg.r_max, return_stats=True)
+            r_max=cfg.r_max, stage2_local=cfg.stage2 == "local",
+            return_stats=True)
         _GRID_RING_EXECUTE_CACHE[key] = fn
     return fn
 
 
 # Fleet-partitioning shard executes (repro.serving.cluster.fleet): a shard
-# host answers Stage 1 (its shard's kNN distances, for the client-side k-way
-# merge) and Stage 2 partial sums (at the client-merged alpha) as two
-# separate passes over ITS plan — never a full interpolation.
+# host answers Stage 1 (its shard's kNN distances AND neighbour values — the
+# per-shard top-k heap the client k-way merges) and Stage 2 partial sums (at
+# the client-merged alpha) as two separate passes over ITS plan — never a
+# full interpolation.  In local Stage-2 mode the merged (d2, z) heap alone
+# finishes the query client-side and the partial-sum pass is skipped.
 
 
 def _shard_knn_core(spec: G.GridSpec, cfg: AidwConfig, table: G.CellTable,
-                    queries_xy):
+                    values, queries_xy):
     res, _ = _stage1(spec, cfg, table, queries_xy)
-    return res.d2, res.overflow
+    return res.d2, values[res.idx], res.overflow
 
 
 def _shard_partial_core(cfg: AidwConfig, points_xy, values, queries_xy,
@@ -528,8 +663,7 @@ def plan_delta(pln: AidwPlan, inserts=None, deletes=None, *,
     if host_points is not None:
         old = np.asarray(host_points)
     else:
-        old = np.concatenate([np.asarray(pln.points_xy),
-                              np.asarray(pln.values)[:, None]], axis=1)
+        old = plan_host_points(pln)
     keep = np.ones(pln.n_points, bool)
     if n_del:
         keep[dels] = False
@@ -550,11 +684,11 @@ def plan_delta(pln: AidwPlan, inserts=None, deletes=None, *,
     # unbinned (ring-layout) plans skip the CSR patch — nothing reads it
     table = None if pln.table is None else \
         G.rebin_delta(spec, pln.table, inserts=ins, deletes=dels)
-    new_plan = AidwPlan(
+    new_plan = pad_plan(AidwPlan(
         spec=spec, table=table,
         points_xy=jnp.asarray(new_pts[:, :2]),
         values=jnp.asarray(new_pts[:, 2]),
-        n_points=new_pts.shape[0], area=pln.area, cfg=pln.cfg)
+        n_points=new_pts.shape[0], area=pln.area, cfg=pln.cfg))
     return new_plan, new_pts
 
 
@@ -566,6 +700,7 @@ def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:
     """
     queries_xy = jnp.asarray(queries_xy)
     cfg = pln.cfg
+    n_points = jnp.float32(pln.n_points)  # same op chain as the traced path
 
     t0 = time.perf_counter()
     res, r_obs = _stage1(pln.spec, cfg, pln.table, queries_xy)
@@ -573,13 +708,17 @@ def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:
         r_obs.block_until_ready()
     t1 = time.perf_counter()
 
-    alpha = A.adaptive_alpha(r_obs, pln.n_points, pln.area, alphas=cfg.alphas,
+    alpha = A.adaptive_alpha(r_obs, n_points, pln.area, alphas=cfg.alphas,
                              r_min=cfg.r_min, r_max=cfg.r_max)
-    if cfg.fused and cfg.stage2 == "tiled":
-        values = _stage2_fused(queries_xy, pln.points_xy, pln.values, r_obs,
-                               pln.n_points, pln.area, cfg)
+    if cfg.stage2 == "local":
+        values, zero = _stage2_local(res, pln.values, r_obs, alpha,
+                                     n_points, pln.area, cfg)
+    elif cfg.fused and cfg.stage2 == "tiled":
+        values, zero = _stage2_fused(queries_xy, pln.points_xy, pln.values,
+                                     r_obs, n_points, pln.area, cfg)
     else:
-        values = _stage2(queries_xy, pln.points_xy, pln.values, alpha, cfg)
+        values, zero = _stage2(queries_xy, pln.points_xy, pln.values, alpha,
+                               cfg)
     if timings:
         values.block_until_ready()
     t2 = time.perf_counter()
@@ -589,6 +728,7 @@ def execute(pln: AidwPlan, queries_xy, *, timings: bool = False) -> AidwResult:
         overflow=int(jnp.sum(res.overflow)),
         timings={"knn": t1 - t0, "interp": t2 - t1} if timings else {},
         overflow_mask=res.overflow,
+        zero_weight_mask=zero,
     )
 
 
@@ -628,7 +768,8 @@ def aidw_original(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),
                        cell_factor=cfg.cell_factor)
     alpha = A.adaptive_alpha(r_obs, points_xyz.shape[0], _study_area(spec),
                              alphas=cfg.alphas, r_min=cfg.r_min, r_max=cfg.r_max)
-    values = _stage2(queries_xy, points_xyz[:, :2], points_xyz[:, 2], alpha, cfg)
+    values, zero = _stage2(queries_xy, points_xyz[:, :2], points_xyz[:, 2],
+                           alpha, cfg)
     if timings:
         values.block_until_ready()
     t2 = time.perf_counter()
@@ -636,6 +777,7 @@ def aidw_original(points_xyz, queries_xy, cfg: AidwConfig = AidwConfig(),
     return AidwResult(
         values=values, alpha=alpha, r_obs=r_obs,
         timings={"knn": t1 - t0, "interp": t2 - t1} if timings else {},
+        zero_weight_mask=zero,
     )
 
 
@@ -645,4 +787,5 @@ def idw_standard(points_xyz, queries_xy, alpha: float = 2.0,
     points_xyz = jnp.asarray(points_xyz)
     queries_xy = jnp.asarray(queries_xy)
     return _stage2(queries_xy, points_xyz[:, :2], points_xyz[:, 2],
-                   jnp.full((queries_xy.shape[0],), alpha, points_xyz.dtype), cfg)
+                   jnp.full((queries_xy.shape[0],), alpha,
+                            points_xyz.dtype), cfg)[0]

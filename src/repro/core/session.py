@@ -18,7 +18,12 @@ session keeps the build resident and makes the per-query path cheap:
   Plan arrays are never donated ('Donation rules').
 * ``fused Stage 2`` — with ``AidwConfig(stage2='tiled', fused=True)`` the
   adaptive-alpha determination runs inside the Pallas weighting kernel: one
-  launch for the whole Stage 2.
+  launch for the whole Stage 2.  ``stage2='local'`` instead truncates
+  Eq. (1) to the k merged Stage-1 neighbours (O(k) per query, identical
+  r_obs/alpha, values within the documented far-field-tail tolerance;
+  ``fused=True`` routes the neighbour gather + weighting through one
+  Pallas launch).  Every layout supports it; ``grid_ring`` additionally
+  drops its whole Stage-2 ring rotation.
 * ``mesh``        — with ``mesh=``, one session serves queries across every
   device of the mesh ('Sharding rules'): the plan is placed once via
   :func:`repro.core.pipeline.shard_plan` (CSR table + points replicated;
@@ -223,7 +228,10 @@ class InterpolationSession:
         return b
 
     def _run(self, qp, donate: bool):
-        """Dispatch one padded bucket to the right executable."""
+        """Dispatch one padded bucket to the right executable.
+
+        Every branch returns the same 5-tuple:
+        ``(values, alpha, r_obs, overflow_mask, zero_weight_mask)``."""
         pln = self._plan
         if self._layout == "grid_ring":
             sp = self._splan
@@ -231,34 +239,35 @@ class InterpolationSession:
                 sp.mesh, sp.ring_axis, pln.cfg, pln.spec, sp.rps, sp.halo,
                 sp.max_level)
             arr = sp.slab_arrays
-            values, alpha, r_obs, overflow, cand = fn(
-                arr["sx"], arr["sy"], arr["cell_start"], arr["row_lo"],
-                arr["bx"], arr["by"], arr["bz"], qp,
+            values, alpha, r_obs, overflow, cand, zero = fn(
+                arr["sx"], arr["sy"], arr["sz"], arr["cell_start"],
+                arr["row_lo"], arr["bx"], arr["by"], arr["bz"], qp,
                 jnp.float32(pln.n_points), jnp.float32(pln.area))
             # Stage-1 candidate counts (device array; no sync here — the
             # benchmark census reads it after the batch materializes)
             self.last_stage1_candidates = cand
-            return values, alpha, r_obs, overflow
+            return values, alpha, r_obs, overflow, zero
         if self._layout == "ring":
             sp = self._splan
             fn = P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
-            values, alpha, r_obs = fn(
+            values, alpha, r_obs, zero = fn(
                 sp.ring_points, qp, jnp.float32(pln.n_points),
                 jnp.float32(pln.area))
-            return values, alpha, r_obs, jnp.zeros(qp.shape[0], bool)
+            return values, alpha, r_obs, jnp.zeros(qp.shape[0], bool), zero
         if self._mesh is not None:
             fn = P.sharded_session_execute(self._mesh, donate)
         else:
             fn = P._session_execute_donate if donate else P._session_execute
-        return fn(pln.spec, pln.cfg, pln.n_points, pln.area,
-                  pln.table, pln.points_xy, pln.values, qp)
+        return fn(pln.spec, pln.cfg, pln.area,
+                  pln.table, pln.points_xy, pln.values, qp, pln.n_points)
 
     def knn(self, queries_xy):
-        """Stage 1 only: (d2 (n, k) ascending, overflow mask) against THIS
-        session's dataset — a shard host's local pass for the serving
-        fleet's client-side k-way merge
-        (``repro.serving.cluster.fleet.ShardedAidwCluster``).  Needs a
-        binned plan (single-device or replicated layout)."""
+        """Stage 1 only: (d2 (n, k) ascending, neighbour VALUES z (n, k),
+        overflow mask) against THIS session's dataset — a shard host's
+        local top-k heap for the serving fleet's client-side k-way merge
+        (``repro.serving.cluster.fleet.ShardedAidwCluster``; local Stage-2
+        mode finishes the query from the merged (d2, z) heap alone).
+        Needs a binned plan (single-device or replicated layout)."""
         if self._plan.table is None:
             raise ValueError(
                 "shard kNN needs a binned plan (single/replicated layout)")
@@ -266,9 +275,10 @@ class InterpolationSession:
         n = q.shape[0]
         b = self._bucket(n)
         qp = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge") if b != n else q
-        d2, ovf = P._shard_knn_execute(self._plan.spec, self._plan.cfg,
-                                       self._plan.table, qp)
-        return d2[:n], ovf[:n]
+        d2, z, ovf = P._shard_knn_execute(
+            self._plan.spec, self._plan.cfg, self._plan.table,
+            self._plan.values, qp)
+        return d2[:n], z[:n], ovf[:n]
 
     def partial_interpolate(self, queries_xy, alpha):
         """Stage-2 partial sums (sum w*z, sum w) of Eq. (1) over THIS
@@ -296,12 +306,13 @@ class InterpolationSession:
         qp = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge") if b != n else q
         # donate only the padded copy we created — never the caller's array
         # (donation rules in the pipeline module docstring)
-        values, alpha, r_obs, overflow = self._run(
+        values, alpha, r_obs, overflow, zero = self._run(
             qp, self._donate and qp is not q)
         res = P.AidwResult(
             values=values[:n], alpha=alpha[:n], r_obs=r_obs[:n],
             overflow=int(jnp.sum(overflow[:n])),
             overflow_mask=overflow[:n],
+            zero_weight_mask=zero[:n],
         )
         if timings:
             res.values.block_until_ready()

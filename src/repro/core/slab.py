@@ -268,8 +268,9 @@ class SlabPartition:
         ``pad_multiple``, so balanced churn rarely changes array shapes
         and the compiled executables survive).
 
-        Stage 1 rotates the halo'd slab tables (``sx``/``sy``/
-        ``cell_start``/``row_lo``; values are never needed for kNN).
+        Stage 1 rotates the halo'd slab tables (``sx``/``sy``/``sz``/
+        ``cell_start``/``row_lo``; ``sz`` rides along for LOCAL Stage-2
+        mode, whose in-scan gather gathers values by slab-sorted index).
         Stage 2 rotates SEPARATE owned-only blocks (``bx``/``by``/``bz``)
         — halo copies must not contribute to the global Eq. (1) sum twice,
         and carrying them as dead padded lanes would widen every Stage-2
@@ -285,6 +286,7 @@ class SlabPartition:
         zt = self.tables[0].sz.dtype if self.tables else np.float32
         sx = np.full((self.p, cap), PAD_COORD, dt)
         sy = np.full((self.p, cap), PAD_COORD, dt)
+        sz = np.zeros((self.p, cap), zt)
         cell_start = np.stack([np.asarray(t.cell_start, np.int32)
                                for t in self.tables])
         n_cols = self.spec.n_cols
@@ -293,6 +295,7 @@ class SlabPartition:
             n_s = t.sx.shape[0]
             sx[s, :n_s] = t.sx
             sy[s, :n_s] = t.sy
+            sz[s, :n_s] = t.sz
             if self._owned[s] is None:      # build, or this slab was touched
                 rows = np.repeat(
                     np.arange(cell_start.shape[1] - 1, dtype=np.int64),
@@ -309,7 +312,7 @@ class SlabPartition:
             bx[s, :n_o] = t.sx[o]
             by[s, :n_o] = t.sy[o]
             bz[s, :n_o] = t.sz[o]
-        return {"sx": sx, "sy": sy, "cell_start": cell_start,
+        return {"sx": sx, "sy": sy, "sz": sz, "cell_start": cell_start,
                 "row_lo": (np.arange(self.p) * self.rps).astype(np.int32),
                 "bx": bx, "by": by, "bz": bz}
 

@@ -1,5 +1,6 @@
 """Tiled AIDW Stage-2 Pallas kernel (VMEM analogue of the paper's shared-memory tiling)."""
 
 from . import ops, ref
-from .aidw_kernel import tiled_interpolate_kernel
-from .ops import fused_stage2, tiled_interpolate
+from .aidw_kernel import local_interpolate_kernel, tiled_interpolate_kernel
+from .ops import (fused_local_stage2, fused_stage2, local_interpolate,
+                  tiled_interpolate)

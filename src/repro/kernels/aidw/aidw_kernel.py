@@ -42,21 +42,21 @@ DEFAULT_TILE_D = 512
 
 
 def _alpha_from_r_obs(r_obs, n_points, area, alphas, r_min, r_max):
-    """Eqs. (2)->(4)->(5)->(6) — jnp only, safe inside the kernel."""
-    r_exp = 1.0 / (2.0 * jnp.sqrt(n_points / area))
-    r_stat = r_obs / r_exp
-    mu = 0.5 - 0.5 * jnp.cos(jnp.pi / r_max * (r_stat - r_min))
-    mu = jnp.where(r_stat <= r_min, 0.0, jnp.where(r_stat >= r_max, 1.0, mu))
-    return A.alpha_from_membership(mu, alphas)
+    """Eqs. (2)->(4)->(5)->(6) — delegates to the canonical jnp chain so the
+    in-kernel alpha is bit-identical to the two-launch path's
+    :func:`repro.core.aidw.adaptive_alpha` (jnp only, safe inside a kernel)."""
+    return A.adaptive_alpha(r_obs, n_points, area, alphas=alphas,
+                            r_min=r_min, r_max=r_max)
 
 
 def _interp_kernel(
     qx_ref, qy_ref, aux_ref,            # queries: (TQ, 1); aux = alpha or r_obs
+    stats_ref,                          # SMEM (1, 2): (n_points, area), traced
     px_ref, py_ref, pz_ref,             # data:    (1, TD)
-    out_ref,                            # output:  (TQ, 1)
+    out_ref, sumw_ref,                  # outputs: (TQ, 1) values / weight sums
     sum_w, sum_wz, alpha_s,             # scratch: (TQ, 1) f32
     *, n_dblocks: int, fused: bool,
-    n_points: float, area: float, alphas, r_min: float, r_max: float,
+    alphas, r_min: float, r_max: float,
 ):
     j = pl.program_id(1)
 
@@ -67,7 +67,7 @@ def _interp_kernel(
         aux = aux_ref[...].astype(jnp.float32)
         if fused:
             alpha_s[...] = _alpha_from_r_obs(
-                aux, jnp.float32(n_points), jnp.float32(area), alphas, r_min, r_max)
+                aux, stats_ref[0, 0], stats_ref[0, 1], alphas, r_min, r_max)
         else:
             alpha_s[...] = aux
 
@@ -87,20 +87,26 @@ def _interp_kernel(
 
     @pl.when(j == n_dblocks - 1)
     def _finish():
+        # zero-weight guard: a query whose every f32 weight underflowed gets
+        # the 0.0 sentinel (sum_wz is then also 0), never NaN; the caller
+        # derives the zero_weight_mask from the sumw output.
         denom = jnp.maximum(sum_w[...], jnp.float32(1e-30))
         out_ref[...] = (sum_wz[...] / denom).astype(out_ref.dtype)
+        sumw_ref[...] = sum_w[...].astype(sumw_ref.dtype)
 
 
 def tiled_interpolate_kernel(
-    qx, qy, aux, px, py, pz,
+    qx, qy, aux, stats, px, py, pz,
     *, tile_q: int = DEFAULT_TILE_Q, tile_d: int = DEFAULT_TILE_D,
-    fused: bool = False, n_points: float = 1.0, area: float = 1.0,
+    fused: bool = False,
     alphas=A.DEFAULT_ALPHAS, r_min: float = A.DEFAULT_R_MIN,
     r_max: float = A.DEFAULT_R_MAX, interpret: bool = False,
 ):
-    """Raw pallas_call wrapper.  Shapes: qx/qy/aux (n,1); px/py/pz (1,m).
+    """Raw pallas_call wrapper.  Shapes: qx/qy/aux (n,1); stats (1,2) f32
+    (n_points, area — TRACED, so dataset churn never retraces); px/py/pz (1,m).
 
-    n % tile_q == 0 and m % tile_d == 0 (ops.py pads).
+    Returns ``(values (n,1), sum_w (n,1))``.  n % tile_q == 0 and
+    m % tile_d == 0 (ops.py pads).
     """
     n, m = qx.shape[0], px.shape[1]
     assert n % tile_q == 0 and m % tile_d == 0, (n, tile_q, m, tile_d)
@@ -108,17 +114,20 @@ def tiled_interpolate_kernel(
 
     kernel = functools.partial(
         _interp_kernel, n_dblocks=grid[1], fused=fused,
-        n_points=n_points, area=area, alphas=tuple(alphas),
-        r_min=r_min, r_max=r_max,
+        alphas=tuple(alphas), r_min=r_min, r_max=r_max,
     )
     q_spec = pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0))
     d_spec = pl.BlockSpec((1, tile_d), lambda i, j: (0, j))
+    s_spec = pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                          memory_space=pltpu.SMEM)
+    o_spec = pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[q_spec, q_spec, q_spec, d_spec, d_spec, d_spec],
-        out_specs=pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), qx.dtype),
+        in_specs=[q_spec, q_spec, q_spec, s_spec, d_spec, d_spec, d_spec],
+        out_specs=(o_spec, o_spec),
+        out_shape=(jax.ShapeDtypeStruct((n, 1), qx.dtype),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)),
         scratch_shapes=[
             pltpu.VMEM((tile_q, 1), jnp.float32),
             pltpu.VMEM((tile_q, 1), jnp.float32),
@@ -128,4 +137,82 @@ def tiled_interpolate_kernel(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qx, qy, aux, px, py, pz)
+    )(qx, qy, aux, stats, px, py, pz)
+
+
+def _local_kernel(
+    d2_ref, idx_ref,                    # (TQ, KP): merged Stage-1 neighbours
+    aux_ref,                            # (TQ, 1): alpha, or r_obs when fused
+    stats_ref,                          # SMEM (1, 2): (n_points, area), traced
+    pz_ref,                             # (1, M): full data-value row
+    out_ref, sumw_ref,                  # outputs: (TQ, 1)
+    *, fused: bool, alphas, r_min: float, r_max: float,
+):
+    aux = aux_ref[...].astype(jnp.float32)
+    if fused:
+        alpha = _alpha_from_r_obs(
+            aux, stats_ref[0, 0], stats_ref[0, 1], alphas, r_min, r_max)
+    else:
+        alpha = aux                                   # (TQ, 1)
+
+    d2 = d2_ref[...].astype(jnp.float32)              # (TQ, KP)
+    # the fused gather: neighbour values pulled straight from the value row
+    # by the Stage-1 indices, no (n, m) rotation ever materializes
+    z = jnp.take(pz_ref[...][0], idx_ref[...], axis=0).astype(jnp.float32)
+    w = A.idw_weights_sq(d2, alpha)                   # same op chain as jnp path
+    wz = w * z
+    # sequential k-axis accumulation — the SAME pinned order as
+    # A.topk_weighted_partial_sums, so fused == unfused bitwise, and padded
+    # k slots (d2 = inf -> w = 0 exactly) leave every partial sum unchanged
+    swz, sw = wz[:, 0:1], w[:, 0:1]
+    for i in range(1, d2.shape[1]):
+        swz = swz + wz[:, i:i + 1]
+        sw = sw + w[:, i:i + 1]
+    zero = sw <= 0.0
+    vals = jnp.where(zero, jnp.float32(A.ZERO_WEIGHT_SENTINEL),
+                     swz / jnp.where(zero, 1.0, sw))
+    out_ref[...] = vals.astype(out_ref.dtype)
+    sumw_ref[...] = sw.astype(sumw_ref.dtype)
+
+
+def local_interpolate_kernel(
+    d2, idx, aux, stats, pz,
+    *, tile_q: int = DEFAULT_TILE_Q, fused: bool = False,
+    alphas=A.DEFAULT_ALPHAS, r_min: float = A.DEFAULT_R_MIN,
+    r_max: float = A.DEFAULT_R_MAX, interpret: bool = False,
+):
+    """Raw pallas_call wrapper for the local (exact-k) Stage-2 kernel.
+
+    Shapes: d2/idx (n, kp) — the k merged Stage-1 neighbours per query,
+    k-padded with ``d2 = inf`` slots; aux (n, 1) alpha (or r_obs when
+    ``fused``); stats (1, 2) f32 traced (n_points, area); pz (1, m) the full
+    value row the in-kernel gather reads through ``idx``.
+
+    One grid dimension over query tiles — each query touches only its k
+    neighbours, O(k) work instead of the global kernel's O(m) data axis.
+    Returns ``(values (n,1), sum_w (n,1))``.
+    """
+    n, kp = d2.shape
+    assert n % tile_q == 0, (n, tile_q)
+    grid = (n // tile_q,)
+
+    kernel = functools.partial(
+        _local_kernel, fused=fused, alphas=tuple(alphas),
+        r_min=r_min, r_max=r_max,
+    )
+    k_spec = pl.BlockSpec((tile_q, kp), lambda i: (i, 0))
+    q_spec = pl.BlockSpec((tile_q, 1), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((1, 2), lambda i: (0, 0), memory_space=pltpu.SMEM)
+    z_spec = pl.BlockSpec((1, pz.shape[1]), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[k_spec, k_spec, q_spec, s_spec, z_spec],
+        out_specs=(q_spec, q_spec),
+        out_shape=(jax.ShapeDtypeStruct((n, 1), aux.dtype),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(d2, idx, aux, stats, pz)

@@ -285,15 +285,19 @@ def fleet_partition(points_xyz, n_shards: int, *, query_domain=None,
 
 class ShardedQueryResult:
     """One fleet-merged query batch: values + the Stage-1 stats the merge
-    derived them from, plus the epoch every shard served under."""
+    derived them from, plus the epoch every shard served under.
+    ``zero_weight_mask`` marks queries whose f32 weight sum underflowed to
+    zero (value is the 0.0 sentinel, never NaN)."""
 
-    def __init__(self, values, alpha, r_obs, overflow_mask, epoch):
+    def __init__(self, values, alpha, r_obs, overflow_mask, epoch,
+                 zero_weight_mask=None):
         self.values = values
         self.alpha = alpha
         self.r_obs = r_obs
         self.overflow_mask = overflow_mask
         self.overflow = int(np.sum(overflow_mask))
         self.epoch = epoch
+        self.zero_weight_mask = zero_weight_mask
 
 
 class ShardedAidwCluster:
@@ -307,15 +311,21 @@ class ShardedAidwCluster:
     grid-ring layout's neighbour-heap merge):
 
     1. **kNN fan-out** — every host answers Stage 1 over its shard
-       (``shard_knn``: top-k squared distances via the paper's grid
-       search on the host's own plan).  The coordinator k-way merges the
-       per-shard heaps into the global top-k, from which r_obs and the
-       adaptive alpha (Eqs. 3-6) follow — using the GLOBAL point count and
-       the fleet spec's study area, which match a full-replica server's
-       plan bitwise (same ``plan_grid`` inputs).
+       (``shard_knn``: top-k squared distances AND the matching neighbour
+       VALUES via the paper's grid search on the host's own plan).  The
+       coordinator k-way merges the per-shard (d2, z) heaps into the
+       global top-k, from which r_obs and the adaptive alpha (Eqs. 3-6)
+       follow — using the GLOBAL point count and the fleet spec's study
+       area, which match a full-replica server's plan bitwise (same
+       ``plan_grid`` inputs).
     2. **partial-sum fan-out** — every host computes Eq. (1) partial sums
        over its shard at the merged alpha (``shard_partial``); the
-       coordinator sums across shards and divides once.
+       coordinator sums across shards and divides once.  With
+       ``AidwConfig(stage2='local')`` this whole phase DISAPPEARS: the
+       merged (d2, z) heap already holds everything local Eq. (1) needs,
+       so the coordinator finishes the query client-side — one fan-out
+       per batch instead of two, and no mid-batch epoch-straddle window
+       between phases.
 
     Every shard op is FIFO-serialized with epoch updates on its host's
     worker and stamped with the epoch it executed under; the coordinator
@@ -402,28 +412,50 @@ class ShardedAidwCluster:
                 else max(deadline - time.monotonic(), 0.0)
 
         k = self.cfg.k
+        local = self.cfg.stage2 == "local"
         last_epochs: set = set()
         for _ in range(max_retries):
             p1 = self._fanout(lambda h: h.shard_knn(q, timeout=rem()))
-            last_epochs = {r[2] for r in p1}
+            last_epochs = {r[3] for r in p1}
             if len(last_epochs) != 1:
                 continue                     # churn mid-fan-out: retry
             epoch = next(iter(last_epochs))
-            merged = np.sort(
-                np.concatenate([r[0] for r in p1], axis=1), axis=1)[:, :k]
+            # co-merge the per-shard (d2, z) heaps: stable argsort keeps
+            # the selected DISTANCES identical to a plain sorted merge
+            cat_d2 = np.concatenate([r[0] for r in p1], axis=1)
+            cat_z = np.concatenate([r[1] for r in p1], axis=1)
+            sel = np.argsort(cat_d2, axis=1, kind="stable")[:, :k]
+            merged = np.take_along_axis(cat_d2, sel, axis=1)
+            merged_z = np.take_along_axis(cat_z, sel, axis=1)
             r_obs = np.sqrt(np.maximum(merged, 0.0)).mean(axis=1)
             alpha = self._alpha(r_obs, epoch)
+            overflow_mask = self._merged_overflow(
+                q, merged, [r[2] for r in p1], epoch)
+            if local:
+                # local Stage 2: the merged heap IS the answer — no second
+                # fan-out, so no epoch-straddle window either
+                from repro.core import aidw as A
+
+                swz, sw = A.topk_weighted_partial_sums(
+                    merged.astype(np.float32), merged_z.astype(np.float32),
+                    alpha.astype(np.float32))
+                vals, zero = A.guarded_values(swz, sw)
+                return ShardedQueryResult(
+                    values=np.asarray(vals), alpha=alpha, r_obs=r_obs,
+                    overflow_mask=overflow_mask, epoch=epoch,
+                    zero_weight_mask=np.asarray(zero))
             p2 = self._fanout(
                 lambda h: h.shard_partial(q, alpha, timeout=rem()))
             last_epochs = {epoch} | {r[2] for r in p2}
             if len(last_epochs) == 1:
                 swz = np.sum([r[0] for r in p2], axis=0)
                 sw = np.sum([r[1] for r in p2], axis=0)
+                zero = sw <= 0.0
+                vals = np.where(zero, 0.0, swz / np.where(zero, 1.0, sw))
                 return ShardedQueryResult(
-                    values=swz / sw, alpha=alpha, r_obs=r_obs,
-                    overflow_mask=self._merged_overflow(
-                        q, merged, [r[1] for r in p1], epoch),
-                    epoch=epoch)
+                    values=vals, alpha=alpha, r_obs=r_obs,
+                    overflow_mask=overflow_mask, epoch=epoch,
+                    zero_weight_mask=zero)
             # an update landed between phases/hosts: the merge would mix
             # epochs — retry the whole batch (updates are rare vs queries)
         raise RuntimeError(

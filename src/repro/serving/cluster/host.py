@@ -98,8 +98,9 @@ class HostServer:
     # -- shard path (fleet data partitioning) --------------------------------
 
     def shard_knn(self, queries_xy, *, timeout: float | None = None):
-        """This shard's Stage-1 top-k distances (+ certification mask +
-        serving epoch) — FIFO-serialized with epoch updates on the worker
+        """This shard's Stage-1 top-k distances + neighbour values
+        (+ certification mask + serving epoch) — FIFO-serialized with
+        epoch updates on the worker
         (see :meth:`repro.serving.server.AsyncAidwServer.shard_knn`)."""
         return self.server.shard_knn(queries_xy, timeout=timeout)
 

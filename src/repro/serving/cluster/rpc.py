@@ -249,8 +249,8 @@ class RemoteHost:
         reply = self._call(
             "shard_knn", timeout=None if timeout is None else timeout + 30.0,
             q=enc_array(np.asarray(queries_xy)), wait_s=timeout)
-        return (dec_array(reply["d2"]), dec_array(reply["overflow"]),
-                reply.get("epoch"))
+        return (dec_array(reply["d2"]), dec_array(reply["z"]),
+                dec_array(reply["overflow"]), reply.get("epoch"))
 
     def shard_partial(self, queries_xy, alpha, *,
                       timeout: float | None = None):
@@ -446,10 +446,10 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                     updates.pop(int(msg["epoch"]), None)
                 reply(mid, ok=1)
             elif op == "shard_knn":
-                d2, ovf, epoch = host.shard_knn(dec_array(msg["q"]),
-                                                timeout=msg.get("wait_s"))
-                reply(mid, d2=enc_array(d2), overflow=enc_array(ovf),
-                      epoch=epoch)
+                d2, z, ovf, epoch = host.shard_knn(dec_array(msg["q"]),
+                                                   timeout=msg.get("wait_s"))
+                reply(mid, d2=enc_array(d2), z=enc_array(z),
+                      overflow=enc_array(ovf), epoch=epoch)
             elif op == "shard_partial":
                 swz, sw, epoch = host.shard_partial(
                     dec_array(msg["q"]), dec_array(msg["alpha"]),

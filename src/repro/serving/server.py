@@ -75,9 +75,10 @@ class _ShardOp:
     epoch it executed under, so the fleet can detect (and retry) a query
     whose two phases straddled an update.
 
-    ``kind``: ``"knn"`` (Stage 1 — this shard's top-k squared distances +
-    certification mask) or ``"partial"`` (Stage 2 — Eq. (1) partial sums
-    at the client-merged per-query ``alpha``).
+    ``kind``: ``"knn"`` (Stage 1 — this shard's top-k squared distances,
+    the matching neighbour values, and the certification mask) or
+    ``"partial"`` (Stage 2 — Eq. (1) partial sums at the client-merged
+    per-query ``alpha``; skipped entirely in local Stage-2 mode).
     """
 
     kind: str
@@ -302,11 +303,13 @@ class AsyncAidwServer:
 
     def shard_knn(self, queries_xy, *, timeout: float | None = None):
         """Stage-1-only pass over THIS server's dataset: returns
-        ``(d2 (n, k), overflow (n,), epoch)``.  The fleet's
+        ``(d2 (n, k), z (n, k), overflow (n,), epoch)`` — this shard's
+        top-k heap of squared distances AND neighbour values.  The fleet's
         data-partitioned query path fans this out to every shard host and
-        k-way merges the distances client-side; FIFO-serialized with
-        dataset updates through the admission queue (the returned epoch is
-        the witness)."""
+        k-way merges (d2, z) client-side; in local Stage-2 mode the merged
+        heap alone finishes the query (no partial-sum phase).
+        FIFO-serialized with dataset updates through the admission queue
+        (the returned epoch is the witness)."""
         return self._run_shard_op(_ShardOp(
             kind="knn", queries=validate_queries(queries_xy)), timeout)
 
@@ -456,8 +459,8 @@ class AsyncAidwServer:
             return
         try:
             if op.kind == "knn":
-                d2, ovf = self.session.knn(op.queries)
-                op.result = (np.asarray(d2), np.asarray(ovf))
+                d2, z, ovf = self.session.knn(op.queries)
+                op.result = (np.asarray(d2), np.asarray(z), np.asarray(ovf))
             elif op.kind == "partial":
                 swz, sw = self.session.partial_interpolate(op.queries,
                                                            op.alpha)

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import pytest
 from hypcompat import given, settings, st  # guarded: skips, never dies, without hypothesis
 
-from repro.core import (AidwConfig, adaptive_alpha, aidw_improved,
-                        aidw_original, alpha_from_membership, fuzzy_membership,
-                        idw_standard)
+from repro.core import (AidwConfig, InterpolationSession, adaptive_alpha,
+                        aidw_improved, aidw_original, alpha_from_membership,
+                        fuzzy_membership, idw_standard, weighted_interpolate)
 
 import sys
 from pathlib import Path
@@ -119,3 +119,51 @@ def test_aidw_more_accurate_than_idw():
     idw = np.asarray(idw_standard(pts, qs, alpha=2.0))
     rmse = lambda a: float(np.sqrt(np.mean((a - truth) ** 2)))
     assert rmse(aidw) < rmse(idw)
+
+
+# ---------------------------------------------------------------------------
+# zero-weight guard (the PR 6 bugfix): a query so far from all data that
+# every f32 weight underflows to zero must yield the 0.0 sentinel + mask,
+# never NaN — in the jnp path, the Pallas path, and the session end to end.
+# ---------------------------------------------------------------------------
+
+
+def _far_batch(qs, n_near=7):
+    far = np.array([[1e18, 1e18]], np.float32)
+    return np.concatenate([np.asarray(qs[:n_near]), far]).astype(np.float32)
+
+
+def test_weighted_interpolate_far_query_no_nan(spatial_data):
+    """Direct Eq. (1): the guarded division never emits NaN, and guarded
+    results stay bitwise the unguarded ones wherever the sum is nonzero."""
+    from repro.core import aidw as A
+
+    pts, qs = spatial_data
+    batch = jnp.asarray(_far_batch(qs))
+    p, z = jnp.asarray(pts[:, :2]), jnp.asarray(pts[:, 2])
+    out = weighted_interpolate(batch, p, z, 4.0)
+    assert not np.isnan(np.asarray(out)).any()
+    assert np.asarray(out)[-1] == A.ZERO_WEIGHT_SENTINEL
+    swz, sw = A.weighted_partial_sums(batch, p, z, jnp.full((8,), 4.0))
+    vals, mask = A.guarded_values(swz, sw)
+    assert np.asarray(mask)[-1] and not np.asarray(mask)[:-1].any()
+    near = ~np.asarray(mask)
+    assert np.array_equal(np.asarray(vals)[near],
+                          np.asarray(swz / sw)[near])   # guard is a no-op
+
+
+@pytest.mark.parametrize("stage2,fused", [("naive", False), ("tiled", False),
+                                          ("tiled", True)])
+def test_session_far_query_no_nan(spatial_data, stage2, fused):
+    """End to end through every global Stage-2 route (jnp, Pallas tiled,
+    fused alpha-in-kernel): sentinel value + raised zero_weight_mask."""
+    pts, qs = spatial_data
+    cfg = AidwConfig(stage2=stage2, fused=fused, interpret=True,
+                     tile_q=128, tile_d=256)
+    sess = InterpolationSession(pts, cfg, query_domain=qs)
+    res = sess.query(_far_batch(qs))
+    vals = np.asarray(res.values)
+    mask = np.asarray(res.zero_weight_mask)
+    assert not np.isnan(vals).any()
+    assert mask[-1] and vals[-1] == 0.0
+    assert not mask[:-1].any()

@@ -28,18 +28,19 @@ def _data(n, m, dtype, seed=0):
 ])
 def test_aidw_kernel_shapes_f32(n, m, tq, td):
     q, p, z, a = _data(n, m, jnp.float32)
-    out = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=tq, tile_d=td,
-                                     interpret=True)
+    out, zero = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=tq, tile_d=td,
+                                           interpret=True)
     want = aidw_ref.interpolate_ref(q, p, z, a)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+    assert not np.asarray(zero).any()
 
 
 @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 5e-2)])
 def test_aidw_kernel_dtypes(dtype, tol):
     q, p, z, a = _data(300, 600, dtype)
-    out = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=128, tile_d=256,
-                                     interpret=True)
+    out, _ = aidw_ops.tiled_interpolate(q, p, z, a, tile_q=128, tile_d=256,
+                                        interpret=True)
     want = aidw_ref.interpolate_ref(q, p, z, a)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), rtol=tol, atol=tol)
@@ -48,11 +49,73 @@ def test_aidw_kernel_dtypes(dtype, tol):
 def test_aidw_fused_alpha_kernel():
     q, p, z, _ = _data(300, 600, jnp.float32, seed=3)
     r_obs = jnp.asarray(np.random.default_rng(4).uniform(0, 0.1, 300), jnp.float32)
-    out = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=600, area=1.0,
-                                tile_q=128, tile_d=256, interpret=True)
+    out, _ = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=600, area=1.0,
+                                   tile_q=128, tile_d=256, interpret=True)
     want = aidw_ref.fused_stage2_ref(q, p, z, r_obs, n_points=600, area=1.0)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,k", [
+    (256, 512, 15), (300, 600, 7), (33, 90, 15), (1, 64, 3),
+])
+def test_local_kernel_bitwise_vs_jnp_topk(n, m, k):
+    """The local gather+weighting kernel is BITWISE the jnp top-k path
+    (sequential k-axis accumulation makes lane padding a no-op)."""
+    from repro.core import aidw as A, brute_knn
+
+    q, p, z, a = _data(n, m, jnp.float32, seed=5)
+    d2, idx = brute_knn(p, q, k)
+    out, zero = aidw_ops.local_interpolate(d2, idx, z, a, tile_q=64,
+                                           interpret=True)
+    swz, sw = A.topk_weighted_partial_sums(d2, z[idx], a)
+    want, wzero = A.guarded_values(swz, sw)
+    assert (np.asarray(out) == np.asarray(want)).all()
+    assert (np.asarray(zero) == np.asarray(wzero)).all()
+    assert not np.isnan(np.asarray(out)).any()
+
+
+def test_fused_local_kernel_bitwise_vs_unfused():
+    """In-kernel alpha (Eqs. 2/4/5/6 from the SMEM stats block) is bitwise
+    the host-side adaptive_alpha -> unfused local kernel chain."""
+    from repro.core import aidw as A, brute_knn
+
+    q, p, z, _ = _data(300, 600, jnp.float32, seed=6)
+    d2, idx = brute_knn(p, q, 15)
+    r_obs = jnp.sqrt(jnp.maximum(d2, 0.0)).mean(axis=1)
+    alpha = A.adaptive_alpha(r_obs, jnp.float32(600), jnp.float32(1.0))
+    fused, fzero = aidw_ops.fused_local_stage2(
+        d2, idx, z, r_obs, n_points=jnp.float32(600), area=jnp.float32(1.0),
+        tile_q=128, interpret=True)
+    unf, uzero = aidw_ops.local_interpolate(d2, idx, z, alpha, tile_q=128,
+                                            interpret=True)
+    assert (np.asarray(fused) == np.asarray(unf)).all()
+    assert (np.asarray(fzero) == np.asarray(uzero)).all()
+
+
+def test_tiled_kernel_zero_weight_sentinel():
+    """Global Pallas path: a query beyond f32 range from all data underflows
+    every weight — 0.0 sentinel + raised mask bit, never NaN."""
+    q = jnp.array([[1e18, 1e18], [0.5, 0.5]], jnp.float32)
+    p = jnp.asarray(np.random.default_rng(8).random((64, 2)), jnp.float32)
+    z = jnp.ones((64,), jnp.float32)
+    out, zero = aidw_ops.tiled_interpolate(q, p, z, 4.0, tile_q=8,
+                                           tile_d=128, interpret=True)
+    assert not np.isnan(np.asarray(out)).any()
+    assert np.asarray(zero)[0] and np.asarray(out)[0] == 0.0
+    assert not np.asarray(zero)[1]
+
+
+def test_local_kernel_zero_weight_sentinel():
+    """All-inf neighbour distances (every weight underflows) must yield the
+    0.0 sentinel + raised mask bit — never NaN."""
+    d2 = jnp.full((4, 8), jnp.inf, jnp.float32)
+    idx = jnp.zeros((4, 8), jnp.int32)
+    z = jnp.ones((16,), jnp.float32)
+    out, zero = aidw_ops.local_interpolate(d2, idx, z, 2.0, tile_q=8,
+                                           interpret=True)
+    assert np.asarray(zero).all()
+    assert (np.asarray(out) == 0.0).all()
 
 
 @pytest.mark.parametrize("n,m,k", [

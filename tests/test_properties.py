@@ -90,9 +90,9 @@ def test_fused_stage2_matches_unfused(m, n, seed):
     z = jnp.asarray(np.sin(rng.random(m) * 7), jnp.float32)
     r_obs = jnp.asarray(rng.uniform(0.0, 0.2, n), jnp.float32)
     kw = dict(tile_q=8, tile_d=128, interpret=True)
-    fused = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=float(m), area=1.0,
-                                  **kw)
+    fused, _ = aidw_ops.fused_stage2(q, p, z, r_obs, n_points=float(m),
+                                     area=1.0, **kw)
     alpha = adaptive_alpha(r_obs, float(m), 1.0)
-    unfused = aidw_ops.tiled_interpolate(q, p, z, alpha, **kw)
+    unfused, _ = aidw_ops.tiled_interpolate(q, p, z, alpha, **kw)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
                                rtol=1e-5, atol=1e-5)

@@ -119,11 +119,11 @@ def _fixed_spec_plan(sess, pts_updated):
     table = G.bin_points(spec, jnp.asarray(pts_updated[:, 0]),
                          jnp.asarray(pts_updated[:, 1]),
                          jnp.asarray(pts_updated[:, 2]))
-    return P.AidwPlan(spec=spec, table=table,
-                      points_xy=jnp.asarray(pts_updated[:, :2]),
-                      values=jnp.asarray(pts_updated[:, 2]),
-                      n_points=pts_updated.shape[0], area=sess.plan.area,
-                      cfg=sess.cfg)
+    return P.pad_plan(P.AidwPlan(spec=spec, table=table,
+                                 points_xy=jnp.asarray(pts_updated[:, :2]),
+                                 values=jnp.asarray(pts_updated[:, 2]),
+                                 n_points=pts_updated.shape[0],
+                                 area=sess.plan.area, cfg=sess.cfg))
 
 
 def test_delta_update_matches_full_rebin(spatial_data):
@@ -273,3 +273,92 @@ def test_aidw_engine_dataset_refresh(spatial_data):
     eng.run([r2])
     assert eng.session.stats["stage1_builds"] == 2
     assert not np.array_equal(r1.values, r2.values)
+
+
+# ---------------------------------------------------------------------------
+# n_points-churn retrace regression (the PR 6 bugfix): n_points is a TRACED
+# scalar and plan arrays are capacity-padded, so dataset-RESIZING deltas that
+# stay inside one 64-row capacity bucket must never retrace any executor.
+# ---------------------------------------------------------------------------
+
+
+def _churn(sess, sizes=(10, -5, 20, -25)):
+    """Apply resizing deltas (net n_points change each step)."""
+    from repro.data.pipeline import spatial_points
+
+    for i, d in enumerate(sizes):
+        if d > 0:
+            sess.update(inserts=spatial_points(d, seed=50 + i))
+        else:
+            sess.update(deletes=np.arange(-d))
+
+
+def test_churn_within_capacity_bucket_never_retraces():
+    """Single layout: +10/-5/+20/-25 point churn (all inside the 3072-row
+    capacity bucket) keeps the execute trace count frozen while the served
+    values actually change."""
+    from repro.data.pipeline import spatial_points, spatial_queries
+
+    # dataset size unique to THIS test (see test_new_bucket_traces_exactly_once)
+    pts = spatial_points(3037, seed=30)
+    qs = spatial_queries(256, seed=31)
+    sess = InterpolationSession(pts, query_domain=qs)
+    v0 = np.asarray(sess.query(qs).values)
+    t0, b0 = P.execute_traces(), G.bin_traces()
+    _churn(sess)
+    assert sess.plan.points_xy.shape[0] == 3072     # capacity bucket held
+    v1 = np.asarray(sess.query(qs).values)
+    assert P.execute_traces() == t0                 # ZERO retraces on churn
+    assert G.bin_traces() == b0                     # delta path, no re-bin
+    assert sess.stats["delta_updates"] == 4
+    assert not np.array_equal(v0, v1)               # dataset really changed
+
+
+def test_churn_replicated_mesh_never_retraces():
+    """Replicated mesh layout: the shard_map body is _execute_core, so the
+    same counter proves the mesh executor survived resizing churn."""
+    from repro.core.jax_compat import make_auto_mesh
+    from repro.data.pipeline import spatial_points, spatial_queries
+
+    pts = spatial_points(3101, seed=32)             # unique size
+    qs = spatial_queries(256, seed=33)
+    sess = InterpolationSession(pts, query_domain=qs,
+                                mesh=make_auto_mesh((1,), ("q",)))
+    sess.query(qs)
+    t0 = P.execute_traces()
+    _churn(sess)
+    sess.query(qs)
+    assert P.execute_traces() == t0
+    assert sess.stats["delta_updates"] == 4
+
+
+@pytest.mark.parametrize("layout", ["ring", "grid_ring"])
+def test_churn_ring_layouts_never_retrace(layout):
+    """Ring layouts: n_points rides through the ring executors as a traced
+    scalar and the packet arrays are capacity-padded, so resizing churn
+    reuses the ONE compiled signature (jit cache size stays 1)."""
+    from repro.core.jax_compat import make_auto_mesh
+    from repro.data.pipeline import spatial_points, spatial_queries
+
+    pts = spatial_points(3163 if layout == "ring" else 3217, seed=34)
+    qs = spatial_queries(256, seed=35)
+    mesh = make_auto_mesh((1,), ("q",))
+    sess = InterpolationSession(pts, query_domain=qs, mesh=mesh,
+                                layout=layout)
+    sess.query(qs)
+    sp = sess.sharded_plan
+    if layout == "ring":
+        fn = P.ring_session_execute(sp.mesh, sp.ring_axis, sess.plan.cfg)
+    else:
+        fn = P.grid_ring_session_execute(
+            sp.mesh, sp.ring_axis, sess.plan.cfg, sess.plan.spec, sp.rps,
+            sp.halo, sp.max_level)
+    # the cached executor is shared process-wide (keyed by mesh/cfg), so
+    # other suites may have compiled other shapes already — the invariant
+    # is that churn adds ZERO new signatures, not an absolute count
+    n0 = fn._cache_size()
+    assert n0 >= 1
+    _churn(sess)
+    sess.query(qs)
+    assert fn._cache_size() == n0                   # zero retraces on churn
+    assert sess.stats["delta_updates"] == 4
