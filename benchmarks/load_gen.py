@@ -72,10 +72,23 @@ def make_trace(n_requests: int, rate_rps: float, req_queries: int,
 
 
 def run_load(server, trace, *, updates: int = 0,
-             points: int = 0, seed: int = 0) -> dict:
+             points: int = 0, seed: int = 0,
+             write_rate_rps: float = 0.0, write_batch: int = 32,
+             write_bbox=None) -> dict:
     """Replay ``trace`` against ``server`` (open loop), optionally weaving
     ``updates`` incremental dataset deltas through the admission stream at
     even intervals.  Returns the JSON report body.
+
+    ``write_rate_rps > 0`` turns on the MIXED read/write mode: writer
+    arrivals are drawn from their own open-loop Poisson process over the
+    trace horizon, and each due write submits one balanced
+    ``write_batch``-point delta NON-BLOCKING (``submit_update``) — a FIFO
+    barrier in the admission stream, never a stop-the-world wait — with all
+    write handles awaited at flush time.  ``write_bbox`` (lo, hi) clips
+    insert coordinates into the frozen grid bbox so the O(Δ) delta path is
+    what gets measured, not the out-of-bbox full-re-plan fallback.
+    Single-server mode only (the fleet's epoch-ordered writes go through
+    ``update_dataset``/``compact``).
 
     ``server`` is anything with the submit/update_dataset/flush/report
     surface: an :class:`AsyncAidwServer` or a multi-host
@@ -83,7 +96,14 @@ def run_load(server, trace, *, updates: int = 0,
     the merged fleet view — ``drive_cluster`` flattens it)."""
     rng = np.random.default_rng(seed + 1)
     update_every = len(trace) // (updates + 1) if updates else None
-    reqs = []
+    write_arrivals = []
+    if write_rate_rps > 0:
+        wr = np.random.default_rng(seed + 7)
+        t = wr.exponential(1.0 / write_rate_rps)
+        while t < trace[-1][0]:
+            write_arrivals.append(t)
+            t += wr.exponential(1.0 / write_rate_rps)
+    reqs, write_ops, wi = [], [], 0
     t0 = time.monotonic()
     for i, (t_arrival, n, deadline_s) in enumerate(trace):
         if update_every and i and i % update_every == 0 \
@@ -92,6 +112,16 @@ def run_load(server, trace, *, updates: int = 0,
             server.update_dataset(
                 inserts=spatial_points(d, seed=seed + 50 + i),
                 deletes=rng.choice(max(points - d, 1), d, replace=False))
+        while wi < len(write_arrivals) and write_arrivals[wi] <= t_arrival:
+            ins = spatial_points(write_batch, seed=seed + 5000 + wi)
+            if write_bbox is not None:
+                ins[:, :2] = np.clip(ins[:, :2], *write_bbox)
+            write_ops.append(server.submit_update(
+                inserts=ins,
+                deletes=rng.choice(max(points, 1), write_batch,
+                                   replace=False),
+                timeout=60))
+            wi += 1
         now = time.monotonic() - t0
         if t_arrival > now:                  # open loop: wait for the slot,
             time.sleep(t_arrival - now)      # never for completions
@@ -105,6 +135,8 @@ def run_load(server, trace, *, updates: int = 0,
             deadline_s=None if deadline_s is None
             else t_arrival + deadline_s - now))
     wall_submit = time.monotonic() - t0
+    for op in write_ops:
+        server.wait_update(op, timeout=600)
     server.flush(timeout=600)
     wall_total = time.monotonic() - t0
 
@@ -114,6 +146,7 @@ def run_load(server, trace, *, updates: int = 0,
         "report": report,
         "offered_rps": len(trace) / max(wall_submit, 1e-9),
         "wall_s": wall_total,
+        "writes": len(write_ops),
         "lost": len(reqs) - len(terminal),
         "duplicated": len(reqs) - len({r.uid for r in reqs}),
     }
@@ -121,7 +154,9 @@ def run_load(server, trace, *, updates: int = 0,
 
 def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
           updates: int = 3, req_queries: int = 96, seed: int = 0,
-          pipeline_depth: int = 0) -> dict:
+          pipeline_depth: int = 0, layout: str = "replicated",
+          ring_cap: int = 1024, write_rate_rps: float = 0.0,
+          write_batch: int = 32) -> dict:
     """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
     and the JSON CLI so both measure the same configuration).
 
@@ -129,11 +164,14 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
     then telemetry is RESET so the reported window reflects steady state,
     not first-bucket compiles.  ``pipeline_depth`` turns on the worker's
     launch-ahead pipelining (``--pipeline``; a measured experiment — see
-    ROADMAP's post-PR-5 re-triage for the CPU result).
+    ROADMAP's post-PR-5 re-triage for the CPU result).  ``write_rate_rps``
+    turns on the mixed read/write open-loop mode (:func:`run_load`);
+    ``layout='grid_ring'`` (+ ``mesh``) serves writes through the O(Δ)
+    per-slab delta staging instead of a full re-stage per delta.
     """
     pts = spatial_points(points, seed=seed)
-    with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh,
-                         pipeline_depth=pipeline_depth,
+    with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh, layout=layout,
+                         ring_cap=ring_cap, pipeline_depth=pipeline_depth,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         for _ in range(3):
             srv.submit(spatial_queries(req_queries, seed=2))
@@ -142,7 +180,10 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
         for k in srv.queue.counters:
             srv.queue.counters[k] = 0
         return run_load(srv, trace, updates=updates, points=points,
-                        seed=seed)
+                        seed=seed, write_rate_rps=write_rate_rps,
+                        write_batch=write_batch,
+                        write_bbox=(pts[:, :2].min(axis=0),
+                                    pts[:, :2].max(axis=0)))
 
 
 def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
@@ -235,6 +276,78 @@ def load_rows(n_requests: int = 96, rate_rps: float = 400.0,
     ]
 
 
+def mixed_rows(n_requests: int = 96, rate_rps: float = 400.0,
+               req_queries: int = 96, points: int = 16384,
+               write_rate_rps: float = 25.0, write_batch: int = 32,
+               seed: int = 0, p99_ratio_limit: float = 1.5) -> list[tuple]:
+    """Sustained-churn rows: read-only vs mixed read/write p99 at the SAME
+    offered read load, served from a ``grid_ring`` session whose writes ride
+    the O(Δ) per-slab delta staging + hot append rings.
+
+    The acceptance gate RAISES when the mixed-workload p99 exceeds
+    ``p99_ratio_limit`` x the read-only p99 (best of two attempts — open-
+    loop p99 on a shared CPU CI box is noisy, and the gate exists to catch
+    systematic write-path stalls, not scheduler jitter), or when any
+    request is lost/duplicated under churn (the mixed-workload invariant).
+
+    The offered load is CALIBRATED to the box before the comparison: at
+    oversaturation an open-loop p99 measures queue depth, which grows with
+    ANY extra work — the ratio would trip on healthy write paths on slow
+    machines and hide real stalls on fast ones.  A short saturating burst
+    measures read capacity; both runs then offer ~40% of it (capped at
+    ``rate_rps``), with the writer rate capped at a 1:4 write:read ratio."""
+    import jax
+
+    from repro.core.jax_compat import make_auto_mesh
+
+    mesh = make_auto_mesh((len(jax.devices()),), ("q",))
+    kw = dict(mesh=mesh, layout="grid_ring", updates=0,
+              req_queries=req_queries, seed=seed)
+    cal = drive(points, make_trace(12, 1000.0, req_queries, 0.0,
+                                   (0.0, 0.0), seed=seed), **kw)
+    cap_rps = cal["report"]["queries_per_s"] / req_queries
+    rate_rps = max(min(rate_rps, 0.4 * cap_rps), 2.0)
+    write_rate_rps = max(min(write_rate_rps, rate_rps / 4), 1.0)
+    # deadline-free trace: a shed tail would censor exactly the p99 this
+    # row compares across the two runs
+    trace = make_trace(n_requests, rate_rps, req_queries,
+                       deadline_frac=0.0, deadline_ms=(0.0, 0.0), seed=seed)
+    for attempt in (1, 2):
+        ro = drive(points, trace, **kw)
+        mixed = drive(points, trace, write_rate_rps=write_rate_rps,
+                      write_batch=write_batch, **kw)
+        for out in (ro, mixed):
+            if out["lost"] or out["duplicated"]:
+                raise RuntimeError(
+                    f"mixed-workload run lost/duplicated requests: "
+                    f"{out['lost']}/{out['duplicated']}")
+        ro_p99 = ro["report"]["latency"]["total"]["p99_s"]
+        mx_p99 = mixed["report"]["latency"]["total"]["p99_s"]
+        ratio = mx_p99 / max(ro_p99, 1e-9)
+        if ratio <= p99_ratio_limit:
+            break
+    if ratio > p99_ratio_limit:
+        raise RuntimeError(
+            f"mixed-workload acceptance gate: p99 ratio {ratio:.2f}x > "
+            f"{p99_ratio_limit}x at {write_rate_rps:.0f} writes/s "
+            f"(read-only {ro_p99 * 1e3:.1f}ms, mixed {mx_p99 * 1e3:.1f}ms)")
+    sess = mixed["report"]["session"]
+    tag = f"{points}x{req_queries}@{rate_rps:.0f}r+{write_rate_rps:.0f}w"
+    return [
+        (f"serving/churn_read_p99/{tag}", ro_p99 * 1e6,
+         f"read-only baseline, {ro['report']['queries_per_s']:.0f} q/s"),
+        (f"serving/churn_mixed_p99/{tag}", mx_p99 * 1e6,
+         f"{ratio:.2f}x read-only p99 (limit {p99_ratio_limit}x), "
+         f"{mixed['writes']} writes of {write_batch} pts applied"),
+        (f"serving/churn_staged_bytes/{tag}",
+         sess.get("staged_bytes", 0),
+         f"last delta staged {sess.get('staged_bytes', 0)} B, ring "
+         f"{sess.get('ring_occupancy', 0.0):.0%} full, "
+         f"{sess.get('compactions', 0)} compactions, "
+         f"{sess.get('spilled_updates', 0)} spills"),
+    ]
+
+
 def cluster_rows(n_requests: int = 64, rate_rps: float = 300.0,
                  req_queries: int = 96, points: int = 16384,
                  updates: int = 2, seed: int = 0,
@@ -286,6 +399,15 @@ def main() -> None:
                    default=(20.0, 200.0))
     p.add_argument("--updates", type=int, default=3,
                    help="incremental dataset updates woven into the stream")
+    p.add_argument("--write-rate", type=float, default=0.0, metavar="WPS",
+                   help="mixed read/write mode: open-loop Poisson writer "
+                        "arrivals/s, each a balanced --write-batch delta "
+                        "submitted non-blocking (single-server mode only)")
+    p.add_argument("--write-batch", type=int, default=32)
+    p.add_argument("--layout", default="replicated",
+                   choices=("replicated", "ring", "grid_ring"),
+                   help="session layout (grid_ring = O(Delta) ingest path; "
+                        "needs --mesh)")
     p.add_argument("--pipeline", type=int, default=0, metavar="DEPTH",
                    help="worker launch-ahead pipelining depth (0 = off; "
                         "single-server mode only)")
@@ -326,8 +448,15 @@ def main() -> None:
     else:
         out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
                     updates=args.updates, req_queries=args.req_queries,
-                    seed=args.seed, pipeline_depth=args.pipeline)
+                    seed=args.seed, pipeline_depth=args.pipeline,
+                    layout=args.layout, write_rate_rps=args.write_rate,
+                    write_batch=args.write_batch)
 
+    if out["lost"] or out["duplicated"]:
+        # CLI invariant gate (CI churn step): a lost or duplicated request
+        # under mixed read/write load must fail the job, json mode included
+        raise SystemExit(f"load run lost/duplicated requests: "
+                         f"{out['lost']}/{out['duplicated']}")
     if args.json:
         out["config"] = {k: (list(v) if isinstance(v, tuple) else v)
                          for k, v in vars(args).items()}

@@ -1,8 +1,8 @@
 """Benchmark harness — one function per paper table/figure + roofline readers.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
-[--skip-roofline] [--skip-session] [--skip-ring] [--skip-load]
-[--skip-cluster] [--json [PATH]]``
+[--skip-roofline] [--skip-session] [--skip-ring] [--skip-ingest]
+[--skip-load] [--skip-churn] [--skip-cluster] [--json [PATH]]``
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
@@ -19,7 +19,12 @@ report end-to-end p50/p99 latency and shed counts — the whole speedup
 story, traffic included, in one command.  The ``cluster/*`` rows replay the
 same offered load against 1-host and 2-host serving fleets
 (``repro.serving.cluster``) so the trajectory starts capturing scale-out
-efficiency alongside single-host latency.
+efficiency alongside single-host latency.  The ``ingest/*`` rows measure
+the O(Δ) per-slab donation-aliased delta staging against the full-packet
+re-stage (>= 10x fewer staged bytes required at 1% churn), and the
+``serving/churn_*`` rows put a grid_ring server under a sustained mixed
+read/write open-loop load (mixed p99 must stay within 1.5x of read-only at
+the same offered load).
 
 ``--json`` additionally writes the rows (plus environment metadata) to a
 repo-root perf-trajectory artifact.  The artifact name is derived per PR —
@@ -35,7 +40,7 @@ import argparse
 import os
 import sys
 
-DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR6")
+DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR7")
 
 
 def default_artifact(tag: str = DEFAULT_TAG) -> str:
@@ -55,6 +60,10 @@ def main() -> None:
                    help="skip the async-serving load-generator rows")
     p.add_argument("--skip-cluster", action="store_true",
                    help="skip the 1-host-vs-2-host fleet scale-out rows")
+    p.add_argument("--skip-ingest", action="store_true",
+                   help="skip the O(Delta) delta-staging ingest rows")
+    p.add_argument("--skip-churn", action="store_true",
+                   help="skip the sustained-churn mixed read/write rows")
     p.add_argument("--artifact-tag", default=DEFAULT_TAG, metavar="TAG",
                    help="perf-trajectory artifact tag: --json with no PATH "
                         "writes BENCH_<TAG>.json (env BENCH_ARTIFACT_TAG "
@@ -91,10 +100,20 @@ def main() -> None:
 
         rows += S.ring_rows()           # brute vs grid-aware ring Stage 1
 
+    if not args.skip_ingest:
+        from . import session_bench as S
+
+        rows += S.ingest_rows()         # O(Delta) per-slab delta staging
+
     if not args.skip_load:
         from . import load_gen as L
 
         rows += L.load_rows()           # async server under Poisson load
+
+    if not args.skip_churn:
+        from . import load_gen as L
+
+        rows += L.mixed_rows()          # sustained-churn mixed read/write
 
     if not args.skip_cluster:
         from . import load_gen as L

@@ -47,6 +47,14 @@ Reported rows (CSV schema name,us_per_call,derived):
 * ``ring/stage2_local_speedup`` — global / local Stage-2 throughput ratio;
                                   the run RAISES if this lands below 5x on
                                   the 8-device mesh (the PR 6 acceptance row)
+* ``ingest/update_delta``       — warm ``grid_ring`` 1% churn through the
+                                  per-slab donation-aliased delta staging +
+                                  hot append rings (O(Δ + touched-slab)
+                                  bytes to device)
+* ``ingest/staged_reduction``   — staged bytes per delta vs the full-packet
+                                  re-stage the same update used to upload;
+                                  the run RAISES below 10x (the PR 7
+                                  acceptance row)
 
 Paper-table conventions apply (benchmarks/paper_tables.py): this container is
 CPU-only, so the default sizes scale down; ``--full`` restores the paper-scale
@@ -217,6 +225,79 @@ def delta_rows(m: int = 100_000, churn: float = 0.01) -> list[tuple]:
     ]
 
 
+def ingest_rows(m: int = 120_000, churn: float = 0.01,
+                ring_cap: int | None = None,
+                n_updates: int = 3) -> list[tuple]:
+    """O(Δ) device-side ingest: per-slab delta staging vs full re-stage.
+
+    A balanced ``churn`` delta (equal inserts and deletes at 120k points)
+    against a warm ``grid_ring`` session whose ring capacity holds the
+    whole run: inserts land in the per-slab hot append rings and deletes
+    tombstone in place, so each update stages O(Δ + touched-slab) bytes —
+    the donation-aliased row patches — instead of re-uploading the O(m)
+    stacked packet.  The acceptance gate RAISES if the measured staged
+    bytes per update are not at least 10x below the full-packet re-stage
+    (the construction-time upload of the same session), or if any update
+    fell back to a full re-stage / spilled past the ring.
+    """
+    import jax
+
+    from repro.core.jax_compat import make_auto_mesh
+
+    n_dev = len(jax.devices())
+    mesh = make_auto_mesh((n_dev,), ("q",))
+    d = max(int(m * churn), 1)
+    if ring_cap is None:
+        # hold the whole run in-ring (2x slab-imbalance headroom): a fold
+        # mid-run would stage the full packet and poison the average
+        ring_cap = max(256, 2 * n_updates * d // n_dev)
+    pts = spatial_points(m, seed=3)
+    qd = spatial_queries(256, seed=4)
+    sess = InterpolationSession(pts, query_domain=qd, mesh=mesh,
+                                layout="grid_ring", ring_cap=ring_cap)
+    sess.query(qd).values.block_until_ready()           # compile the bucket
+    full_bytes = sess.stats["staged_bytes"]             # construction upload
+    rng = np.random.default_rng(5)
+    # inserts must stay inside the FROZEN grid bbox: plan_delta's bbox
+    # fallback turns an out-of-bounds insert into a full re-plan, which is
+    # exactly the path this row exists to avoid measuring
+    lo, hi = pts[:, :2].min(axis=0), pts[:, :2].max(axis=0)
+
+    staged, times = [], []
+    for i in range(n_updates):
+        ins = spatial_points(d, seed=40 + i)
+        ins[:, :2] = np.clip(ins[:, :2], lo, hi)
+        dels = rng.choice(m, d, replace=False)
+        t0 = time.perf_counter()
+        sess.update(inserts=ins, deletes=dels)
+        sess.query(qd).values.block_until_ready()       # warm-path serve
+        times.append(time.perf_counter() - t0)
+        staged.append(sess.stats["staged_bytes"])
+    if sess.stats["delta_updates"] != n_updates \
+            or sess.stats["full_restages"] != 1 \
+            or sess.stats["spilled_updates"]:
+        raise RuntimeError(
+            f"delta ingest fell off the O(Delta) path: {sess.stats}")
+    delta_bytes = float(np.mean(staged))
+    reduction = full_bytes / max(delta_bytes, 1.0)
+    if reduction < 10.0:
+        raise RuntimeError(
+            f"ingest acceptance gate: staged-bytes reduction "
+            f"{reduction:.1f}x < 10x at {m}x{d} ({delta_bytes:.0f} B/update "
+            f"vs {full_bytes} B full packet)")
+    delta_us = float(np.mean(times)) * 1e6
+    occ = sess.stats["ring_occupancy"]
+    return [
+        (f"ingest/update_delta/{m}x{d}x{n_dev}dev", delta_us,
+         f"{delta_bytes:.0f} B staged/update, {sess.stats['slabs_touched']} "
+         f"slab(s) touched, ring {occ:.0%} full, tombstones "
+         f"{sess.stats['tombstone_frac']:.2%}"),
+        (f"ingest/staged_reduction/{m}x{d}x{n_dev}dev", 0.0,
+         f"{reduction:.0f}x fewer staged bytes vs full {full_bytes} B "
+         f"packet re-stage ({churn:.0%} churn; >=10x required)"),
+    ]
+
+
 def ring_rows(m: int = 120_000, nq: int = 1024, n_batches: int = 3,
               tol: float = 1e-4, local_tol: float = 5e-2) -> list[tuple]:
     """Brute-force ring vs grid-aware ring Stage 1 at >= 100k points.
@@ -330,6 +411,8 @@ def main() -> None:
                    help="emit a JSON array instead of CSV (CI artifact)")
     p.add_argument("--skip-ring", action="store_true",
                    help="skip the brute-vs-grid ring Stage-1 rows")
+    p.add_argument("--skip-ingest", action="store_true",
+                   help="skip the O(Delta) delta-staging ingest rows")
     args = p.parse_args()
 
     sizes = FULL_SIZES if args.full else SIZES
@@ -337,6 +420,8 @@ def main() -> None:
         + delta_rows()
     if not args.skip_ring:
         rows += ring_rows()
+    if not args.skip_ingest:
+        rows += ingest_rows()
     if args.json:
         print(json.dumps([{"name": n, "us_per_call": us, "derived": d}
                           for n, us, d in rows], indent=2))

@@ -287,13 +287,26 @@ def make_grid_ring_aidw(
 ):
     """Build the grid-aware ring AIDW step for ``mesh`` (module docstring).
 
-    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
-    n_points, area)`` where the first eight arguments are the stacked
-    packets from :meth:`repro.core.slab.SlabPartition.device_tables` — the
-    halo'd slab CSR tables Stage 1 rotates, and the owned-only point blocks
-    Stage 2 rotates — all sharded along ``ring_axis``; queries are sharded
-    over EVERY mesh axis.  ``spec`` is the GLOBAL grid spec and
-    ``rps``/``halo``/``max_level`` the slab geometry — all static.
+    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, rx, ry, rz,
+    queries, n_points, area)`` where the first eleven arguments are the
+    stacked packets from :meth:`repro.core.slab.SlabPartition.device_tables`
+    — the halo'd slab CSR tables Stage 1 rotates, the owned-only point
+    blocks Stage 2 rotates, and the per-slab HOT APPEND RINGS (the LSM
+    ingest tier, ``repro.core.slab`` module docstring) — all sharded along
+    ``ring_axis``; queries are sharded over EVERY mesh axis.  ``spec`` is
+    the GLOBAL grid spec and ``rps``/``halo``/``max_level`` the slab
+    geometry — all static.
+
+    Hot-ring search: each rotating packet's ring is scanned EXHAUSTIVELY
+    (:func:`repro.core.knn.ring_candidate_d2`) and its candidates co-merge
+    into the same per-step ``top_k`` as the slab's CSR result, so freshly
+    staged inserts are query-visible without touching the CSR arrays.  A
+    ring point lives ONLY in its owning slab's packet (never in a halo
+    copy), so the exhaustive scan preserves the exactly-once contribution
+    contract, needs no certification (it cannot overflow), and its d2
+    arithmetic is bitwise the CSR gather's.  Stage 2 (global mode) rotates
+    the ring points concatenated onto the owned block; empty ring slots
+    carry ``PAD_COORD`` and contribute inf distance / zero weight.
 
     With ``return_stats=True`` the step returns ``(values, alpha, r_obs,
     overflow, n_candidates, zero_weight_mask)``: per-query overflow is the
@@ -315,51 +328,58 @@ def make_grid_ring_aidw(
     p_ring = mesh.shape[ring_axis]
     perm = [(i, (i + 1) % p_ring) for i in range(p_ring)]
 
-    def local_fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
-                 n_points, area):
+    def local_fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, rx, ry, rz,
+                 queries, n_points, area):
         qx, qy = queries[:, 0], queries[:, 1]
         n_q = queries.shape[0]
 
         # ---- Stage 1: grid-aware ring kNN -----------------------------
         # the rotating packet carries the slab's sorted points + CSR
-        # offsets + row offset; `own` is consumed locally by Stage 2 only.
-        # Local mode rotates sz too and co-merges the gathered values.
+        # offsets + row offset + hot append ring; `own` is consumed
+        # locally by Stage 2 only.  Local mode rotates sz/rz too and
+        # co-merges the gathered values.
         def knn_step(carry, _):
             if stage2_local:
                 topk, topk_z, excuse, cand, pk = carry
-                psx, psy, psz, pcs, prl = pk
+                psx, psy, psz, pcs, prl, prx, pry, prz = pk
             else:
                 topk, excuse, cand, pk = carry
-                psx, psy, pcs, prl = pk
+                psx, psy, pcs, prl, prx, pry = pk
             # `order` = iota: res.idx indexes the slab's SORTED arrays,
             # which is exactly what the in-scan value gather wants (global
             # mode never reads idx, so zeros vs iota is indifferent there)
             res = K.slab_knn(spec, rps, halo, pcs[0], psx[0], psy[0],
                              jax.lax.iota(jnp.int32, psx.shape[1]), prl[0],
                              queries, k, max_level, window, knn_block)
-            cat = jnp.concatenate([topk, res.d2], axis=1)
+            # hot ring: exhaustive scan of this slab's staged inserts
+            # (tiny, exact, overflow-free — see make_grid_ring_aidw doc)
+            rd2 = K.ring_candidate_d2(prx[0], pry[0], qx, qy)
+            cat = jnp.concatenate([topk, res.d2, rd2], axis=1)
             neg, sel = jax.lax.top_k(-cat, k)
+            ring_live = (prx[0] < PAD_COORD).sum().astype(jnp.int32)
             pk = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, ring_axis, perm), pk)
             if stage2_local:
-                catz = jnp.concatenate([topk_z, psz[0][res.idx]], axis=1)
+                catz = jnp.concatenate(
+                    [topk_z, psz[0][res.idx],
+                     jnp.broadcast_to(prz[0][None, :], rd2.shape)], axis=1)
                 topk_z = jnp.take_along_axis(catz, sel, axis=1)
                 return (-neg, topk_z, jnp.minimum(excuse, res.excuse),
-                        cand + res.n_candidates, pk), None
+                        cand + res.n_candidates + ring_live, pk), None
             return (-neg, jnp.minimum(excuse, res.excuse),
-                    cand + res.n_candidates, pk), None
+                    cand + res.n_candidates + ring_live, pk), None
 
         topk0 = pvary(jnp.full((n_q, k), jnp.inf, queries.dtype), all_axes)
         excuse0 = pvary(jnp.full((n_q,), jnp.inf, queries.dtype), all_axes)
         cand0 = pvary(jnp.zeros((n_q,), jnp.int32), all_axes)
         if stage2_local:
             tz0 = pvary(jnp.zeros((n_q, k), sz.dtype), all_axes)
-            packet0 = (sx, sy, sz, cell_start, row_lo)
+            packet0 = (sx, sy, sz, cell_start, row_lo, rx, ry, rz)
             (topk, topk_z, excuse, cand, _), _ = jax.lax.scan(
                 knn_step, (topk0, tz0, excuse0, cand0, packet0), None,
                 length=p_ring)
         else:
-            packet0 = (sx, sy, cell_start, row_lo)
+            packet0 = (sx, sy, cell_start, row_lo, rx, ry)
             (topk, excuse, cand, _), _ = jax.lax.scan(
                 knn_step, (topk0, excuse0, cand0, packet0), None,
                 length=p_ring)
@@ -377,10 +397,15 @@ def make_grid_ring_aidw(
             return (vals, alpha, r_obs, overflow, cand, zero) \
                 if return_stats else vals
 
-        # ---- Stage 2 (global): ring rotation over OWNED blocks only ---
-        # (halo copies never enter: they would double-count in Eq. (1),
-        # and their dead lanes would widen every Stage-2 tile)
-        blk0 = jnp.stack([bx[0], by[0], bz[0]], axis=1)
+        # ---- Stage 2 (global): ring rotation over OWNED blocks plus the
+        # slab's hot ring (ring points live only in their owner's packet,
+        # so concatenating them keeps Eq. (1) exactly-once; halo copies
+        # never enter: they would double-count, and their dead lanes
+        # would widen every Stage-2 tile) ------------------------------
+        blk0 = jnp.concatenate([
+            jnp.stack([bx[0], by[0], bz[0]], axis=1),
+            jnp.stack([rx[0], ry[0], rz[0]], axis=1),
+        ], axis=0)
 
         def interp_step(carry, _):
             acc, blk = carry
@@ -399,7 +424,7 @@ def make_grid_ring_aidw(
     fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(data2, data2, data2, data2, P(ring_axis), data2, data2,
-                  data2, P(all_axes, None), P(), P()),
+                  data2, data2, data2, data2, P(all_axes, None), P(), P()),
         out_specs=tuple(P(all_axes) for _ in range(6)) if return_stats
         else P(all_axes),
     )

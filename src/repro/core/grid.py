@@ -25,6 +25,19 @@ tombstoned out, and the CSR offsets are rebuilt from per-cell delta counts
 (O(n_cells + Δ)).  The result is ELEMENT-IDENTICAL to a full
 :func:`bin_points` of the updated dataset on the same :class:`GridSpec`
 (both sorts are stable, so per-cell point order matches too).
+
+Tombstone deletes (``rebin_delta(..., tombstone=True)``): instead of
+physically compacting the sorted arrays (an O(m) memcpy whose result must be
+re-staged wholesale), a delete overwrites just the dead slots in place —
+coords become :data:`TOMBSTONE_COORD` (squared distances overflow f32 to
+``inf``, so Stage-1 top-k never selects them and Stage-2 IDW weights are an
+exact ``0.0``), ``order`` becomes ``-1``, and ``cell_start`` is left
+untouched.  The table's shape and every live slot's position are preserved,
+which is what makes device-side delta staging O(Δ): only the dead slots
+changed.  Dead slots keep their cell identity (they still occupy CSR range),
+so later inserts land after them and :func:`purge_tombstones` — compaction,
+triggered once :func:`tombstone_frac` crosses a threshold — recovers a table
+element-identical to a fresh :func:`bin_points` of the live dataset.
 """
 
 from __future__ import annotations
@@ -182,8 +195,54 @@ def delta_rebins() -> int:
     return _DELTA_REBINS[0]
 
 
+# Dead-slot coordinate sentinel: (q - 1e30)^2 overflows float32 to +inf, so a
+# tombstoned slot's d2 is inf — never in any top-k — and its IDW weight
+# power(inf, -alpha/2) is an exact 0.0 (adding it to a partial sum is a
+# bitwise no-op).  Matches the padding sentinel used by the sharded layouts.
+TOMBSTONE_COORD = 1e30
+
+
+def live_count(table: CellTable) -> int:
+    """Number of live (non-tombstoned) points in a table."""
+    order = np.asarray(table.order)
+    m = int(np.asarray(table.cell_start)[-1])
+    return int((order[:m] >= 0).sum())
+
+
+def tombstone_frac(table: CellTable) -> float:
+    """Fraction of table slots that are tombstones (0.0 for a fresh table)."""
+    m = int(np.asarray(table.cell_start)[-1])
+    return 1.0 - live_count(table) / m if m else 0.0
+
+
+def purge_tombstones(spec: GridSpec, table: CellTable) -> CellTable:
+    """Physically compact a tombstoned table.
+
+    Element-identical to ``bin_points(spec, *live_dataset)``: a tombstone
+    never reorders the surviving slots, so dropping the dead ones recovers
+    exactly the stable-sorted fresh layout (``order`` is already remapped to
+    the live dataset indexing by :func:`rebin_delta`).
+    """
+    m = int(np.asarray(table.cell_start)[-1])
+    order = np.asarray(table.order)[:m]
+    keep = order >= 0
+    if keep.all():
+        return table
+    ids_sorted = sorted_cell_ids(table)
+    counts = np.diff(np.asarray(table.cell_start, dtype=np.int64))
+    counts = counts - np.bincount(ids_sorted[~keep], minlength=spec.n_cells)
+    cell_start = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(counts)]).astype(np.int32)
+    return CellTable(jnp.asarray(np.asarray(table.sx)[:m][keep]),
+                     jnp.asarray(np.asarray(table.sy)[:m][keep]),
+                     jnp.asarray(np.asarray(table.sz)[:m][keep]),
+                     jnp.asarray(cell_start),
+                     jnp.asarray(order[keep], jnp.int32))
+
+
 def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
-                deletes=None, *, insert_ids=None) -> CellTable:
+                deletes=None, *, insert_ids=None,
+                tombstone: bool = False) -> CellTable:
     """Apply an (inserts, deletes) delta to an existing CSR cell table.
 
     ``inserts`` is an (Δ, 3) xyz array appended to the dataset; ``deletes``
@@ -200,6 +259,14 @@ def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
     ``min_y`` would not be bitwise the same arithmetic, and a point on a
     cell boundary could land one row off from where the global binning put
     it.
+
+    ``tombstone=True`` switches the delete path to in-place tombstones (see
+    module docstring): dead slots get :data:`TOMBSTONE_COORD` coords,
+    ``order == -1``, and ``cell_start`` is untouched, so only O(Δ) slots of
+    the table change.  Delete indices always refer to the LIVE dataset
+    indexing (tombstones are invisible), and the surviving ``order`` values
+    are remapped exactly as in the physical path — so
+    :func:`purge_tombstones` later recovers the fresh-bin layout bitwise.
 
     Cost: O(Δ log Δ) insert sort + O(m) tombstone/merge memcpy +
     O(n_cells + Δ) offset rebuild — no O(m log m) comparison sort.  Runs on
@@ -218,23 +285,37 @@ def rebin_delta(spec: GridSpec, table: CellTable, inserts=None,
     sz = np.asarray(table.sz)[:m]
     order = np.asarray(table.order)[:m].astype(np.int64)
 
-    # -- tombstone deletes out of the sorted arrays --------------------------
+    # -- deletes: tombstone in place, or compact out of the sorted arrays ----
     if deletes is not None and np.size(deletes):
         dels = np.unique(np.asarray(deletes, dtype=np.int64))
-        if dels[0] < 0 or dels[-1] >= m:
-            raise IndexError(f"delete index out of range [0, {m})")
-        drop = np.isin(order, dels)
-        ids_sorted = sorted_cell_ids(table)
-        counts = counts - np.bincount(ids_sorted[drop], minlength=spec.n_cells)
-        keep = ~drop
-        sx, sy, sz, ids_sorted = sx[keep], sy[keep], sz[keep], ids_sorted[keep]
-        # original index -> index in the compacted (post-delete) dataset
-        order = order[keep]
-        order -= np.searchsorted(dels, order)
-        m_kept = m - dels.size
+        live = int((order >= 0).sum())
+        if dels[0] < 0 or dels[-1] >= live:
+            raise IndexError(f"delete index out of range [0, {live})")
+        drop = np.isin(order, dels)          # order==-1 (dead) never matches
+        if tombstone:
+            # O(Δ) in-place: shapes, offsets and live positions all survive
+            sx, sy, sz = sx.copy(), sy.copy(), sz.copy()
+            sx[drop] = sy[drop] = np.float32(TOMBSTONE_COORD)
+            sz[drop] = 0.0
+            order = order.copy()
+            order[drop] = -1
+            alive = order >= 0
+            order[alive] -= np.searchsorted(dels, order[alive])
+            ids_sorted = None
+        else:
+            ids_sorted = sorted_cell_ids(table)
+            counts = counts - np.bincount(ids_sorted[drop],
+                                          minlength=spec.n_cells)
+            keep = ~drop
+            sx, sy, sz = sx[keep], sy[keep], sz[keep]
+            ids_sorted = ids_sorted[keep]
+            # original index -> index in the compacted (post-delete) dataset
+            order = order[keep]
+            order -= np.searchsorted(dels, order)
+        m_kept = live - dels.size
     else:
         ids_sorted = None   # computed lazily; unneeded for pure appends
-        m_kept = m
+        m_kept = int((order >= 0).sum())
 
     # -- merge the sorted inserts --------------------------------------------
     if inserts is not None and np.size(inserts):

@@ -317,6 +317,31 @@ def slab_knn(
     return SlabKnnResult(*flat)
 
 
+def ring_candidate_d2(rx: jax.Array, ry: jax.Array,
+                      qx: jax.Array, qy: jax.Array) -> jax.Array:
+    """Exhaustive squared distances from a query batch to a slab's hot ring.
+
+    The hot append ring (``repro.core.slab`` LSM ingest contract) is a tiny
+    fixed-capacity buffer of freshly inserted points that have not yet been
+    folded into the slab's CSR table.  It is searched EXHAUSTIVELY — every
+    query against every slot — because its capacity is a few hundred slots,
+    far below the CSR gather window, and an exhaustive scan needs no level
+    heuristic, no certification pass, and cannot overflow.
+
+    The arithmetic is element-for-element the CSR path's
+    ``(sx[src] - qx)**2 + (sy[src] - qy)**2`` (squaring makes the operand
+    order bitwise-irrelevant: ``x*x`` and ``(-x)*(-x)`` are identical
+    floats), so merging ring candidates into a slab top-k preserves the
+    bitwise Stage-1 contract.  Empty slots carry the ``PAD_COORD`` sentinel
+    (1e30): their d2 overflows f32 to +inf and is never selected.
+
+    Shapes: ``rx``/``ry`` are (ring_cap,); ``qx``/``qy`` are (nq,); the
+    result is (nq, ring_cap).
+    """
+    return ((qx[:, None] - rx[None, :]) ** 2
+            + (qy[:, None] - ry[None, :]) ** 2)
+
+
 def auto_max_level(spec: GridSpec, m: int, k: int) -> int:
     """Expansion-level bound from expected point density (points/cell).
 

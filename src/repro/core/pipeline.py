@@ -257,8 +257,9 @@ class ShardedAidwPlan:
     ``grid_ring``: ``slab_part`` holds the host-side
     :class:`repro.core.slab.SlabPartition` (per-slab CSR tables + delta
     bookkeeping) and ``slab_arrays`` its device placement (stacked packet
-    sharded along ``ring_axis``); ``rps``/``halo``/``max_level`` are the
-    static slab geometry the executor is compiled against.
+    sharded along ``ring_axis``, kept resident and delta-PATCHED by
+    ``staging`` — a :class:`SlabStaging`); ``rps``/``halo``/``max_level``
+    are the static slab geometry the executor is compiled against.
     """
 
     base: AidwPlan
@@ -271,23 +272,172 @@ class ShardedAidwPlan:
     rps: int | None = None
     halo: int | None = None
     max_level: int | None = None
+    staging: object | None = None   # SlabStaging (grid_ring layout only)
 
     @property
     def n_devices(self) -> int:
         return int(self.mesh.devices.size)
 
 
-def _put_slab_arrays(part, mesh: Mesh, ring_axis: str) -> dict:
-    """Device-put a :meth:`SlabPartition.device_tables` packet, every array
-    sharded along ``ring_axis`` (leading P axis = one slab per device)."""
-    host = part.device_tables()
-    out = {}
-    for name, arr in host.items():
-        spec = PartitionSpec(ring_axis) if arr.ndim == 1 \
-            else PartitionSpec(ring_axis, None)
-        out[name] = jax.device_put(jnp.asarray(arr),
-                                   NamedSharding(mesh, spec))
-    return out
+class SlabStaging:
+    """Per-slab donation-aliased device staging for the grid_ring packet.
+
+    The device-side half of the LSM ingest tier (``repro.core.slab`` module
+    docstring): where the old path re-uploaded the whole stacked packet on
+    every delta (O(m) memcpy + transfer), this keeps the packet resident
+    and patches ONLY what a :class:`repro.core.slab.DeltaReport` names —
+
+    * ``csr_rows``  -> one padded slab row per array
+      (``lax.dynamic_update_slice`` at the slab index, old buffer DONATED
+      so XLA aliases the update in place; O(touched-slab rows) bytes);
+    * ``dead``      -> an O(Δ) element scatter of tombstone sentinels into
+      the slab's sorted coordinates (and the matching owned-block slots) —
+      the CSR offsets are byte-stable under tombstone deletes;
+    * ``ring_rows`` -> one ``ring_cap``-slot hot-ring row per touched slab.
+
+    Capacities are STICKY (grow-only): a delta that would overflow the
+    current caps falls back to :meth:`full_stage` once, establishing new
+    caps that every later delta patches against — so sustained churn
+    converges to pure O(Δ + touched-slab) staging.  Scatter index vectors
+    are bucketed to powers of two (duplicating the first index, which
+    rewrites the same sentinel — a no-op) so the patch executables retrace
+    per bucket, not per delta size.  Donation is disabled on CPU (no
+    buffer aliasing there; XLA would warn on every patch).
+
+    Telemetry (read by ``session.stats``): ``staged_bytes`` (host bytes
+    shipped by the LAST stage call), ``staged_bytes_total``,
+    ``slabs_touched`` (last call), ``full_restages``.
+    """
+
+    def __init__(self, mesh: Mesh, ring_axis: str):
+        self.mesh = mesh
+        self.ring_axis = ring_axis
+        self.arrays: dict = {}
+        self.cap = 0
+        self.cap2 = 0
+        self.staged_bytes = 0
+        self.staged_bytes_total = 0
+        self.slabs_touched = 0
+        self.full_restages = 0
+        self._donate = jax.default_backend() != "cpu"
+        self._fns: dict = {}
+
+    def _sharding(self, ndim: int) -> NamedSharding:
+        spec = PartitionSpec(self.ring_axis) if ndim == 1 \
+            else PartitionSpec(self.ring_axis, None)
+        return NamedSharding(self.mesh, spec)
+
+    def _row_fn(self, shape, dtype):
+        """Jitted single-row patcher for a (P, width) packet array."""
+        key = ("row", shape, dtype)
+        fn = self._fns.get(key)
+        if fn is None:
+            def patch(dst, row, s):
+                return jax.lax.dynamic_update_slice(
+                    dst, row[None], (s, jnp.int32(0)))
+            fn = jax.jit(patch, out_shardings=self._sharding(2),
+                         donate_argnums=(0,) if self._donate else ())
+            self._fns[key] = fn
+        return fn
+
+    def _scatter_fn(self, shape, dtype, n_idx):
+        """Jitted element scatter into row ``s`` of a (P, width) array."""
+        key = ("scatter", shape, dtype, n_idx)
+        fn = self._fns.get(key)
+        if fn is None:
+            def patch(dst, s, idx, val):
+                return dst.at[s, idx].set(val)
+            fn = jax.jit(patch, out_shardings=self._sharding(2),
+                         donate_argnums=(0,) if self._donate else ())
+            self._fns[key] = fn
+        return fn
+
+    def _patch_row(self, name: str, s: int, row: np.ndarray) -> int:
+        dst = self.arrays[name]
+        fn = self._row_fn(dst.shape, dst.dtype)
+        self.arrays[name] = fn(dst, jnp.asarray(row), jnp.int32(s))
+        return row.nbytes
+
+    def _patch_slots(self, name: str, s: int, idx: np.ndarray,
+                     val: float) -> int:
+        dst = self.arrays[name]
+        # power-of-two index bucket: duplicates rewrite the same sentinel
+        n = int(idx.size)
+        bucket = 1 << max(n - 1, 0).bit_length()
+        padded = np.empty(bucket, np.int32)
+        padded[:n] = idx
+        padded[n:] = idx[0]
+        fn = self._scatter_fn(dst.shape, dst.dtype, bucket)
+        self.arrays[name] = fn(dst, jnp.int32(s), jnp.asarray(padded),
+                               jnp.asarray(val, dst.dtype))
+        return padded.nbytes + np.dtype(dst.dtype).itemsize
+
+    def full_stage(self, part) -> dict:
+        """Upload the whole stacked packet (build / cap-overflow path)."""
+        host = part.device_tables(PLAN_PAD_MULTIPLE, cap_floor=self.cap,
+                                  cap2_floor=self.cap2)
+        self.cap = host["sx"].shape[1]
+        self.cap2 = host["bx"].shape[1]
+        nbytes = 0
+        out = {}
+        for name, arr in host.items():
+            out[name] = jax.device_put(jnp.asarray(arr),
+                                       self._sharding(arr.ndim))
+            nbytes += arr.nbytes
+        self.arrays = out
+        self.full_restages += 1
+        self.staged_bytes = nbytes
+        self.staged_bytes_total += nbytes
+        self.slabs_touched = part.p
+        return out
+
+    def delta_stage(self, part, rep) -> dict:
+        """Patch the resident packet per a DeltaReport (O(Δ + touched)).
+
+        Falls back to one :meth:`full_stage` when a restaged slab no
+        longer fits the sticky capacities.  Fills ``rep.staged_bytes``.
+        """
+        if not self.arrays:
+            out = self.full_stage(part)
+            rep.staged_bytes = self.staged_bytes
+            return out
+        rows = {}
+        for s in sorted(rep.csr_rows):
+            row = part.slab_host_rows(s, self.cap, self.cap2)
+            if row is None:                      # sticky caps overflowed
+                out = self.full_stage(part)
+                rep.staged_bytes = self.staged_bytes
+                return out
+            rows[s] = row
+        nbytes = 0
+        for s, row in rows.items():
+            for name in ("sx", "sy", "sz", "cell_start", "bx", "by", "bz"):
+                nbytes += self._patch_row(name, s, row[name])
+        tomb = np.float32(G.TOMBSTONE_COORD)
+        for s, slots in rep.dead.items():
+            if s in rows:
+                continue                         # full-row restage covers it
+            slots = np.asarray(slots, np.int32)
+            if not slots.size:
+                continue
+            nbytes += self._patch_slots("sx", s, slots, tomb)
+            nbytes += self._patch_slots("sy", s, slots, tomb)
+            nbytes += self._patch_slots("sz", s, slots, np.float32(0.0))
+            bpos = np.asarray(part.owned_positions(s, slots), np.int32)
+            if bpos.size:
+                nbytes += self._patch_slots("bx", s, bpos, tomb)
+                nbytes += self._patch_slots("by", s, bpos, tomb)
+                nbytes += self._patch_slots("bz", s, bpos, np.float32(0.0))
+        for s in sorted(rep.ring_rows):
+            row = part.ring_host_row(s)
+            for name in ("rx", "ry", "rz"):
+                nbytes += self._patch_row(name, s, row[name])
+        self.staged_bytes = nbytes
+        self.staged_bytes_total += nbytes
+        self.slabs_touched = len(
+            set(rep.csr_rows) | set(rep.ring_rows) | set(rep.dead))
+        rep.staged_bytes = nbytes
+        return dict(self.arrays)
 
 
 def shard_plan(pln: AidwPlan, mesh: Mesh,
@@ -295,6 +445,7 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
                                "grid_ring"] = "auto",
                *, ring_axis: str | None = None,
                ring_threshold: int = 4_000_000,
+               ring_cap: int = 256,
                host_points=None) -> ShardedAidwPlan:
     """Place a plan on ``mesh``: replicate the CSR table + point arrays, or
     slab-shard the points when ``m`` is large (``layout='auto'`` picks
@@ -325,12 +476,13 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
             host_points = plan_host_points(pln)
         part = SlabPartition.build(pln.spec, host_points,
                                    int(mesh.shape[ring_axis]),
-                                   halo=max_level)
+                                   halo=max_level, ring_cap=ring_cap)
+        staging = SlabStaging(mesh, ring_axis)
         return ShardedAidwPlan(
             base=pln, mesh=mesh, layout="grid_ring", ring_axis=ring_axis,
-            slab_part=part,
-            slab_arrays=_put_slab_arrays(part, mesh, ring_axis),
-            rps=part.rps, halo=part.halo, max_level=max_level)
+            slab_part=part, slab_arrays=staging.full_stage(part),
+            rps=part.rps, halo=part.halo, max_level=max_level,
+            staging=staging)
     from .distributed import pad_to_multiple
 
     # pad to a CAPACITY bucket (64 rows per ring device), not just to the
@@ -347,31 +499,56 @@ def shard_plan(pln: AidwPlan, mesh: Mesh,
 
 
 def grid_ring_plan_delta(splan: ShardedAidwPlan, new_base: AidwPlan,
-                         inserts=None, deletes=None) -> ShardedAidwPlan:
+                         inserts=None, deletes=None):
     """Incrementally re-place a ``grid_ring`` plan after a dataset delta.
 
     The shard-aware half of the session's incremental update: the delta is
-    routed to the OWNING slabs' host CSR tables only
-    (:meth:`repro.core.slab.SlabPartition.apply_delta` — element-identical
-    to a fresh partition of the updated dataset; untouched slabs keep
-    their host arrays and cached ownership masks), and the grid spec /
-    slab geometry / compiled executor all survive.  The stacked device
-    packet is re-staged whole (O(m) memcpy + upload — no comparison sort;
-    per-slab device buffers that skip untouched slabs are future work,
-    see ROADMAP).  ``new_base`` is the updated base plan from
+    routed to the OWNING slabs' host state only
+    (:meth:`repro.core.slab.SlabPartition.apply_delta` — LSM-tiered:
+    inserts land in hot rings, CSR deletes tombstone in place; untouched
+    slabs keep their host arrays and cached ownership masks), and the
+    resident device packet is PATCHED per the returned
+    :class:`~repro.core.slab.DeltaReport` by :class:`SlabStaging` —
+    O(Δ + touched-slab) staged bytes instead of the former O(m) whole-
+    packet re-upload.  The grid spec / slab geometry / compiled executor
+    all survive.  ``new_base`` is the updated base plan from
     :func:`plan_delta` (same spec by construction).
+
+    Returns ``(new_splan, delta_report)``; the report carries the ingest
+    telemetry (``staged_bytes``, spill/compaction flags) the session
+    surfaces through ``stats``.
     """
     if splan.layout != "grid_ring" or splan.slab_part is None:
         raise ValueError("grid_ring_plan_delta needs a grid_ring plan")
     if new_base.spec != splan.base.spec:
         raise ValueError("delta re-placement requires an unchanged GridSpec")
-    splan.slab_part.apply_delta(inserts=inserts, deletes=deletes)
+    rep = splan.slab_part.apply_delta(inserts=inserts, deletes=deletes)
+    staging = splan.staging or SlabStaging(splan.mesh, splan.ring_axis)
+    arrays = staging.delta_stage(splan.slab_part, rep)
     return ShardedAidwPlan(
         base=new_base, mesh=splan.mesh, layout="grid_ring",
         ring_axis=splan.ring_axis, slab_part=splan.slab_part,
-        slab_arrays=_put_slab_arrays(splan.slab_part, splan.mesh,
-                                     splan.ring_axis),
-        rps=splan.rps, halo=splan.halo, max_level=splan.max_level)
+        slab_arrays=arrays, rps=splan.rps, halo=splan.halo,
+        max_level=splan.max_level, staging=staging), rep
+
+
+def grid_ring_plan_compact(splan: ShardedAidwPlan):
+    """Fold every hot ring into its slab CSRs (the background compaction
+    epoch) and patch the device packet.  The logical dataset is unchanged
+    (``base`` survives) — only WHERE points are searched moves, after
+    which the partition is element-identical to a fresh build and warm
+    queries are bitwise a fresh session's.  Returns
+    ``(new_splan, delta_report)``."""
+    if splan.layout != "grid_ring" or splan.slab_part is None:
+        raise ValueError("grid_ring_plan_compact needs a grid_ring plan")
+    rep = splan.slab_part.compact()
+    staging = splan.staging or SlabStaging(splan.mesh, splan.ring_axis)
+    arrays = staging.delta_stage(splan.slab_part, rep)
+    return ShardedAidwPlan(
+        base=splan.base, mesh=splan.mesh, layout="grid_ring",
+        ring_axis=splan.ring_axis, slab_part=splan.slab_part,
+        slab_arrays=arrays, rps=splan.rps, halo=splan.halo,
+        max_level=splan.max_level, staging=staging), rep
 
 
 def _study_area(spec: G.GridSpec) -> float:
@@ -584,9 +761,9 @@ def grid_ring_session_execute(mesh: Mesh, ring_axis: str, cfg: AidwConfig,
                               max_level: int):
     """The grid-aware ring executor for a ``layout='grid_ring'`` plan.
 
-    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, queries,
-    n_points, area) -> (values, alpha, r_obs, overflow, n_candidates,
-    zero_weight_mask)`` — see
+    Returns ``fn(sx, sy, sz, cell_start, row_lo, bx, by, bz, rx, ry, rz,
+    queries, n_points, area) -> (values, alpha, r_obs, overflow,
+    n_candidates, zero_weight_mask)`` — see
     :func:`repro.core.distributed.make_grid_ring_aidw`.  Cached per
     (mesh, ring_axis, cfg, slab geometry): a delta update that keeps the
     spec reuses the compiled executable, and because ``n_points`` is traced

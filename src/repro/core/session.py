@@ -100,11 +100,12 @@ class InterpolationSession:
                  query_domain=None, min_bucket: int = 64,
                  donate: bool | None = None, mesh=None,
                  layout: str = "replicated", ring_axis: str | None = None,
-                 max_delta_frac: float = 0.25):
+                 max_delta_frac: float = 0.25, ring_cap: int = 256):
         self.cfg = cfg
         self.min_bucket = int(min_bucket)
         self._query_domain = query_domain
         self._mesh = mesh
+        self._ring_cap = int(ring_cap)
         if mesh is not None and layout not in ("replicated", "ring",
                                                "grid_ring"):
             # no 'auto' here: the query path dispatches on the layout, so it
@@ -121,7 +122,16 @@ class InterpolationSession:
         self.stats = {"stage1_builds": 0, "delta_updates": 0, "batches": 0,
                       "queries": 0, "bucket_hits": 0, "bucket_misses": 0,
                       "last_plan_s": 0.0, "devices": self._n_dev,
-                      "n_points": 0}
+                      "n_points": 0,
+                      # ingest telemetry (flat int/float keys so the serving
+                      # report's scalar filter forwards them; grid_ring
+                      # fills them from SlabStaging/SlabPartition, other
+                      # layouts report their honest full-restage bytes)
+                      "staged_bytes": 0, "staged_bytes_total": 0,
+                      "slabs_touched": 0, "full_restages": 0,
+                      "ring_occupancy": 0.0, "ring_points": 0,
+                      "tombstone_frac": 0.0, "compactions": 0,
+                      "spilled_updates": 0}
         self._seen_buckets: set[int] = set()
         self._plan: P.AidwPlan | None = None
         self._splan: P.ShardedAidwPlan | None = None
@@ -150,9 +160,39 @@ class InterpolationSession:
             return
         self._splan = P.shard_plan(self._plan, self._mesh, self._layout,
                                    ring_axis=self._ring_axis,
+                                   ring_cap=self._ring_cap,
                                    host_points=self._host_pts)
         if self._splan.layout == "replicated":
             self._plan = self._splan.base   # replicated arrays serve both
+        self._refresh_ingest_stats()
+
+    def _refresh_ingest_stats(self, rep=None) -> None:
+        """Pull the ingest-path counters into the flat ``stats`` dict."""
+        sp = self._splan
+        if sp is None or sp.layout != "grid_ring" or sp.staging is None:
+            return
+        st, part = sp.staging, sp.slab_part
+        self.stats["staged_bytes"] = int(st.staged_bytes)
+        self.stats["staged_bytes_total"] = int(st.staged_bytes_total)
+        self.stats["slabs_touched"] = int(st.slabs_touched)
+        self.stats["full_restages"] = int(st.full_restages)
+        self.stats["ring_occupancy"] = float(part.ring_occupancy())
+        self.stats["ring_points"] = int(part.ring_size())
+        self.stats["tombstone_frac"] = float(part.tombstone_frac())
+        self.stats["compactions"] = int(part.compactions)
+        if rep is not None and rep.spilled:
+            self.stats["spilled_updates"] += 1
+
+    def compact(self) -> None:
+        """Background compaction epoch: fold every hot ring into the slab
+        CSRs and purge tombstones (``repro.core.slab`` LSM contract).  The
+        logical dataset is unchanged; after this, warm grid_ring queries
+        are bitwise a fresh session's.  No-op on other layouts (their
+        updates restage eagerly — there is nothing to fold)."""
+        if self._layout != "grid_ring" or self._splan is None:
+            return
+        self._splan, rep = P.grid_ring_plan_compact(self._splan)
+        self._refresh_ingest_stats(rep)
 
     def update(self, points_xyz=None, *, inserts=None, deletes=None,
                deltas=None) -> None:
@@ -183,14 +223,25 @@ class InterpolationSession:
             if new_plan is not None:
                 self._plan = new_plan
                 if self._layout == "grid_ring" and self._splan is not None:
-                    # shard-aware delta: ONLY the owning slabs' host CSR
-                    # tables are re-sorted/patched; the stacked device
-                    # packet is re-staged (memcpy + upload, no sort) and
-                    # the spec, slab geometry and compiled executor survive
-                    self._splan = P.grid_ring_plan_delta(
+                    # shard-aware LSM delta: inserts land in the owning
+                    # slabs' hot rings, deletes tombstone CSR slots in
+                    # place, and the resident device packet is PATCHED
+                    # per the delta report (O(Δ + touched-slab) staged
+                    # bytes) — spec, slab geometry and compiled executor
+                    # all survive
+                    self._splan, rep = P.grid_ring_plan_delta(
                         self._splan, new_plan, inserts, deletes)
+                    self._refresh_ingest_stats(rep)
                 else:
                     self._place()
+                    nb = int(new_plan.points_xy.nbytes
+                             + new_plan.values.nbytes)
+                    if new_plan.table is not None:
+                        nb += sum(int(np.asarray(a).nbytes)
+                                  for a in new_plan.table)
+                    # honest O(m) restage accounting for non-LSM layouts
+                    self.stats["staged_bytes"] = nb
+                    self.stats["staged_bytes_total"] += nb
                 self.stats["delta_updates"] += 1
                 self.stats["n_points"] = int(new_plan.n_points)
                 self.stats["last_plan_s"] = time.perf_counter() - t0
@@ -241,7 +292,8 @@ class InterpolationSession:
             arr = sp.slab_arrays
             values, alpha, r_obs, overflow, cand, zero = fn(
                 arr["sx"], arr["sy"], arr["sz"], arr["cell_start"],
-                arr["row_lo"], arr["bx"], arr["by"], arr["bz"], qp,
+                arr["row_lo"], arr["bx"], arr["by"], arr["bz"],
+                arr["rx"], arr["ry"], arr["rz"], qp,
                 jnp.float32(pln.n_points), jnp.float32(pln.area))
             # Stage-1 candidate counts (device array; no sync here — the
             # benchmark census reads it after the batch materializes)

@@ -2,4 +2,4 @@
 
 from . import ops, ref
 from .knn_kernel import knn_kernel
-from .ops import knn_d2, mean_nn_distance
+from .ops import knn_d2, knn_d2_with_ring, mean_nn_distance

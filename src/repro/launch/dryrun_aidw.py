@@ -164,11 +164,14 @@ def run_cell(kind: str, *, force: bool = False, q_block: int = 512) -> dict:
             fn = make_grid_ring_aidw(mesh, "ring", spec=spec, rps=rps,
                                      halo=halo, max_level=max_level,
                                      k=K_NN, q_block=q_block)
-            args = ((jax.ShapeDtypeStruct((n_chips, cap), jnp.float32),) * 2
+            ring_cap = 256
+            args = ((jax.ShapeDtypeStruct((n_chips, cap), jnp.float32),) * 3
                     + (jax.ShapeDtypeStruct((n_chips, n_local + 1),
                                             jnp.int32),
                        jax.ShapeDtypeStruct((n_chips,), jnp.int32))
                     + (jax.ShapeDtypeStruct((n_chips, cap2),
+                                            jnp.float32),) * 3
+                    + (jax.ShapeDtypeStruct((n_chips, ring_cap),
                                             jnp.float32),) * 3
                     + (jax.ShapeDtypeStruct((N, 2), jnp.float32),
                        jax.ShapeDtypeStruct((), jnp.float32),

@@ -43,13 +43,19 @@ class EpochUpdate:
     """One dataset update with its fleet-assigned epoch number.
 
     Exactly like the server's update surface: either a full ``points_xyz``
-    refresh or an incremental ``inserts``/``deletes`` delta.
+    refresh, an incremental ``inserts``/``deletes`` delta, or (with
+    ``compact=True``) a fleet-wide COMPACTION epoch that folds every host's
+    LSM hot ring into its slab CSR (``repro.core.slab`` module docstring).
+    Compactions consume an epoch like any other update, so a single server
+    replaying the coordinator log replays them at the same points in the
+    total order.
     """
 
     epoch: int
     points_xyz: object = None
     inserts: object = None
     deletes: object = None
+    compact: bool = False
 
     @property
     def is_delta(self) -> bool:
@@ -77,12 +83,13 @@ class EpochCoordinator:
             return self._epoch
 
     def assign(self, *, points_xyz=None, inserts=None,
-               deletes=None) -> EpochUpdate:
+               deletes=None, compact=False) -> EpochUpdate:
         """Stamp the next epoch onto an update and log it."""
         with self._lock:
             self._epoch += 1
             upd = EpochUpdate(epoch=self._epoch, points_xyz=points_xyz,
-                              inserts=inserts, deletes=deletes)
+                              inserts=inserts, deletes=deletes,
+                              compact=compact)
             self.log.append(upd)
             return upd
 

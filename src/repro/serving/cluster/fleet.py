@@ -108,10 +108,25 @@ class AidwCluster:
         # ONE deadline for the whole fleet wait — hosts apply concurrently,
         # so waiting them out sequentially must not multiply the bound by N
         deadline = None if timeout is None else time.monotonic() + timeout
+        return self._broadcast_epoch(
+            dict(points_xyz=points_xyz, inserts=inserts, deletes=deletes),
+            deadline)
+
+    def compact(self, *, timeout: float | None = None) -> int:
+        """Fleet-wide COMPACTION epoch: every host folds its LSM hot ring
+        into its slab CSR at the same point in the epoch order (so a single
+        server replaying ``coordinator.log`` replays compactions where the
+        fleet ran them).  Hosts under cluster epochs never self-compact —
+        the coordinator owns the schedule; call this when the merged
+        ``report()['fleet']['ingest']['ring_occupancy']`` nears the ring
+        high-water.  Returns the epoch."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        return self._broadcast_epoch(dict(compact=True), deadline)
+
+    def _broadcast_epoch(self, fields: dict, deadline) -> int:
         handles = {}
         with self._bcast:
-            upd = self.coordinator.assign(points_xyz=points_xyz,
-                                          inserts=inserts, deletes=deletes)
+            upd = self.coordinator.assign(**fields)
             for hid in self.router.live_hosts():
                 host = self.router._hosts[hid]
                 try:
@@ -609,6 +624,27 @@ class ShardedAidwCluster:
             for old in [e for e in self._alpha_state
                         if e < upd.epoch - 8]:   # bounded history
                 del self._alpha_state[old]
+        _parallel_hosts(
+            zip(self.hosts, handles),
+            lambda hw: hw[0].wait_update(
+                hw[1], timeout=None if deadline is None
+                else max(deadline - time.monotonic(), 0.0)))
+        return upd.epoch
+
+    def compact(self, *, timeout: float | None = None) -> int:
+        """Fleet-wide COMPACTION epoch across all shards: each host folds
+        its own shard's hot ring into its slab CSR at the same point in the
+        epoch order.  Partition state (members/m/spec) is unchanged —
+        compaction moves points between tiers, never between shards.
+        Returns the epoch."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._bcast:
+            upd = self.coordinator.assign(compact=True)
+            handles = [host.submit_update(
+                EpochUpdate(epoch=upd.epoch, compact=True))
+                for host in self.hosts]
+            self._alpha_state[upd.epoch] = (self.m, self.area, self.spec,
+                                            self.rps)
         _parallel_hosts(
             zip(self.hosts, handles),
             lambda hw: hw[0].wait_update(

@@ -66,6 +66,9 @@ class HostServer:
     # -- write path (epoch-ordered) ------------------------------------------
 
     def _enqueue_update(self, upd: EpochUpdate):
+        if upd.compact:
+            return self.server.submit_compaction(
+                epoch=upd.epoch, timeout=self.update_admission_timeout_s)
         return self.server.submit_update(
             upd.points_xyz, inserts=upd.inserts, deletes=upd.deletes,
             epoch=upd.epoch, timeout=self.update_admission_timeout_s)

@@ -222,7 +222,8 @@ class RemoteHost:
                 points=enc_array(upd.points_xyz),
                 inserts=enc_array(upd.inserts),
                 deletes=enc_array(None if upd.deletes is None
-                                  else np.asarray(upd.deletes)))
+                                  else np.asarray(upd.deletes)),
+                compact=int(upd.compact))
             handle.duplicate = bool(reply.get("duplicate"))
             handle._bound.set()
         except BaseException as e:
@@ -419,7 +420,8 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                 upd = EpochUpdate(epoch=int(msg["epoch"]),
                                   points_xyz=dec_array(msg.get("points")),
                                   inserts=dec_array(msg.get("inserts")),
-                                  deletes=dec_array(msg.get("deletes")))
+                                  deletes=dec_array(msg.get("deletes")),
+                                  compact=bool(msg.get("compact", 0)))
                 h = host.submit_update(upd)
                 if not h.duplicate:
                     # duplicates are never waited on (and must not clobber

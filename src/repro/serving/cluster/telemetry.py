@@ -31,8 +31,9 @@ _AXES = ("queue", "execute", "total", "shed")
 def merge_reports(host_reports: list[dict]) -> dict:
     """Merge per-host ``AsyncAidwServer.report()`` dicts (each carrying the
     ``merge`` state block) into one fleet report: summed counters, exact
-    merged-histogram p50/p95/p99 per latency axis, summed QPS, and the
-    fleet epoch range.  JSON-serializable (the ``load_gen.py --cluster
+    merged-histogram p50/p95/p99 per latency axis, summed QPS, the fleet
+    epoch range, and an ``ingest`` block (summed staged bytes/compactions,
+    max ring occupancy / tombstone fraction) from per-host session stats.  JSON-serializable (the ``load_gen.py --cluster
     --json`` artifact body)."""
     if not host_reports:
         raise ValueError("merge_reports needs at least one host report")
@@ -41,12 +42,26 @@ def merge_reports(host_reports: list[dict]) -> dict:
     qps = 0.0
     epochs = []
     host_ids = []
+    # ingest tier: bytes/compactions/slab touches SUM across hosts; ring
+    # occupancy and tombstone fraction take the fleet MAX (the host closest
+    # to its compaction high-water / rebin threshold is the one that matters)
+    _ING_SUM = ("staged_bytes_total", "compactions", "slabs_touched",
+                "full_restages", "spilled_updates", "ring_points")
+    _ING_MAX = ("ring_occupancy", "tombstone_frac")
+    ingest: dict = {}
     for rep in host_reports:
         st = rep["merge"]
         for k, v in st["counters"].items():
             counters[k] = counters.get(k, 0) + int(v)
         for k, v in rep.get("admission", {}).items():
             admission[k] = admission.get(k, 0) + int(v)
+        sess = rep.get("session", {})
+        for k in _ING_SUM:
+            if k in sess:
+                ingest[k] = ingest.get(k, 0) + int(sess[k])
+        for k in _ING_MAX:
+            if k in sess:
+                ingest[k] = max(ingest.get(k, 0.0), float(sess[k]))
         qps += float(st["queries_per_s"])
         epochs.append(int(rep.get("epoch", 0)))
         host_ids.append(rep.get("host_id"))
@@ -62,6 +77,7 @@ def merge_reports(host_reports: list[dict]) -> dict:
         "queries_per_s": qps,
         "latency": latency,
         "admission": admission,
+        "ingest": ingest,
         "epoch_min": min(epochs),
         "epoch_max": max(epochs),
     }

@@ -239,7 +239,7 @@ class AidwEngine:
     def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
                  query_domain=None, min_bucket: int = 64, mesh=None,
                  layout: str = "replicated", slack_s: float = 0.0,
-                 clock=time.monotonic):
+                 ring_cap: int = 256, clock=time.monotonic):
         from repro.core import AidwConfig
         from repro.core.session import InterpolationSession
 
@@ -248,7 +248,8 @@ class AidwEngine:
 
         self.session = InterpolationSession(
             points_xyz, cfg or AidwConfig(), query_domain=query_domain,
-            min_bucket=min_bucket, mesh=mesh, layout=layout)
+            min_bucket=min_bucket, mesh=mesh, layout=layout,
+            ring_cap=ring_cap)
         self.max_batch = int(max_batch)
         self.clock = clock
         # keyed on (query bucket, dataset bucket): estimates stay calibrated

@@ -16,6 +16,20 @@ it — churn is serialized with query execution on one thread, so an
 incremental CSR patch can never race a query batch that is mid-flight, and a
 query submitted after the update observes the updated dataset.
 
+Ring visibility + compaction epochs (``layout='grid_ring'`` sessions): a
+delta's inserts tier into per-slab hot append rings and its deletes
+tombstone in place (the O(Δ) staging contract in ``repro.core.slab``), and
+the very next query batch searches ring + CSR exactly — ring-resident
+results sit within 1 ulp of a fresh plan's.  ``submit_compaction()`` /
+``compact()`` enqueue a COMPACTION epoch through the same FIFO: queries
+admitted before it see the ring-resident state, queries after it see tables
+bitwise-identical to a fresh build at the same GridSpec.  Standalone
+servers also self-enqueue a compaction after any local-epoch delta that
+leaves ring occupancy at/above ``compact_highwater``; cluster-epoch'd hosts
+never self-compact — the coordinator broadcasts compaction epochs so a
+single server replaying the epoch log replays them at the same points in
+the total order.
+
 Lifecycle: ``submit() -> result()`` per request; ``flush()`` waits for
 everything admitted so far; ``close()`` stops the worker (context-manager
 support included).  Telemetry (queue/execute/total latency histograms, QPS,
@@ -51,12 +65,21 @@ class _UpdateOp:
     ``repro.serving.cluster.epochs``); ``None`` auto-increments the server's
     local epoch counter, so a standalone server replaying the same updates
     in the same order stamps the same epoch sequence as a cluster host.
+
+    ``compact=True`` is the background COMPACTION epoch of the LSM ingest
+    tier (``repro.core.slab`` hot-ring contract): it carries no data, but
+    flows through the same FIFO — every query admitted before it is served
+    against the ring-resident state, every query after it against the
+    compacted (bitwise-fresh) tables — and bumps the epoch like any other
+    update, so a single server replaying a cluster's epoch log replays
+    its compactions at the same points in the order.
     """
 
     points_xyz: object = None
     inserts: object = None
     deletes: object = None
     epoch: int | None = None         # explicit cluster epoch; None = +1
+    compact: bool = False            # fold hot rings instead of a delta
     error: BaseException | None = None
     cancelled: bool = False          # timed-out caller withdrew the op
     skipped: bool = False            # worker honoured the withdrawal
@@ -108,14 +131,15 @@ class AsyncAidwServer:
                  max_depth: int = 1024, query_domain=None,
                  min_bucket: int = 64, mesh=None, layout: str = "replicated",
                  slack_s: float = 0.0, linger_s: float = 0.0,
-                 pipeline_depth: int = 0, clock=time.monotonic):
+                 pipeline_depth: int = 0, compact_highwater: float = 0.75,
+                 ring_cap: int = 256, clock=time.monotonic):
         # ONE construction path for the session/estimator/coalescer/
         # telemetry stack: the engine builds it, the server drives it from
         # a worker thread (and the sync facade stays usable via .engine)
         self.engine = AidwEngine(
             points_xyz, cfg, max_batch=max_batch, query_domain=query_domain,
             min_bucket=min_bucket, mesh=mesh, layout=layout, slack_s=slack_s,
-            clock=clock)
+            ring_cap=ring_cap, clock=clock)
         self.session = self.engine.session
         self.clock = clock
         self.estimator = self.engine.estimator
@@ -137,6 +161,12 @@ class AsyncAidwServer:
         # update re-syncs it
         self.epoch = 0
         self._epoch_gap: int | None = None
+        # LSM hot-ring high-water: after a LOCAL-epoch delta leaves ring
+        # occupancy at/above this fraction, the worker self-enqueues a
+        # background compaction epoch (standalone mode only — cluster-
+        # epoch'd hosts compact when the coordinator says so, or the
+        # replay-equivalence of the epoch log would break).  <= 0 disables.
+        self.compact_highwater = float(compact_highwater)
         self._uid = itertools.count()
         self._reqs: dict[int, InterpolationRequest] = {}
         self._cv = threading.Condition()
@@ -346,6 +376,28 @@ class AsyncAidwServer:
             raise op.error
         return op.result + (op.epoch,)
 
+    def submit_compaction(self, *, epoch: int | None = None,
+                          timeout: float | None = None) -> _UpdateOp:
+        """Enqueue a background COMPACTION epoch without waiting (the LSM
+        hot-ring fold — ``repro.core.session.InterpolationSession.compact``).
+        A FIFO barrier like any update: queries admitted after it observe
+        the compacted (bitwise-fresh) tables.  Returns the op handle for
+        :meth:`wait_update`."""
+        self._raise_worker_error()
+        op = _UpdateOp(compact=True, epoch=epoch)
+        self.queue.put(op, timeout=timeout)
+        return op
+
+    def compact(self, *, epoch: int | None = None,
+                timeout: float | None = None) -> None:
+        """Fold the session's hot rings through the admission queue and
+        block until applied (no-op on layouts without an LSM tier)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        op = self.submit_compaction(epoch=epoch, timeout=timeout)
+        self.wait_update(
+            op, timeout=None if deadline is None
+            else max(deadline - time.monotonic(), 0.0))
+
     def update_dataset(self, points_xyz=None, *, inserts=None, deletes=None,
                        deltas=None, epoch: int | None = None,
                        timeout: float | None = None) -> None:
@@ -443,11 +495,25 @@ class AsyncAidwServer:
                 raise RuntimeError(
                     f"epoch {op.epoch} <= current {self.epoch}: updates "
                     f"must apply in increasing epoch order")
-            self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
-                                       deletes=op.deletes)
+            if op.compact:
+                self.session.compact()
+            else:
+                self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
+                                           deletes=op.deletes)
             self.epoch = op.epoch if op.epoch is not None else self.epoch + 1
             if op.points_xyz is not None:
                 self._epoch_gap = None      # full refresh healed the hole
+            if not op.compact and op.epoch is None \
+                    and self.compact_highwater > 0 \
+                    and self.session.stats.get("ring_occupancy", 0.0) \
+                    >= self.compact_highwater:
+                # standalone auto-epoch mode: self-enqueue the background
+                # fold BEHIND whatever queries are already admitted (best
+                # effort — a full queue skips; the next delta re-triggers)
+                try:
+                    self.queue.put(_UpdateOp(compact=True), block=False)
+                except AdmissionQueueFull:
+                    pass
         except BaseException as e:          # surface to the waiting client
             op.error = e
         finally:

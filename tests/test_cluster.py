@@ -781,3 +781,66 @@ def test_sharded_cluster_full_refresh_replans_and_bbox_guard():
         assert got.epoch == 1
         err = np.abs(np.asarray(want.values) - got.values).max()
         assert err < 1e-4, err
+
+
+def test_sharded_cluster_churn_with_compaction_matches_replay():
+    """ISSUE 7 acceptance: a sharded fleet under CONCURRENT writer churn
+    plus a fleet-wide COMPACTION epoch matches a single grid_ring server
+    replaying the coordinator's epoch log — compaction epochs replayed AS
+    compactions (they carry no delta payload; replaying them through
+    update_dataset would corrupt the replay), everything else in epoch
+    order."""
+    from repro.core.jax_compat import make_auto_mesh
+    from repro.serving.cluster import ShardedAidwCluster
+
+    pts = spatial_points(8192, seed=0)
+    qd = spatial_queries(1024, seed=1)
+    qs = spatial_queries(300, seed=2)
+    lo, hi = pts[:, :2].min(axis=0), pts[:, :2].max(axis=0)
+
+    def _ins(seed, n=32):
+        # clip into the frozen bbox: both the fleet spec and the replay
+        # server's plan_delta freeze the grid across deltas
+        ins = spatial_points(n, seed=seed)
+        ins[:, :2] = np.clip(ins[:, :2], lo, hi)
+        return ins
+
+    with ShardedAidwCluster(pts, n_hosts=2, query_domain=qd) as fleet:
+
+        def churn(k):
+            fleet.update_dataset(inserts=_ins(60 + k),
+                                 deletes=np.arange(k * 32, (k + 1) * 32),
+                                 timeout=300)
+
+        ts = [threading.Thread(target=churn, args=(k,)) for k in range(3)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert fleet.compact(timeout=300) == 4   # fleet-wide ring fold
+        fleet.update_dataset(inserts=_ins(99), deletes=np.arange(16),
+                             timeout=300)
+        got = fleet.query(qs, timeout=300)
+        assert got.epoch == 5
+        log = list(fleet.coordinator.log)
+    assert [u.compact for u in log] == [False, False, False, True, False]
+    assert log[3].points_xyz is None and log[3].inserts is None \
+        and log[3].deletes is None               # compact carries no delta
+    # the replay reference runs the grid_ring layout so the compaction
+    # epoch really folds hot rings into the slab CSR mid-log
+    mesh = make_auto_mesh((1,), ("q",))
+    with AsyncAidwServer(pts, query_domain=qd, mesh=mesh,
+                         layout="grid_ring", ring_cap=512) as ref:
+        for u in log:
+            if u.compact:
+                ref.compact(timeout=300)
+            else:
+                ref.update_dataset(u.points_xyz, inserts=u.inserts,
+                                   deletes=u.deletes, timeout=300)
+        assert ref.session.stats["compactions"] >= 1
+        assert ref.session.stats["ring_points"] == 32   # post-compact delta
+        want = ref.result(ref.submit(qs))
+    # sharded merge is f32-accumulation tolerant of a replica (1e-4) and
+    # the grid_ring layout adds its own documented 1-ulp Stage-2 caveat
+    err = np.abs(np.asarray(want.values) - got.values).max()
+    assert err < 5e-4, err

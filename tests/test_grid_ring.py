@@ -105,8 +105,10 @@ def test_slab_merge_matches_brute_near_boundaries(m, p, seed, k):
 @settings(max_examples=15, deadline=None)
 @given(st.integers(200, 1200), st.integers(2, 5), st.integers(0, 10_000))
 def test_slab_partition_delta_element_identical(m, p, seed):
-    """apply_delta == fresh build of the reconstructed dataset, every array
-    of every slab table (the grid-ring delta-update contract)."""
+    """apply_delta + compact == fresh build of the reconstructed dataset,
+    every array of every slab table (the grid-ring delta-update contract:
+    deltas tier through the hot rings / tombstones, and compaction folds
+    them back to exactly the fresh-build arrays)."""
     rng = np.random.default_rng(seed)
     pts = np.concatenate([rng.random((m, 2)), rng.random((m, 1))],
                          1).astype(np.float32)
@@ -122,6 +124,8 @@ def test_slab_partition_delta_element_identical(m, p, seed):
         keep = np.ones(cur.shape[0], bool)
         keep[dels] = False
         cur = np.concatenate([cur[keep], ins], 0)
+    part.compact()                      # fold rings + purge tombstones
+    assert part.ring_size() == 0 and part.tombstone_frac() == 0.0
     fresh = SlabPartition.build(spec, cur, p, halo=3)
     assert part.m == fresh.m == cur.shape[0]
     for s in range(p):
@@ -171,11 +175,21 @@ def test_grid_ring_session_single_device_mesh():
     sess.update(inserts=ins, deletes=dels)
     assert sess.stats["delta_updates"] == 1
     assert sess.stats["stage1_builds"] == 1        # executor survived
+    assert sess.stats["ring_points"] == 40         # inserts tiered in-ring
+    assert sess.stats["staged_bytes"] > 0
     keep = np.ones(2048, bool)
     keep[dels] = False
     fresh = InterpolationSession(
         np.concatenate([pts[keep], ins.astype(pts.dtype)], 0),
         query_domain=qs, mesh=mesh, layout="grid_ring")
+    # ring-resident: within the documented 1-ulp FMA caveat of fresh
+    np.testing.assert_allclose(np.asarray(sess.query(qs).values),
+                               np.asarray(fresh.query(qs).values),
+                               rtol=1e-6, atol=1e-6)
+    # post-compaction: BITWISE a fresh plan's (same m -> same GridSpec)
+    sess.compact()
+    assert sess.stats["ring_points"] == 0
+    assert sess.stats["compactions"] == 1
     assert np.array_equal(np.asarray(sess.query(qs).values),
                           np.asarray(fresh.query(qs).values))
 
@@ -221,13 +235,22 @@ rerr = np.abs(np.asarray(ring.query(qs).values)
               - np.asarray(a.values)).max()
 assert rerr < 1e-4, rerr
 
-# incremental delta: slab CSR patch only, element-identical to fresh
+# incremental delta: inserts tier through the hot rings (O(Delta) staging),
+# deletes tombstone in place; ring-resident answers stay within 1 ulp of
+# the physically-rebinned single session, and COMPACTION restores
+# element-identity with a fresh plan (bitwise values, same m -> same spec)
 dels = np.random.default_rng(3).choice(16384, 160, replace=False)
 ins = spatial_points(160, seed=9)
 for s in (single, sess):
     s.update(inserts=ins, deletes=dels)
 assert sess.stats["delta_updates"] == 1 and sess.stats["stage1_builds"] == 1
+assert sess.stats["ring_points"] == 160
 a2, b2 = single.query(qs), sess.query(qs)
+np.testing.assert_allclose(np.asarray(a2.r_obs), np.asarray(b2.r_obs),
+                           rtol=1e-6, atol=1e-6)
+sess.compact()
+assert sess.stats["ring_points"] == 0 and sess.stats["compactions"] == 1
+b2 = sess.query(qs)
 assert np.array_equal(np.asarray(a2.r_obs), np.asarray(b2.r_obs))
 keep = np.ones(16384, bool); keep[dels] = False
 fresh = InterpolationSession(
