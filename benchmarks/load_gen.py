@@ -28,17 +28,34 @@ across hosts, updates broadcast as epoch-ordered barriers — and reports the
 MERGED fleet telemetry (per-host histograms merged bin-exactly into fleet
 p50/p95/p99, QPS and shed counters summed; per-host reports attached).
 ``--cluster-procs`` backs every host but the coordinator's with a real
-subprocess over the socket control plane.  Standalone:
+subprocess over the socket control plane.
+
+Tracing (PR 8): ``--trace-sample-rate P`` turns on end-to-end spans —
+single-server mode builds the server's tracer at rate ``P``; cluster mode
+samples at the ROUTER (rate ``P``) and runs every host's tracer at rate 0
+so propagated contexts are recorded but no fleet-invisible roots start.
+``--trace-out PATH`` writes the collected spans as Chrome ``trace_event``
+JSON (loads in ``chrome://tracing``/Perfetto; the CI cluster-suite uploads
+it as the sample-trace artifact).  ``--trace-overhead-gate`` runs the
+rate-0 overhead acceptance check instead of a plain load run: two
+identical loads, one without a tracer and one with a sample-rate-0 tracer
+(the always-on production configuration), and RAISES when the traced p99
+exceeds ``TRACE_OVERHEAD_LIMIT`` (2%) over baseline — best of 3 attempts,
+since open-loop p99 on a shared CPU box is noisy and the gate exists to
+catch hot-path instrumentation cost, not scheduler jitter.  Standalone:
 
     PYTHONPATH=src python benchmarks/load_gen.py [--json] [--mesh]
         [--requests N] [--rate QPS] [--updates K]
         [--cluster N [--cluster-procs]] [--policy least_loaded]
+        [--trace-sample-rate P] [--trace-out trace.json]
+        [--trace-overhead-gate]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
@@ -156,7 +173,8 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
           updates: int = 3, req_queries: int = 96, seed: int = 0,
           pipeline_depth: int = 0, layout: str = "replicated",
           ring_cap: int = 1024, write_rate_rps: float = 0.0,
-          write_batch: int = 32) -> dict:
+          write_batch: int = 32,
+          trace_sample_rate: float | None = None) -> dict:
     """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
     and the JSON CLI so both measure the same configuration).
 
@@ -168,28 +186,37 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
     turns on the mixed read/write open-loop mode (:func:`run_load`);
     ``layout='grid_ring'`` (+ ``mesh``) serves writes through the O(Δ)
     per-slab delta staging instead of a full re-stage per delta.
+    ``trace_sample_rate`` builds the server's tracer at that rate (``None``
+    = no tracer at all — the overhead-gate baseline); collected spans ride
+    out under ``"spans"``.
     """
     pts = spatial_points(points, seed=seed)
     with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh, layout=layout,
                          ring_cap=ring_cap, pipeline_depth=pipeline_depth,
+                         trace_sample_rate=trace_sample_rate,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         for _ in range(3):
             srv.submit(spatial_queries(req_queries, seed=2))
         srv.flush(timeout=600)
         srv.telemetry.reset()
+        srv.spans()                     # drop warmup spans ([] if no tracer)
         for k in srv.queue.counters:
             srv.queue.counters[k] = 0
-        return run_load(srv, trace, updates=updates, points=points,
-                        seed=seed, write_rate_rps=write_rate_rps,
-                        write_batch=write_batch,
-                        write_bbox=(pts[:, :2].min(axis=0),
-                                    pts[:, :2].max(axis=0)))
+        out = run_load(srv, trace, updates=updates, points=points,
+                       seed=seed, write_rate_rps=write_rate_rps,
+                       write_batch=write_batch,
+                       write_bbox=(pts[:, :2].min(axis=0),
+                                   pts[:, :2].max(axis=0)))
+        if trace_sample_rate:
+            out["spans"] = srv.spans()
+        return out
 
 
 def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
                   max_batch: int = 4096, updates: int = 3,
                   req_queries: int = 96, seed: int = 0,
-                  policy: str = "round_robin", mesh=None) -> dict:
+                  policy: str = "round_robin", mesh=None,
+                  trace_sample_rate: float | None = None) -> dict:
     """Replay ``trace`` against an ``n_hosts`` fleet; returns the merged
     fleet report (flattened: ``report`` = fleet view, ``hosts``/``routing``
     attached).
@@ -199,6 +226,10 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
     multi-host deployment shape, minus the machines.  ``mesh`` applies to
     IN-PROCESS hosts only (they share this process's devices); subprocess
     hosts build their own local mesh from their own visible devices.
+    ``trace_sample_rate`` samples at the ROUTER; hosts (subprocess ones
+    included) run their tracers at rate 0 so they record propagated
+    contexts without starting fleet-invisible roots; spans collected from
+    every live host ride out under ``"spans"``.
     """
     import os
 
@@ -208,20 +239,23 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
     pts = spatial_points(points, seed=seed)
     qd = spatial_queries(1024, seed=1)
     workers, hosts = [], None
+    host_rate = 0.0 if trace_sample_rate is not None else None
     if procs and n_hosts > 1:
         base = free_port_base(n_hosts)
         env = dict(os.environ)
         env.setdefault("PYTHONPATH", "src")
         workers = [spawn_worker(i, n_hosts, points=points, seed=seed,
                                 control_port=base, max_batch=max_batch,
-                                env=env)
+                                trace_sample_rate=host_rate, env=env)
                    for i in range(1, n_hosts)]
-        hosts = [HostServer(0, pts, max_batch=max_batch, query_domain=qd)] \
+        hosts = [HostServer(0, pts, max_batch=max_batch, query_domain=qd,
+                            trace_sample_rate=host_rate)] \
             + [RemoteHost(i, ("127.0.0.1", base + i), connect_timeout_s=300)
                for i in range(1, n_hosts)]
     try:
         with AidwCluster(None if hosts else pts, n_hosts=n_hosts,
                          hosts=hosts, policy=policy,
+                         trace_sample_rate=trace_sample_rate,
                          **({} if hosts else
                             {"max_batch": max_batch,
                              "query_domain": qd, "mesh": mesh})) as cl:
@@ -238,6 +272,8 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
             out["hosts"] = rep["hosts"]
             out["routing"] = rep["routing"]
             out["epoch"] = rep["epoch"]
+            if trace_sample_rate:
+                out["spans"] = cl.collect_spans()
     finally:
         for w in workers:
             try:
@@ -348,6 +384,54 @@ def mixed_rows(n_requests: int = 96, rate_rps: float = 400.0,
     ]
 
 
+TRACE_OVERHEAD_LIMIT = 1.02     # traced/baseline p99 ceiling (the <2% story)
+
+
+def trace_overhead_rows(n_requests: int = 64, rate_rps: float = 200.0,
+                        req_queries: int = 96, points: int = 16384,
+                        seed: int = 0, attempts: int = 3) -> list[tuple]:
+    """The rate-0 tracing overhead acceptance gate.
+
+    Replays one open-loop trace twice — ``trace_sample_rate=None`` (no
+    tracer object anywhere: the pre-PR-8 hot path) vs
+    ``trace_sample_rate=0.0`` (tracer constructed, sampler never admits:
+    the always-on production configuration, whose cost is one ``None``
+    check per call site) — and RAISES when the traced p99 exceeds
+    ``TRACE_OVERHEAD_LIMIT`` x baseline on the best of ``attempts`` runs.
+    Deadline-free trace (a shed tail would censor the very p99 under
+    comparison) at a sub-saturation rate (at oversaturation p99 measures
+    queue depth, which amplifies any jitter into false trips)."""
+    trace = make_trace(n_requests, rate_rps, req_queries,
+                       deadline_frac=0.0, deadline_ms=(0.0, 0.0), seed=seed)
+    kw = dict(updates=0, req_queries=req_queries, seed=seed)
+    best = float("inf")
+    for _ in range(attempts):
+        base = drive(points, trace, trace_sample_rate=None, **kw)
+        traced = drive(points, trace, trace_sample_rate=0.0, **kw)
+        for out in (base, traced):
+            if out["lost"] or out["duplicated"]:
+                raise RuntimeError(
+                    f"trace-overhead run lost/duplicated requests: "
+                    f"{out['lost']}/{out['duplicated']}")
+        b99 = base["report"]["latency"]["total"]["p99_s"]
+        t99 = traced["report"]["latency"]["total"]["p99_s"]
+        ratio = t99 / max(b99, 1e-12)
+        best = min(best, ratio)
+        if best <= TRACE_OVERHEAD_LIMIT:
+            break
+    if best > TRACE_OVERHEAD_LIMIT:
+        raise RuntimeError(
+            f"trace overhead gate: sample-rate-0 tracing p99 is {best:.3f}x "
+            f"baseline (> {TRACE_OVERHEAD_LIMIT}x) over {attempts} attempts "
+            f"(baseline {b99 * 1e3:.2f}ms, traced {t99 * 1e3:.2f}ms)")
+    tag = f"{points}x{req_queries}@{rate_rps:.0f}rps"
+    return [
+        (f"serving/trace_overhead_p99_ratio/{tag}", 0.0,
+         f"rate-0 tracing p99 {best:.3f}x baseline "
+         f"(limit {TRACE_OVERHEAD_LIMIT}x, best of {attempts})"),
+    ]
+
+
 def cluster_rows(n_requests: int = 64, rate_rps: float = 300.0,
                  req_queries: int = 96, points: int = 16384,
                  updates: int = 2, seed: int = 0,
@@ -422,9 +506,32 @@ def main() -> None:
     p.add_argument("--policy", default="round_robin",
                    choices=("round_robin", "least_loaded"))
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace-sample-rate", type=float, default=None,
+                   metavar="P",
+                   help="end-to-end tracing: root sample rate (cluster "
+                        "mode samples at the router; hosts record at rate "
+                        "0). 0.0 = tracer on, sampler off (the overhead-"
+                        "gate configuration)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write collected spans as Chrome trace_event JSON "
+                        "(needs --trace-sample-rate > 0; CI uploads it as "
+                        "the sample-trace artifact)")
+    p.add_argument("--trace-overhead-gate", action="store_true",
+                   help="run the rate-0 tracing overhead acceptance gate "
+                        "(<2% p99 over an untraced baseline, best of 3) "
+                        "instead of a plain load run; raises on failure")
     p.add_argument("--json", action="store_true",
                    help="emit the full JSON latency report (CI artifact)")
     args = p.parse_args()
+
+    if args.trace_overhead_gate:
+        rows = trace_overhead_rows(n_requests=args.requests,
+                                   req_queries=args.req_queries,
+                                   points=args.points, seed=args.seed)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     mesh = None
     if args.mesh and not (args.cluster and args.cluster_procs):
@@ -444,13 +551,25 @@ def main() -> None:
                             procs=args.cluster_procs,
                             max_batch=args.max_batch, updates=args.updates,
                             req_queries=args.req_queries, seed=args.seed,
-                            policy=args.policy, mesh=mesh)
+                            policy=args.policy, mesh=mesh,
+                            trace_sample_rate=args.trace_sample_rate)
     else:
         out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
                     updates=args.updates, req_queries=args.req_queries,
                     seed=args.seed, pipeline_depth=args.pipeline,
                     layout=args.layout, write_rate_rps=args.write_rate,
-                    write_batch=args.write_batch)
+                    write_batch=args.write_batch,
+                    trace_sample_rate=args.trace_sample_rate)
+
+    spans = out.pop("spans", [])
+    if args.trace_out:
+        from repro.obs import chrome_trace
+
+        with open(args.trace_out, "w") as f:
+            json.dump(chrome_trace(spans), f)
+        out["trace_events"] = len(spans)
+        print(f"# wrote {len(spans)} spans to {args.trace_out}",
+              file=sys.stderr)
 
     if out["lost"] or out["duplicated"]:
         # CLI invariant gate (CI churn step): a lost or duplicated request

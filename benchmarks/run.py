@@ -2,7 +2,8 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--skip-paper]
 [--skip-roofline] [--skip-session] [--skip-ring] [--skip-ingest]
-[--skip-load] [--skip-churn] [--skip-cluster] [--json [PATH]]``
+[--skip-load] [--skip-churn] [--skip-cluster] [--skip-stages]
+[--json [PATH]]``
 
 Prints ``name,us_per_call,derived`` CSV rows.  The ``session/*`` rows compare
 cold one-shot ``aidw_improved`` against warm ``InterpolationSession.query``
@@ -24,7 +25,12 @@ the O(Δ) per-slab donation-aliased delta staging against the full-packet
 re-stage (>= 10x fewer staged bytes required at 1% churn), and the
 ``serving/churn_*`` rows put a grid_ring server under a sustained mixed
 read/write open-loop load (mixed p99 must stay within 1.5x of read-only at
-the same offered load).
+the same offered load).  The ``stage/*`` rows (benchmarks/stage_bench.py)
+read per-stage walls — stage1/stage2/staging/compact/queue_wait/coalesce —
+out of the SAME ``repro.obs.Registry`` histograms the production paths
+populate, each with a raising gate (fence honesty, span nesting, count
+exactness, the queue+execute==total identity, span/metric agreement) plus a
+profiled-sum vs end-to-end reconciliation band.
 
 ``--json`` additionally writes the rows (plus environment metadata) to a
 repo-root perf-trajectory artifact.  The artifact name is derived per PR —
@@ -40,7 +46,7 @@ import argparse
 import os
 import sys
 
-DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR7")
+DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR8")
 
 
 def default_artifact(tag: str = DEFAULT_TAG) -> str:
@@ -64,6 +70,8 @@ def main() -> None:
                    help="skip the O(Delta) delta-staging ingest rows")
     p.add_argument("--skip-churn", action="store_true",
                    help="skip the sustained-churn mixed read/write rows")
+    p.add_argument("--skip-stages", action="store_true",
+                   help="skip the per-stage observability rows + gates")
     p.add_argument("--artifact-tag", default=DEFAULT_TAG, metavar="TAG",
                    help="perf-trajectory artifact tag: --json with no PATH "
                         "writes BENCH_<TAG>.json (env BENCH_ARTIFACT_TAG "
@@ -109,6 +117,7 @@ def main() -> None:
         from . import load_gen as L
 
         rows += L.load_rows()           # async server under Poisson load
+        rows += L.trace_overhead_rows()  # rate-0 tracing <2% p99 gate
 
     if not args.skip_churn:
         from . import load_gen as L
@@ -119,6 +128,11 @@ def main() -> None:
         from . import load_gen as L
 
         rows += L.cluster_rows()        # 1-host vs 2-host fleet scale-out
+
+    if not args.skip_stages:
+        from . import stage_bench as ST
+
+        rows += ST.stage_rows()         # per-stage walls from the registry
 
     if not args.skip_roofline:
         from . import roofline as R

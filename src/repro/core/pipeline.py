@@ -567,7 +567,8 @@ def execute_traces() -> int:
 
 
 def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
-         query_domain=None, bin: bool = True) -> AidwPlan:
+         query_domain=None, bin: bool = True,
+         timings: dict | None = None) -> AidwPlan:
     """One-time Stage-1 build: grid planning + CSR binning for a dataset.
 
     ``query_domain`` optionally extends the grid's bounding box to cover
@@ -581,13 +582,25 @@ def plan(points_xyz, cfg: AidwConfig = AidwConfig(), *,
     only need the spec/area/point arrays — the ring layout's brute-force
     executor never reads the table, and for the dataset sizes ring targets
     the full sort is exactly the cost to avoid.
+
+    ``timings`` (optional dict) receives ``bin_s`` — the fenced wall of the
+    CSR build alone — so the session's ``plan`` span can attribute its
+    ``bin`` sub-span honestly (the fence costs one device sync on a path
+    that is already eager and host-dominated).
     """
     points_xyz = jnp.asarray(points_xyz)
     px, py, pz = points_xyz[:, 0], points_xyz[:, 1], points_xyz[:, 2]
     qd = None if query_domain is None else np.asarray(query_domain)
     spec = G.plan_grid(np.asarray(points_xyz[:, :2]), qd,
                        cell_factor=cfg.cell_factor)
-    table = G.bin_points(spec, px, py, pz) if bin else None
+    if bin:
+        tb = time.perf_counter()
+        table = G.bin_points(spec, px, py, pz)
+        if timings is not None:
+            jax.block_until_ready(table)
+            timings["bin_s"] = time.perf_counter() - tb
+    else:
+        table = None
     return pad_plan(AidwPlan(
         spec=spec, table=table, points_xy=points_xyz[:, :2],
         values=pz, n_points=points_xyz.shape[0],
@@ -808,6 +821,43 @@ def _shard_partial_core(cfg: AidwConfig, points_xy, values, queries_xy,
 
 _shard_knn_execute = jax.jit(_shard_knn_core, static_argnums=(0, 1))
 _shard_partial_execute = jax.jit(_shard_partial_core, static_argnums=(0,))
+
+
+# Profiled per-stage entry points (``InterpolationSession.query(profile=True)``
+# and benchmarks/stage_bench.py): Stage 1 and Stage 2 as two separately-jitted
+# launches so each stage can be fenced (``block_until_ready``) and timed on
+# its own.  The fused single-jit :data:`_session_execute` lets XLA fuse across
+# the stage boundary, so profiled values may differ from it by accumulation
+# order only; the profiled path exists for honest stage walls, not serving.
+
+
+def _stage1_profile_core(spec: G.GridSpec, cfg: AidwConfig,
+                         table: G.CellTable, queries_xy):
+    res, r_obs = _stage1(spec, cfg, table, queries_xy)
+    return res.d2, res.idx, res.n_candidates, res.overflow, r_obs
+
+
+def _stage2_profile_core(cfg: AidwConfig, points_xy, values, queries_xy,
+                         d2, idx, n_cand, overflow, r_obs, n_points, area):
+    n_points = jnp.float32(n_points)
+    area = jnp.float32(area)
+    alpha = A.adaptive_alpha(r_obs, n_points, area, alphas=cfg.alphas,
+                             r_min=cfg.r_min, r_max=cfg.r_max)
+    if cfg.stage2 == "local":
+        res = K.KnnResult(d2=d2, idx=idx, n_candidates=n_cand,
+                          overflow=overflow)
+        out, zero = _stage2_local(res, values, r_obs, alpha, n_points, area,
+                                  cfg)
+    elif cfg.fused and cfg.stage2 == "tiled":
+        out, zero = _stage2_fused(queries_xy, points_xy, values, r_obs,
+                                  n_points, area, cfg)
+    else:
+        out, zero = _stage2(queries_xy, points_xy, values, alpha, cfg)
+    return out, alpha, r_obs, overflow, zero
+
+
+_stage1_profile_execute = jax.jit(_stage1_profile_core, static_argnums=(0, 1))
+_stage2_profile_execute = jax.jit(_stage2_profile_core, static_argnums=(0,))
 
 
 def plan_delta(pln: AidwPlan, inserts=None, deletes=None, *,

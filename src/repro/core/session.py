@@ -49,6 +49,16 @@ served, ``bucket_hits``/``bucket_misses`` (compile-cache behaviour),
 ``devices`` (mesh width; 1 for a single-device session), and ``n_points``
 (current dataset size — the serving scheduler keys its execute-time model
 on it, and cluster telemetry reports it per host).
+
+Observability (``repro.obs``): the session records its stage walls into a
+:class:`repro.obs.Registry` (``session/plan_s`` with ``session/bin_s`` and
+``session/staging_s`` sub-parts, ``session/compact_s``, and — when timing
+or profiling a query — ``session/query_s`` / ``session/stage1_s`` /
+``session/stage2_s``), and, when constructed with a ``tracer``, emits the
+matching ``plan``/``bin``/``staging``/``compact``/``query``/``stage1``/
+``stage2`` spans.  ``stats["last_plan_s"]`` and
+``res.timings["query"]`` are kept as documented ALIASES of the newest
+registry observation so pre-PR-8 consumers keep working.
 """
 
 from __future__ import annotations
@@ -60,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import pipeline as P
+from ..obs import Registry
 
 __all__ = ["InterpolationSession", "bucket_size"]
 
@@ -100,8 +111,14 @@ class InterpolationSession:
                  query_domain=None, min_bucket: int = 64,
                  donate: bool | None = None, mesh=None,
                  layout: str = "replicated", ring_axis: str | None = None,
-                 max_delta_frac: float = 0.25, ring_cap: int = 256):
+                 max_delta_frac: float = 0.25, ring_cap: int = 256,
+                 tracer=None, registry: Registry | None = None):
         self.cfg = cfg
+        # observability: the registry is always on (a record is a few dict
+        # updates); spans only when a tracer is injected AND its sampler
+        # admits the operation's trace
+        self.tracer = tracer
+        self.registry = registry if registry is not None else Registry()
         self.min_bucket = int(min_bucket)
         self._query_domain = query_domain
         self._mesh = mesh
@@ -182,6 +199,20 @@ class InterpolationSession:
         self.stats["compactions"] = int(part.compactions)
         if rep is not None and rep.spilled:
             self.stats["spilled_updates"] += 1
+        # registry mirror (fleet merge modes match cluster/telemetry.py:
+        # byte/point totals are additive across hosts, occupancy/tombstone
+        # ratios are high-waters)
+        reg = self.registry
+        reg.set("ingest/staged_bytes", self.stats["staged_bytes"],
+                merge="sum")
+        reg.set("ingest/staged_bytes_total",
+                self.stats["staged_bytes_total"], merge="sum")
+        reg.set("ingest/ring_points", self.stats["ring_points"], merge="sum")
+        reg.set("ingest/compactions", self.stats["compactions"], merge="sum")
+        reg.set("ingest/ring_occupancy", self.stats["ring_occupancy"],
+                merge="max")
+        reg.set("ingest/tombstone_frac", self.stats["tombstone_frac"],
+                merge="max")
 
     def compact(self) -> None:
         """Background compaction epoch: fold every hot ring into the slab
@@ -191,7 +222,17 @@ class InterpolationSession:
         updates restage eagerly — there is nothing to fold)."""
         if self._layout != "grid_ring" or self._splan is None:
             return
+        clk = self.tracer.clock if self.tracer is not None \
+            else time.perf_counter
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        t0 = clk()
         self._splan, rep = P.grid_ring_plan_compact(self._splan)
+        # fence: the compaction wall covers the restage, not its dispatch
+        jax.block_until_ready(self._splan.slab_arrays)
+        t1 = clk()
+        self.registry.observe("session/compact_s", t1 - t0)
+        if tid is not None:
+            self.tracer.record("compact", t0, t1, trace_id=tid)
         self._refresh_ingest_stats(rep)
 
     def update(self, points_xyz=None, *, inserts=None, deletes=None,
@@ -213,7 +254,12 @@ class InterpolationSession:
         if points_xyz is None and not has_delta:
             raise ValueError(
                 "update() needs a full dataset or inserts/deletes")
-        t0 = time.perf_counter()
+        clk = self.tracer.clock if self.tracer is not None \
+            else time.perf_counter
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        t0 = clk()
+        bin_t: dict = {}        # pipeline fills 'bin_s' on full re-plans
+        t_stage = None          # (start, end) of the device staging sub-span
         if points_xyz is None and self._plan is not None:
             new_plan, new_pts = P.plan_delta(
                 self._plan, inserts, deletes,
@@ -222,6 +268,7 @@ class InterpolationSession:
             self._host_pts = new_pts
             if new_plan is not None:
                 self._plan = new_plan
+                ts0 = clk()
                 if self._layout == "grid_ring" and self._splan is not None:
                     # shard-aware LSM delta: inserts land in the owning
                     # slabs' hot rings, deletes tombstone CSR slots in
@@ -231,9 +278,14 @@ class InterpolationSession:
                     # all survive
                     self._splan, rep = P.grid_ring_plan_delta(
                         self._splan, new_plan, inserts, deletes)
+                    # fence: the staging wall must cover the upload, not
+                    # just its dispatch (obs clock/fencing contract)
+                    jax.block_until_ready(self._splan.slab_arrays)
+                    t_stage = (ts0, clk())
                     self._refresh_ingest_stats(rep)
                 else:
                     self._place()
+                    t_stage = (ts0, clk())
                     nb = int(new_plan.points_xy.nbytes
                              + new_plan.values.nbytes)
                     if new_plan.table is not None:
@@ -244,7 +296,7 @@ class InterpolationSession:
                     self.stats["staged_bytes_total"] += nb
                 self.stats["delta_updates"] += 1
                 self.stats["n_points"] = int(new_plan.n_points)
-                self.stats["last_plan_s"] = time.perf_counter() - t0
+                self._finish_update(t0, clk, tid, bin_t, t_stage)
                 return
             points_xyz = new_pts        # fallback: full re-plan below
         elif points_xyz is None:
@@ -255,11 +307,41 @@ class InterpolationSession:
         # sort (grid_ring builds PER-SLAB tables in shard_plan instead)
         self._plan = P.plan(points_xyz, self.cfg,
                             query_domain=self._query_domain,
-                            bin=self._layout in ("single", "replicated"))
-        self._place()
+                            bin=self._layout in ("single", "replicated"),
+                            timings=bin_t)
+        if self._mesh is not None:
+            ts0 = clk()
+            self._place()
+            t_stage = (ts0, clk())
+        else:
+            self._place()
         self.stats["stage1_builds"] += 1
         self.stats["n_points"] = int(self._plan.n_points)
-        self.stats["last_plan_s"] = time.perf_counter() - t0
+        self._finish_update(t0, clk, tid, bin_t, t_stage)
+
+    def _finish_update(self, t0, clk, tid, bin_t, t_stage) -> None:
+        """Close out one :meth:`update`: registry stage walls, the
+        ``stats["last_plan_s"]`` alias, and (sampled) plan/bin/staging
+        spans."""
+        t1 = clk()
+        dur = t1 - t0
+        self.registry.observe("session/plan_s", dur)
+        if bin_t.get("bin_s"):
+            self.registry.observe("session/bin_s", bin_t["bin_s"])
+        if t_stage is not None:
+            self.registry.observe("session/staging_s",
+                                  t_stage[1] - t_stage[0])
+        # documented alias of the newest session/plan_s observation
+        self.stats["last_plan_s"] = dur
+        if tid is not None:
+            root = self.tracer.record("plan", t0, t1, trace_id=tid)
+            if bin_t.get("bin_s"):
+                # the CSR build runs at the head of plan(); anchor it there
+                self.tracer.record("bin", t0, t0 + bin_t["bin_s"],
+                                   trace_id=tid, parent_id=root)
+            if t_stage is not None:
+                self.tracer.record("staging", t_stage[0], t_stage[1],
+                                   trace_id=tid, parent_id=root)
 
     # -- query path ----------------------------------------------------------
 
@@ -347,28 +429,88 @@ class InterpolationSession:
             self._plan.cfg, self._plan.points_xy, self._plan.values, q, a)
         return swz[:n], sw[:n]
 
-    def query(self, queries_xy, *, timings: bool = False) -> P.AidwResult:
+    def query(self, queries_xy, *, timings: bool = False,
+              profile: bool = False) -> P.AidwResult:
         """Interpolate one query batch; (single-device and replicated-mesh
         layouts) results are bit-identical to a cold
-        :func:`repro.core.pipeline.execute` on the same plan."""
+        :func:`repro.core.pipeline.execute` on the same plan.
+
+        ``timings=True`` fences the result and reports
+        ``res.timings={"query": wall_s, "bucket": b}`` (the ``query`` key
+        is the documented alias of the ``session/query_s`` registry
+        histogram, which records the same wall).  ``profile=True`` instead
+        runs Stage 1 and Stage 2 as two separately-jitted, individually
+        FENCED launches and adds ``stage1``/``stage2`` walls to
+        ``res.timings`` (recorded into ``session/stage1_s`` /
+        ``session/stage2_s``) — honest per-stage attribution at the cost
+        of losing cross-stage XLA fusion, so ``stage1 + stage2`` may
+        exceed the fused path's ``query`` wall; needs a binned plan
+        (single/replicated layout).
+        """
         q = jnp.asarray(queries_xy)
         n = q.shape[0]
         b = self._bucket(n)
-        t0 = time.perf_counter()
+        clk = self.tracer.clock if self.tracer is not None \
+            else time.perf_counter
+        t0 = clk()
         qp = jnp.pad(q, ((0, b - n), (0, 0)), mode="edge") if b != n else q
-        # donate only the padded copy we created — never the caller's array
-        # (donation rules in the pipeline module docstring)
-        values, alpha, r_obs, overflow, zero = self._run(
-            qp, self._donate and qp is not q)
+        if profile:
+            res = self._query_profiled(qp, n, b, clk, t0)
+        else:
+            # donate only the padded copy we created — never the caller's
+            # array (donation rules in the pipeline module docstring)
+            values, alpha, r_obs, overflow, zero = self._run(
+                qp, self._donate and qp is not q)
+            res = P.AidwResult(
+                values=values[:n], alpha=alpha[:n], r_obs=r_obs[:n],
+                overflow=int(jnp.sum(overflow[:n])),
+                overflow_mask=overflow[:n],
+                zero_weight_mask=zero[:n],
+            )
+            if timings:
+                res.values.block_until_ready()
+                dur = clk() - t0
+                self.registry.observe("session/query_s", dur)
+                res.timings = {"query": dur, "bucket": b}
+        self.stats["batches"] += 1
+        self.stats["queries"] += n
+        return res
+
+    def _query_profiled(self, qp, n: int, b: int, clk, t0) -> P.AidwResult:
+        """Stage-split query: two jitted launches, each fenced, so the
+        per-stage walls are honest (obs fencing contract); emits
+        stage1/stage2 spans under one sampled ``query`` root."""
+        pln = self._plan
+        if pln.table is None:
+            raise ValueError(
+                "profile=True needs a binned plan (single/replicated "
+                "layout)")
+        d2, idx, cand, ovf, r_obs = P._stage1_profile_execute(
+            pln.spec, pln.cfg, pln.table, qp)
+        jax.block_until_ready((d2, idx, cand, ovf, r_obs))
+        t1 = clk()
+        values, alpha, r_obs, overflow, zero = P._stage2_profile_execute(
+            pln.cfg, pln.points_xy, pln.values, qp, d2, idx, cand, ovf,
+            r_obs, jnp.float32(pln.n_points), jnp.float32(pln.area))
+        jax.block_until_ready(values)
+        t2 = clk()
         res = P.AidwResult(
             values=values[:n], alpha=alpha[:n], r_obs=r_obs[:n],
             overflow=int(jnp.sum(overflow[:n])),
             overflow_mask=overflow[:n],
             zero_weight_mask=zero[:n],
         )
-        if timings:
-            res.values.block_until_ready()
-            res.timings = {"query": time.perf_counter() - t0, "bucket": b}
-        self.stats["batches"] += 1
-        self.stats["queries"] += n
+        self.registry.observe("session/stage1_s", t1 - t0)
+        self.registry.observe("session/stage2_s", t2 - t1)
+        self.registry.observe("session/query_s", t2 - t0)
+        res.timings = {"query": t2 - t0, "stage1": t1 - t0,
+                       "stage2": t2 - t1, "bucket": b}
+        if self.tracer is not None:
+            tid = self.tracer.new_trace()
+            if tid is not None:
+                root = self.tracer.record("query", t0, t2, trace_id=tid)
+                self.tracer.record("stage1", t0, t1, trace_id=tid,
+                                   parent_id=root)
+                self.tracer.record("stage2", t1, t2, trace_id=tid,
+                                   parent_id=root)
         return res

@@ -1,0 +1,57 @@
+"""Observability spine: end-to-end tracing + one metrics registry.
+
+This package is the single instrumentation surface for the whole stack —
+core session, async server, and the multi-host fleet all report through
+it, so BENCH_*.json rows, ``server.report()``, the Prometheus endpoint,
+and Chrome traces are different views of the SAME measurements.
+
+Span taxonomy (names are stable API; tests and the stage bench key on
+them):
+
+* **session** — ``plan`` (one-time Stage-1 build) with sub-spans ``bin``
+  (CSR binning) and ``staging`` (device upload of delta row patches);
+  ``stage1`` (grid kNN search), ``stage2`` (weighted interpolation),
+  ``compact`` (LSM ring fold-back).  ``query`` wraps a whole session
+  query.
+* **serving** (one per request, parented on the request's root span) —
+  ``queue_wait`` (submit -> dispatch), ``coalesce`` (batch hold beyond
+  the last member's arrival), ``execute`` (dispatch -> results
+  materialized on host), ``scatter`` (slice results back per request).
+* **fleet** — ``route`` (host pick + submit; a drain resubmission records
+  a child ``resubmit`` span under the SAME trace), ``fanout`` (parallel
+  shard rpc), ``phase1`` (shard kNN + k-way merge input), ``merge``
+  (client-side k-way merge + alpha), ``phase2`` (partial-sum fan-out),
+  and ``epoch_update``/``apply_epoch`` for the update barrier path.
+
+Clock / fencing contract:
+
+* Every :class:`~repro.obs.trace.Tracer` takes an **explicit clock** — the
+  same clock its component stamps request timestamps with — so spans and
+  latency histograms share an epoch, and fake-clock tests are exact.  A
+  wall-clock anchor captured once at construction aligns exports across
+  processes (pass ``wall=None`` under fake clocks).
+* Spans that bracket device work close only after
+  :func:`~repro.obs.trace.fence` (``jax.block_until_ready``) on the
+  stage's outputs — stage walls stay honest on async dispatch backends.
+* **Overhead budget**: with sampling off (``sample_rate=0``) the entire
+  subsystem costs one ``None``-check per call site — enforced <2% on
+  serving p99 by the ``serving/trace_overhead_p99_ratio`` load_gen gate.
+
+Trace propagation: a sampled request carries ``trace_id``/``parent_span``
+on ``InterpolationRequest``, across the JSON/TCP rpc control plane,
+through ``EpochUpdate`` barriers and router drain-resubmission, so one
+fleet query yields ONE connected cross-host trace.
+:func:`~repro.obs.trace.chrome_trace` renders collected span dicts as
+Chrome ``trace_event`` JSON (loads in ``chrome://tracing``/Perfetto).
+
+Registry -> Prometheus naming: see :mod:`repro.obs.metrics` — internal
+slash-namespaced names (``session/plan_s``) export as
+``aidw_session_plan_s`` (counters ``_total``-suffixed, histograms
+summary-style with ``quantile`` labels).
+"""
+
+from .metrics import Counter, Gauge, Histogram, Registry
+from .trace import Span, Tracer, chrome_trace, fence, new_span_id
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry",
+           "Span", "Tracer", "chrome_trace", "fence", "new_span_id"]

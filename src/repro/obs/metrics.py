@@ -1,0 +1,329 @@
+"""One metrics registry: counters, gauges, and bin-exact mergeable histograms.
+
+This module unifies what used to be three disjoint metric surfaces —
+``InterpolationSession.stats`` dicts, ``serving.telemetry.Telemetry``'s
+private histograms, and the ad-hoc ingest block in the cluster's
+``merge_reports`` — behind one :class:`Registry`.  Everything here is
+dependency-free host-side bookkeeping (no JAX, no device syncs): a
+``record``/``inc``/``set`` costs a few dict updates, so hot serving paths
+can call it per batch without perturbing the latencies it measures.
+
+Design rules:
+
+* **Histograms are bin-exact mergeable.**  :class:`Histogram` (the class
+  previously published as ``serving.telemetry.LatencyHistogram``; that name
+  is still exported there as an alias) snapshots its full bin counts in
+  :meth:`Histogram.state`, so fleet-level percentiles are computed exactly
+  from per-host bins instead of averaging per-host percentiles (which has
+  no statistical meaning).  :meth:`Registry.merge_state` reuses the same
+  merge for whole registries — the cluster rollup in
+  ``serving/cluster/telemetry.py`` is built on it.
+* **Gauges declare their merge mode.**  A fleet rollup must know whether a
+  gauge is additive across hosts (``merge='sum'``: e.g. staged bytes), a
+  high-water (``merge='max'``: e.g. ring occupancy), or host-local
+  (``merge='last'``).
+* **Prometheus naming scheme** (:meth:`Registry.prometheus_text`): metric
+  names are slash-namespaced internally (``session/plan_s``,
+  ``serving/queue_wait_s``); the exporter maps them to
+  ``<prefix>_<name>`` with ``/``, ``.``, ``-`` and spaces folded to ``_``
+  (default prefix ``aidw``).  Counters get the conventional ``_total``
+  suffix; histograms are rendered summary-style as ``_count`` / ``_sum`` /
+  ``_max`` plus ``{quantile="0.5|0.95|0.99"}`` samples.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from bisect import bisect_left
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry"]
+
+
+class Histogram:
+    """Log-spaced histogram with quantile estimation (seconds by default).
+
+    Bins span ``lo``..``hi`` with ``bins_per_decade`` log10-spaced buckets
+    (default: 1us..1000s, 10 buckets/decade => 91 bins, <1KB).
+    ``percentile`` returns the upper edge of the bucket holding the
+    requested rank, clamped to the exact observed max — a <=26%
+    overestimate by construction, which is the right bias for latency SLO
+    reporting.
+    """
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
+                 bins_per_decade: int = 10):
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.bins_per_decade = int(bins_per_decade)
+        decades = math.log10(hi / lo)
+        n = int(round(decades * bins_per_decade))
+        self._edges = [lo * 10.0 ** (i / bins_per_decade)
+                       for i in range(1, n + 1)]
+        self._counts = [0] * (n + 1)        # +1: overflow bucket above hi
+        self.count = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        self._counts[bisect_left(self._edges, s)] += 1
+        self.count += 1
+        self.sum += s
+        if s > self.max:
+            self.max = s
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100] -> seconds (0.0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        rank = p / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= rank and c:
+                edge = self._edges[i] if i < len(self._edges) else self.max
+                return min(edge, self.max)
+        return self.max
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_s": self.sum / self.count if self.count else 0.0,
+            "p50_s": self.percentile(50),
+            "p95_s": self.percentile(95),
+            "p99_s": self.percentile(99),
+            "max_s": self.max,
+        }
+
+    # -- cross-host merging --------------------------------------------------
+
+    def state(self) -> dict:
+        """Full mergeable state (JSON-serializable): bin counts plus the bin
+        parameters, so fleet-level percentiles can be computed exactly from
+        per-host histograms instead of averaging per-host percentiles (which
+        has no statistical meaning)."""
+        return {"lo": self.lo, "hi": self.hi,
+                "bins_per_decade": self.bins_per_decade,
+                "counts": list(self._counts),
+                "count": self.count, "sum": self.sum, "max": self.max}
+
+    def merge_state(self, state: dict) -> None:
+        """Fold another histogram's :meth:`state` into this one.  Bin layouts
+        must match — merging histograms with different edges would silently
+        misattribute counts, so mismatch raises."""
+        if (state["lo"], state["hi"], state["bins_per_decade"]) != \
+                (self.lo, self.hi, self.bins_per_decade) or \
+                len(state["counts"]) != len(self._counts):
+            raise ValueError("cannot merge histograms with different bins")
+        for i, c in enumerate(state["counts"]):
+            self._counts[i] += int(c)
+        self.count += int(state["count"])
+        self.sum += float(state["sum"])
+        self.max = max(self.max, float(state["max"]))
+
+    @classmethod
+    def from_states(cls, states) -> "Histogram":
+        """Merge per-host states into one fleet histogram."""
+        states = list(states)
+        if not states:
+            return cls()
+        h = cls(states[0]["lo"], states[0]["hi"],
+                states[0]["bins_per_decade"])
+        for s in states:
+            h.merge_state(s)
+        return h
+
+
+class Counter:
+    """Monotonically increasing count; fleet merge is always additive."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """A point-in-time value with a declared fleet merge mode.
+
+    ``merge`` is one of ``'sum'`` (additive across hosts), ``'max'``
+    (high-water), or ``'last'`` (host-local; the merged value is whichever
+    state was folded in last).
+    """
+
+    __slots__ = ("value", "merge")
+
+    def __init__(self, merge: str = "last"):
+        if merge not in ("sum", "max", "last"):
+            raise ValueError(f"unknown gauge merge mode: {merge!r}")
+        self.value = 0.0
+        self.merge = merge
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Registry:
+    """Named counters/gauges/histograms with snapshot, Prometheus text, and
+    bin-exact cross-host merge.
+
+    Metric names are slash-namespaced (``session/plan_s``); create-or-get
+    accessors make wiring cheap::
+
+        reg.observe("session/plan_s", 0.012)      # histogram
+        reg.inc("serving/batches")                # counter
+        reg.set("ingest/ring_occupancy", 17, merge="max")
+
+    Thread-safe: one lock guards metric creation and mutation (a record is
+    a few dict updates, contention is negligible at serving batch rates).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._hists: dict[str, Histogram] = {}
+
+    # -- create-or-get -------------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter()
+            return c
+
+    def gauge(self, name: str, merge: str = "last") -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(merge)
+            return g
+
+    def histogram(self, name: str, lo: float = 1e-6, hi: float = 1e3,
+                  bins_per_decade: int = 10) -> Histogram:
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram(lo, hi, bins_per_decade)
+            return h
+
+    def reset_histogram(self, name: str) -> Histogram:
+        """Replace ``name`` with a fresh histogram of the SAME binning and
+        return it (load harnesses zero steady-state windows after warmup
+        without losing the metric's registration)."""
+        with self._lock:
+            old = self._hists.get(name)
+            h = Histogram(old.lo, old.hi, old.bins_per_decade) \
+                if old is not None else Histogram()
+            self._hists[name] = h
+            return h
+
+    # -- convenience recording ----------------------------------------------
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counter(name).inc(n)
+
+    def set(self, name: str, v: float, merge: str = "last") -> None:
+        self.gauge(name, merge).set(v)
+
+    def observe(self, name: str, seconds: float) -> None:
+        self.histogram(name).record(seconds)
+
+    # -- reporting -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Human-facing JSON snapshot: scalar values + histogram quantiles."""
+        with self._lock:
+            return {
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": {k: g.value for k, g in self._gauges.items()},
+                "histograms": {k: h.snapshot()
+                               for k, h in self._hists.items()},
+            }
+
+    def state(self) -> dict:
+        """Mergeable cross-host state: counters, gauges (with merge modes),
+        and FULL histogram bin states."""
+        with self._lock:
+            return {
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": {k: {"value": g.value, "merge": g.merge}
+                           for k, g in self._gauges.items()},
+                "hists": {k: h.state() for k, h in self._hists.items()},
+            }
+
+    def merge_state(self, state: dict) -> None:
+        """Fold another registry's :meth:`state` in: counters add, gauges
+        combine per their declared merge mode, histograms merge bin-exact."""
+        for k, v in state.get("counters", {}).items():
+            self.counter(k).inc(int(v))
+        for k, gs in state.get("gauges", {}).items():
+            g = self.gauge(k, gs.get("merge", "last"))
+            v = float(gs["value"])
+            if g.merge == "sum":
+                g.value += v
+            elif g.merge == "max":
+                g.value = max(g.value, v)
+            else:
+                g.value = v
+        for k, hs in state.get("hists", {}).items():
+            with self._lock:
+                h = self._hists.get(k)
+                if h is None:
+                    h = self._hists[k] = Histogram(
+                        hs["lo"], hs["hi"], hs["bins_per_decade"])
+            h.merge_state(hs)
+
+    @classmethod
+    def merge_states(cls, states) -> "Registry":
+        """Merge per-host registry states into one fleet registry."""
+        reg = cls()
+        for s in states:
+            reg.merge_state(s)
+        return reg
+
+    # -- Prometheus exposition ----------------------------------------------
+
+    @staticmethod
+    def _prom_name(prefix: str, name: str) -> str:
+        out = []
+        for ch in f"{prefix}_{name}" if prefix else name:
+            out.append(ch if (ch.isalnum() or ch == "_") else "_")
+        s = "".join(out)
+        return "_" + s if s[:1].isdigit() else s
+
+    def prometheus_text(self, prefix: str = "aidw") -> str:
+        """Prometheus text exposition (version 0.0.4) of every metric.
+
+        Counters render as ``<p>_<name>_total``; gauges as ``<p>_<name>``;
+        histograms summary-style: ``_count``, ``_sum``, ``_max`` plus
+        ``{quantile="0.5|0.95|0.99"}`` samples in seconds.
+        """
+        with self._lock:
+            counters = {k: c.value for k, c in self._counters.items()}
+            gauges = {k: g.value for k, g in self._gauges.items()}
+            hists = {k: h.snapshot() for k, h in self._hists.items()}
+        lines = []
+        for k in sorted(counters):
+            n = self._prom_name(prefix, k) + "_total"
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {counters[k]}")
+        for k in sorted(gauges):
+            n = self._prom_name(prefix, k)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {gauges[k]}")
+        for k in sorted(hists):
+            n = self._prom_name(prefix, k)
+            s = hists[k]
+            lines.append(f"# TYPE {n} summary")
+            for q, key in ((0.5, "p50_s"), (0.95, "p95_s"), (0.99, "p99_s")):
+                lines.append(f'{n}{{quantile="{q}"}} {s[key]}')
+            lines.append(f"{n}_sum {s['mean_s'] * s['count']}")
+            lines.append(f"{n}_count {s['count']}")
+            lines.append(f"{n}_max {s['max_s']}")
+        return "\n".join(lines) + "\n"

@@ -22,6 +22,27 @@ routing layer (round-robin / queue-depth-aware, heartbeat-drained via
 bin-exactly into fleet p50/p95/p99 (``cluster.telemetry``).  Import from
 ``repro.serving.cluster`` (kept out of this namespace: the subpackage
 imports this one).
+
+Observability (PR 8) rides on :mod:`repro.obs` end to end.  Every layer
+reports into ONE :class:`repro.obs.Registry` per engine — the session's
+stage walls (``session/plan_s`` .. ``session/stage2_s``), the serving
+histograms ``Telemetry`` registers (``serving/queue_wait_s`` /
+``execute_s`` / ``total_s`` / ``shed_s``), and the coalescer's
+``serving/coalesce_s`` / ``serving/scatter_s`` — so
+``AsyncAidwServer.report()`` (the ``stages`` block),
+``metrics_snapshot()``, and the Prometheus text exposition
+(``metrics_text()``, names like ``aidw_serving_queue_wait_s``) are views
+of the same bins, and the fleet rollup merges them bin-exactly.  Tracing
+is opt-in per server (``trace_sample_rate=``; sampling decided once at
+the root): a sampled request carries ``trace_id``/``parent_span`` on
+:class:`InterpolationRequest` through admission, coalescing, and the rpc
+control plane, yielding ``queue_wait``/``coalesce``/``execute``/
+``scatter`` spans per request and ``apply_epoch`` spans per update
+barrier — one connected cross-host trace per fleet query, exported as
+Chrome ``trace_event`` JSON via ``spans()`` +
+:func:`repro.obs.chrome_trace`.  Fleet QPS is anchored on the UNION of
+per-host wall-clock windows (``Telemetry.state()['window']``), never on
+summed per-host rates.
 """
 
 from .engine import AidwEngine, InterpolationRequest, Request, ServingEngine

@@ -49,6 +49,11 @@ class EpochUpdate:
     Compactions consume an epoch like any other update, so a single server
     replaying the coordinator log replays them at the same points in the
     total order.
+
+    ``trace_id``/``parent_span`` carry the coordinator's trace context
+    (``repro.obs``) through the broadcast: every host records its local
+    apply as an ``apply_epoch`` span under them, so one fleet update
+    renders as one connected cross-host trace.
     """
 
     epoch: int
@@ -56,6 +61,8 @@ class EpochUpdate:
     inserts: object = None
     deletes: object = None
     compact: bool = False
+    trace_id: str | None = None
+    parent_span: str | None = None
 
     @property
     def is_delta(self) -> bool:
@@ -83,13 +90,15 @@ class EpochCoordinator:
             return self._epoch
 
     def assign(self, *, points_xyz=None, inserts=None,
-               deletes=None, compact=False) -> EpochUpdate:
+               deletes=None, compact=False, trace_id=None,
+               parent_span=None) -> EpochUpdate:
         """Stamp the next epoch onto an update and log it."""
         with self._lock:
             self._epoch += 1
             upd = EpochUpdate(epoch=self._epoch, points_xyz=points_xyz,
                               inserts=inserts, deletes=deletes,
-                              compact=compact)
+                              compact=compact, trace_id=trace_id,
+                              parent_span=parent_span)
             self.log.append(upd)
             return upd
 

@@ -27,6 +27,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.obs import Tracer, new_span_id
+
 from .epochs import EpochCoordinator, EpochUpdate
 from .host import HostServer
 from .router import RoutedRequest, Router
@@ -63,10 +65,20 @@ class AidwCluster:
     def __init__(self, points_xyz=None, n_hosts: int = 2, cfg=None, *,
                  hosts=None, policy: str = "round_robin",
                  heartbeat_timeout_s: float = 60.0, clock=time.monotonic,
+                 tracer=None, trace_sample_rate: float | None = None,
                  **host_kwargs):
+        # fleet-level tracing: ONE sampling decision at the router root
+        # (this tracer); hosts get rate-0 tracers so they RECORD propagated
+        # trace contexts but never start fleet-invisible roots of their own
+        if tracer is None and trace_sample_rate is not None:
+            tracer = Tracer(clock=clock, sample_rate=trace_sample_rate,
+                            host="router")
+        self.tracer = tracer
         if hosts is None:
             if points_xyz is None:
                 raise ValueError("need points_xyz to build in-process hosts")
+            if tracer is not None:
+                host_kwargs.setdefault("trace_sample_rate", 0.0)
             hosts = [HostServer(i, points_xyz, cfg, clock=clock,
                                 **host_kwargs)
                      for i in range(int(n_hosts))]
@@ -74,7 +86,8 @@ class AidwCluster:
         self.clock = clock
         self.coordinator = EpochCoordinator()
         self.router = Router(self.hosts, policy=policy, clock=clock,
-                             heartbeat_timeout_s=heartbeat_timeout_s)
+                             heartbeat_timeout_s=heartbeat_timeout_s,
+                             tracer=tracer)
         self._bcast = threading.Lock()
 
     # -- query path ----------------------------------------------------------
@@ -124,9 +137,13 @@ class AidwCluster:
         return self._broadcast_epoch(dict(compact=True), deadline)
 
     def _broadcast_epoch(self, fields: dict, deadline) -> int:
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        root = new_span_id() if tid is not None else None
+        t0 = self.clock()
         handles = {}
         with self._bcast:
-            upd = self.coordinator.assign(**fields)
+            upd = self.coordinator.assign(**fields, trace_id=tid,
+                                          parent_span=root)
             for hid in self.router.live_hosts():
                 host = self.router._hosts[hid]
                 try:
@@ -144,6 +161,12 @@ class AidwCluster:
             except BaseException as e:
                 first_err = first_err or e
                 self.router.drain(hid)
+        if tid is not None:
+            # root span for the fleet update: every host's apply_epoch span
+            # parents on it (root id pre-generated, recorded retroactively)
+            self.tracer.record("epoch_update", t0, self.clock(),
+                               trace_id=tid, span_id=root,
+                               args={"epoch": upd.epoch, "applied": applied})
         if not applied:
             raise first_err if first_err is not None else \
                 RuntimeError(f"epoch {upd.epoch}: no live host to update")
@@ -232,6 +255,23 @@ class AidwCluster:
     def reset_telemetry(self) -> None:
         for hid in self.router.live_hosts():
             self.router._hosts[hid].reset_telemetry()
+
+    def collect_spans(self, drain: bool = True) -> list[dict]:
+        """Gather span dicts from the router's tracer AND every live host
+        into one list (feed to :func:`repro.obs.chrome_trace` for a single
+        connected fleet trace; ``drain=True`` empties all buffers).  A host
+        whose span pull fails contributes nothing — collection must never
+        drain a host over a diagnostics rpc."""
+        out: list[dict] = []
+        if self.tracer is not None:
+            out.extend(self.tracer.drain() if drain else self.tracer.spans())
+        for hid in self.router.live_hosts():
+            host = self.router._hosts[hid]
+            try:
+                out.extend(host.spans(drain=drain))
+            except Exception:
+                pass
+        return out
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Close every host.  A crash surfacing from a host that was already
@@ -363,6 +403,7 @@ class ShardedAidwCluster:
 
     def __init__(self, points_xyz=None, n_hosts: int = 2, cfg=None, *,
                  hosts=None, query_domain=None, clock=time.monotonic,
+                 tracer=None, trace_sample_rate: float | None = None,
                  **host_kwargs):
         from repro.core import AidwConfig
 
@@ -372,6 +413,10 @@ class ShardedAidwCluster:
         pts = np.asarray(points_xyz)
         self.cfg = cfg or AidwConfig()
         self.clock = clock
+        if tracer is None and trace_sample_rate is not None:
+            tracer = Tracer(clock=clock, sample_rate=trace_sample_rate,
+                            host="coordinator")
+        self.tracer = tracer
         self._query_domain = None if query_domain is None \
             else np.asarray(query_domain)
         self.spec, self.rps, self.members = fleet_partition(
@@ -385,6 +430,8 @@ class ShardedAidwCluster:
         self.m = pts.shape[0]
         self.area = _spec_area(self.spec)
         if hosts is None:
+            if tracer is not None:
+                host_kwargs.setdefault("trace_sample_rate", 0.0)
             hosts = [HostServer(s, pts[self.members[s]], cfg,
                                 query_domain=query_domain, **host_kwargs)
                      for s in range(int(n_hosts))]
@@ -428,15 +475,40 @@ class ShardedAidwCluster:
 
         k = self.cfg.k
         local = self.cfg.stage2 == "local"
+        # fleet query trace: one root ``fanout`` span with phase1 (shard
+        # kNN rpc), merge (client-side k-way merge + alpha), and phase2
+        # (partial-sum rpc) children, recorded retroactively from clock
+        # stamps — the tracing adds no work inside the fan-outs
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        root = new_span_id() if tid is not None else None
+        t_q0 = self.clock()
+
+        def _span(name, t0, **extra):
+            if tid is not None:
+                self.tracer.record(name, t0, self.clock(), trace_id=tid,
+                                   parent_id=root,
+                                   args=extra if extra else None)
+
+        def _root(epoch):
+            if tid is not None:
+                self.tracer.record("fanout", t_q0, self.clock(),
+                                   trace_id=tid, span_id=root,
+                                   args={"epoch": epoch,
+                                         "queries": int(q.shape[0]),
+                                         "shards": len(self.hosts)})
+
         last_epochs: set = set()
         for _ in range(max_retries):
+            t_p1 = self.clock()
             p1 = self._fanout(lambda h: h.shard_knn(q, timeout=rem()))
+            _span("phase1", t_p1)
             last_epochs = {r[3] for r in p1}
             if len(last_epochs) != 1:
                 continue                     # churn mid-fan-out: retry
             epoch = next(iter(last_epochs))
             # co-merge the per-shard (d2, z) heaps: stable argsort keeps
             # the selected DISTANCES identical to a plain sorted merge
+            t_m = self.clock()
             cat_d2 = np.concatenate([r[0] for r in p1], axis=1)
             cat_z = np.concatenate([r[1] for r in p1], axis=1)
             sel = np.argsort(cat_d2, axis=1, kind="stable")[:, :k]
@@ -446,6 +518,7 @@ class ShardedAidwCluster:
             alpha = self._alpha(r_obs, epoch)
             overflow_mask = self._merged_overflow(
                 q, merged, [r[2] for r in p1], epoch)
+            _span("merge", t_m)
             if local:
                 # local Stage 2: the merged heap IS the answer — no second
                 # fan-out, so no epoch-straddle window either
@@ -455,18 +528,22 @@ class ShardedAidwCluster:
                     merged.astype(np.float32), merged_z.astype(np.float32),
                     alpha.astype(np.float32))
                 vals, zero = A.guarded_values(swz, sw)
+                _root(epoch)
                 return ShardedQueryResult(
                     values=np.asarray(vals), alpha=alpha, r_obs=r_obs,
                     overflow_mask=overflow_mask, epoch=epoch,
                     zero_weight_mask=np.asarray(zero))
+            t_p2 = self.clock()
             p2 = self._fanout(
                 lambda h: h.shard_partial(q, alpha, timeout=rem()))
+            _span("phase2", t_p2)
             last_epochs = {epoch} | {r[2] for r in p2}
             if len(last_epochs) == 1:
                 swz = np.sum([r[0] for r in p2], axis=0)
                 sw = np.sum([r[1] for r in p2], axis=0)
                 zero = sw <= 0.0
                 vals = np.where(zero, 0.0, swz / np.where(zero, 1.0, sw))
+                _root(epoch)
                 return ShardedQueryResult(
                     values=vals, alpha=alpha, r_obs=r_obs,
                     overflow_mask=overflow_mask, epoch=epoch,
@@ -603,14 +680,20 @@ class ShardedAidwCluster:
         if deltas is not None:
             inserts, deletes = deltas
         deadline = None if timeout is None else time.monotonic() + timeout
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        root = new_span_id() if tid is not None else None
+        t0 = self.clock()
         with self._bcast:
             # split + validate FIRST: only a broadcastable update may
             # consume an epoch (a gap would wedge every host's applier)
             ups, commit = self._split_update(points_xyz, inserts, deletes)
             upd = self.coordinator.assign(points_xyz=points_xyz,
-                                          inserts=inserts, deletes=deletes)
-            handles = [host.submit_update(EpochUpdate(epoch=upd.epoch, **u))
-                       for host, u in zip(self.hosts, ups)]
+                                          inserts=inserts, deletes=deletes,
+                                          trace_id=tid, parent_span=root)
+            handles = [host.submit_update(
+                EpochUpdate(epoch=upd.epoch, trace_id=tid,
+                            parent_span=root, **u))
+                for host, u in zip(self.hosts, ups)]
             # commit the partition state under the lock: the NEXT update's
             # delete indices reference this epoch's dataset order, and
             # queries resolve their alpha (m, area) via _alpha_state
@@ -629,6 +712,10 @@ class ShardedAidwCluster:
             lambda hw: hw[0].wait_update(
                 hw[1], timeout=None if deadline is None
                 else max(deadline - time.monotonic(), 0.0)))
+        if tid is not None:
+            self.tracer.record("epoch_update", t0, self.clock(),
+                               trace_id=tid, span_id=root,
+                               args={"epoch": upd.epoch})
         return upd.epoch
 
     def compact(self, *, timeout: float | None = None) -> int:
@@ -638,10 +725,15 @@ class ShardedAidwCluster:
         compaction moves points between tiers, never between shards.
         Returns the epoch."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        tid = self.tracer.new_trace() if self.tracer is not None else None
+        root = new_span_id() if tid is not None else None
+        t0 = self.clock()
         with self._bcast:
-            upd = self.coordinator.assign(compact=True)
+            upd = self.coordinator.assign(compact=True, trace_id=tid,
+                                          parent_span=root)
             handles = [host.submit_update(
-                EpochUpdate(epoch=upd.epoch, compact=True))
+                EpochUpdate(epoch=upd.epoch, compact=True, trace_id=tid,
+                            parent_span=root))
                 for host in self.hosts]
             self._alpha_state[upd.epoch] = (self.m, self.area, self.spec,
                                             self.rps)
@@ -650,6 +742,10 @@ class ShardedAidwCluster:
             lambda hw: hw[0].wait_update(
                 hw[1], timeout=None if deadline is None
                 else max(deadline - time.monotonic(), 0.0)))
+        if tid is not None:
+            self.tracer.record("epoch_update", t0, self.clock(),
+                               trace_id=tid, span_id=root,
+                               args={"epoch": upd.epoch, "compact": True})
         return upd.epoch
 
     # -- fleet lifecycle -----------------------------------------------------
@@ -671,6 +767,19 @@ class ShardedAidwCluster:
                 "hosts": host_reps, "epoch": self.coordinator.epoch,
                 "n_points": self.m,
                 "shard_sizes": [int(mem.size) for mem in self.members]}
+
+    def collect_spans(self, drain: bool = True) -> list[dict]:
+        """Coordinator + per-shard span dicts as one list (see
+        :meth:`AidwCluster.collect_spans`)."""
+        out: list[dict] = []
+        if self.tracer is not None:
+            out.extend(self.tracer.drain() if drain else self.tracer.spans())
+        for host in self.hosts:
+            try:
+                out.extend(host.spans(drain=drain))
+            except Exception:
+                pass
+        return out
 
     def close(self, timeout: float | None = 30.0) -> None:
         errs = []

@@ -44,6 +44,9 @@ class HostServer:
         # full admission queue must raise at a bound (the fleet then drains
         # this host — consistency over availability), never block forever
         self.update_admission_timeout_s = update_admission_timeout_s
+        # the fleet identity doubles as the tracer's host lane (Chrome
+        # ``pid``), so per-host spans land in per-host lanes of one trace
+        server_kwargs.setdefault("host_id", host_id)
         self.server = AsyncAidwServer(points_xyz, cfg, **server_kwargs)
         self.applier = EpochApplier(self._enqueue_update,
                                     applied_epoch=self.server.epoch)
@@ -51,14 +54,17 @@ class HostServer:
     # -- query path ----------------------------------------------------------
 
     def submit(self, queries_xy, *, deadline_s: float | None = None,
-               uid: int | None = None, timeout: float | None = None):
+               uid: int | None = None, timeout: float | None = None,
+               trace_id: str | None = None, parent_span: str | None = None):
         """``timeout`` bounds admission under backpressure — a full queue
         raises :class:`~repro.serving.queue.AdmissionQueueFull` at the
         bound instead of blocking forever (the router holds its fleet lock
         across this call, so unbounded blocking here would stall routing
-        fleet-wide)."""
+        fleet-wide).  ``trace_id``/``parent_span`` propagate the router's
+        trace context into the host's serving spans."""
         return self.server.submit(queries_xy, deadline_s=deadline_s, uid=uid,
-                                  timeout=timeout)
+                                  timeout=timeout, trace_id=trace_id,
+                                  parent_span=parent_span)
 
     def wait(self, req, timeout: float | None = None):
         return self.server.result(req, timeout=timeout)
@@ -68,10 +74,12 @@ class HostServer:
     def _enqueue_update(self, upd: EpochUpdate):
         if upd.compact:
             return self.server.submit_compaction(
-                epoch=upd.epoch, timeout=self.update_admission_timeout_s)
+                epoch=upd.epoch, timeout=self.update_admission_timeout_s,
+                trace_id=upd.trace_id, parent_span=upd.parent_span)
         return self.server.submit_update(
             upd.points_xyz, inserts=upd.inserts, deletes=upd.deletes,
-            epoch=upd.epoch, timeout=self.update_admission_timeout_s)
+            epoch=upd.epoch, timeout=self.update_admission_timeout_s,
+            trace_id=upd.trace_id, parent_span=upd.parent_span)
 
     def submit_update(self, upd: EpochUpdate) -> UpdateHandle:
         """Offer one epoch-tagged update; in-order epochs enqueue into the
@@ -146,6 +154,20 @@ class HostServer:
         self.server.telemetry.reset()
         for k in self.server.queue.counters:
             self.server.queue.counters[k] = 0
+
+    # -- observability (same surface RemoteHost serves over rpc) -------------
+
+    def metrics_text(self, prefix: str = "aidw") -> str:
+        """Prometheus text exposition of this host's metric registry."""
+        return self.server.metrics_text(prefix)
+
+    def metrics_snapshot(self) -> dict:
+        """JSON snapshot of this host's metric registry."""
+        return self.server.metrics_snapshot()
+
+    def spans(self, drain: bool = True) -> list[dict]:
+        """This host's finished span dicts ([] when tracing is off)."""
+        return self.server.spans(drain=drain)
 
     def close(self, timeout: float | None = 30.0) -> None:
         self.server.close(timeout=timeout)

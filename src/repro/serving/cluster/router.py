@@ -28,6 +28,7 @@ import time
 
 import numpy as np
 
+from repro.obs import new_span_id
 from repro.runtime.fault_tolerance import HeartbeatMonitor
 from repro.serving.queue import AdmissionQueueFull, validate_queries
 
@@ -59,6 +60,8 @@ class RoutedRequest:
         self.epoch: int | None = None
         self.host_id = None
         self.attempts: list = []          # [(host_id, inner_request), ...]
+        self.trace_id: str | None = None  # obs trace context (router root)
+        self.root_span: str | None = None
 
     def _current(self):
         return self.attempts[-1]
@@ -90,7 +93,8 @@ class Router:
 
     def __init__(self, hosts, *, policy: str = "round_robin", monitor=None,
                  heartbeat_timeout_s: float = 60.0,
-                 admission_timeout_s: float = 30.0, clock=time.monotonic):
+                 admission_timeout_s: float = 30.0, clock=time.monotonic,
+                 tracer=None):
         if policy not in self.POLICIES:
             raise ValueError(f"policy must be one of {self.POLICIES}, "
                              f"got {policy!r}")
@@ -98,6 +102,11 @@ class Router:
             raise ValueError("router needs at least one host")
         self.policy = policy
         self.clock = clock
+        # optional obs tracer (must share ``clock``): route() samples at
+        # the fleet root and the per-host trace context propagates through
+        # host.submit — including drain resubmissions, which record child
+        # ``resubmit`` spans under the ORIGINAL trace
+        self.tracer = tracer
         # bounds host.submit under backpressure: the router lock is held
         # across submission, so an unbounded block would stall the fleet
         self.admission_timeout_s = admission_timeout_s
@@ -166,6 +175,12 @@ class Router:
         rr = RoutedRequest(
             next(self._uid), q,
             None if deadline_s is None else now + deadline_s)
+        if self.tracer is not None:
+            rr.trace_id = self.tracer.new_trace()  # fleet-root sampling
+            if rr.trace_id is not None:
+                # pre-generate the root span id: hosts parent their serving
+                # spans on it BEFORE the route span itself is recorded
+                rr.root_span = new_span_id()
         with self._lock:
             self._routed[rr.uid] = rr
             self.counters["routed"] += 1
@@ -191,6 +206,8 @@ class Router:
         the serialization.)
         """
         full: set = set()                  # backpressured (NOT dead) hosts
+        resubmit = bool(rr.attempts)       # drain-time placement, not fresh
+        t_place = self.clock()
         while True:
             depths = self._probe_depths() \
                 if self.policy == "least_loaded" else None
@@ -229,9 +246,14 @@ class Router:
                         self.counters["shed_expired"] += 1
                         return
                 host = self._hosts[hid]
+            # trace kwargs ride only on sampled requests, so hosts without
+            # the tracing surface (stubs, older impls) keep working on the
+            # untraced path
+            tkw = {} if rr.trace_id is None else \
+                {"trace_id": rr.trace_id, "parent_span": rr.root_span}
             try:
                 inner = host.submit(rr.queries_xy, deadline_s=remaining,
-                                    timeout=self.admission_timeout_s)
+                                    timeout=self.admission_timeout_s, **tkw)
             except AdmissionQueueFull:
                 full.add(hid)              # backpressure != death: no drain
                 self.monitor.beat(hid)
@@ -251,6 +273,20 @@ class Router:
                 rr.attempts.append((hid, inner))
                 if inner.done:             # shed on arrival at the host
                     rr._resolve(hid, inner)
+            if self.tracer is not None and rr.trace_id is not None:
+                if resubmit:
+                    # a drain-time resubmission is a CHILD of the original
+                    # route span on the SAME trace — the kill-mid-batch
+                    # story stays one connected trace, never a new one
+                    self.tracer.record(
+                        "resubmit", t_place, self.clock(),
+                        trace_id=rr.trace_id, parent_id=rr.root_span,
+                        args={"host": str(hid), "attempt": len(rr.attempts)})
+                else:
+                    self.tracer.record(
+                        "route", t_place, self.clock(),
+                        trace_id=rr.trace_id, span_id=rr.root_span,
+                        args={"host": str(hid)})
             return
 
     def wait(self, rr: RoutedRequest,

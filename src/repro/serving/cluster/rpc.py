@@ -180,17 +180,21 @@ class RemoteHost:
     # HostServer surface -----------------------------------------------------
 
     def submit(self, queries_xy, *, deadline_s: float | None = None,
-               uid: int | None = None,
-               timeout: float | None = None) -> RemoteRequest:
+               uid: int | None = None, timeout: float | None = None,
+               trace_id: str | None = None,
+               parent_span: str | None = None) -> RemoteRequest:
         """``timeout`` bounds remote admission (a full queue raises
         :class:`~repro.serving.queue.AdmissionQueueFull` from the host,
         re-raised here by type) — without it a backpressured host would
-        blow the transport bound and read as dead."""
+        blow the transport bound and read as dead.  ``trace_id``/
+        ``parent_span`` ride the wire so the remote host's serving spans
+        join the router's trace."""
         q = np.asarray(queries_xy)
         reply = self._call("submit",
                            timeout=30.0 if timeout is None else timeout + 30.0,
                            q=enc_array(q), deadline_s=deadline_s, uid=uid,
-                           wait_s=timeout)
+                           wait_s=timeout, trace_id=trace_id,
+                           parent_span=parent_span)
         req = RemoteRequest(reply["uid"], q)
         if reply.get("status") == "shed":      # shed on arrival remotely
             req.status, req.done = "shed", True
@@ -223,7 +227,8 @@ class RemoteHost:
                 inserts=enc_array(upd.inserts),
                 deletes=enc_array(None if upd.deletes is None
                                   else np.asarray(upd.deletes)),
-                compact=int(upd.compact))
+                compact=int(upd.compact), trace_id=upd.trace_id,
+                parent_span=upd.parent_span)
             handle.duplicate = bool(reply.get("duplicate"))
             handle._bound.set()
         except BaseException as e:
@@ -281,6 +286,19 @@ class RemoteHost:
 
     def report(self) -> dict:
         return self._call("report", timeout=60.0)["report"]
+
+    def metrics_text(self, prefix: str = "aidw") -> str:
+        """Prometheus text exposition pulled from the remote host."""
+        return self._call("metrics", timeout=60.0, prefix=prefix)["text"]
+
+    def metrics_snapshot(self) -> dict:
+        """Remote host's registry snapshot (JSON)."""
+        return self._call("metrics", timeout=60.0)["snapshot"]
+
+    def spans(self, drain: bool = True) -> list[dict]:
+        """Pull the remote host's finished span dicts (the cross-process
+        trace collection hook; ``drain=True`` empties the remote buffer)."""
+        return self._call("spans", timeout=60.0, drain=int(drain))["spans"]
 
     def reset_telemetry(self) -> None:
         self._call("reset", timeout=30.0)
@@ -393,7 +411,9 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                 req = host.submit(dec_array(msg["q"]),
                                   deadline_s=msg.get("deadline_s"),
                                   uid=msg.get("uid"),
-                                  timeout=msg.get("wait_s"))
+                                  timeout=msg.get("wait_s"),
+                                  trace_id=msg.get("trace_id"),
+                                  parent_span=msg.get("parent_span"))
                 if not req.done:
                     # shed-on-arrival requests are terminal in this reply
                     # and never awaited — registering them would leak one
@@ -421,7 +441,9 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                                   points_xyz=dec_array(msg.get("points")),
                                   inserts=dec_array(msg.get("inserts")),
                                   deletes=dec_array(msg.get("deletes")),
-                                  compact=bool(msg.get("compact", 0)))
+                                  compact=bool(msg.get("compact", 0)),
+                                  trace_id=msg.get("trace_id"),
+                                  parent_span=msg.get("parent_span"))
                 h = host.submit_update(upd)
                 if not h.duplicate:
                     # duplicates are never waited on (and must not clobber
@@ -468,6 +490,11 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                 reply(mid, ok=1)
             elif op == "report":
                 reply(mid, report=host.report())
+            elif op == "metrics":
+                reply(mid, text=host.metrics_text(msg.get("prefix", "aidw")),
+                      snapshot=host.metrics_snapshot())
+            elif op == "spans":
+                reply(mid, spans=host.spans(drain=bool(msg.get("drain", 1))))
             elif op == "reset":
                 host.reset_telemetry()
                 reply(mid, ok=1)
@@ -520,6 +547,7 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
                  query_domain_n: int = 1024,
                  jax_coordinator: str | None = None,
                  shard_of: int = 0,
+                 trace_sample_rate: float | None = None,
                  env: dict | None = None) -> subprocess.Popen:
     """Launch one fleet host as a subprocess running :func:`main`.
 
@@ -542,6 +570,8 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
         cmd += ["--shard-of", str(shard_of)]
     if jax_coordinator:
         cmd += ["--jax-coordinator", jax_coordinator]
+    if trace_sample_rate is not None:
+        cmd += ["--trace-sample-rate", str(trace_sample_rate)]
     return subprocess.Popen(cmd, env=env)
 
 
@@ -567,6 +597,10 @@ def main(argv=None) -> None:
     p.add_argument("--shard-of", type=int, default=0, metavar="N",
                    help="serve shard <host-id> of an N-way fleet_partition "
                         "of the dataset instead of a full replica")
+    p.add_argument("--trace-sample-rate", type=float, default=None,
+                   help="obs trace sampling probability for this host "
+                        "(omit = tracing off; spans pull over the 'spans' "
+                        "rpc op)")
     args = p.parse_args(argv)
 
     ctx = bootstrap(ClusterConfig(
@@ -587,7 +621,8 @@ def main(argv=None) -> None:
                                         query_domain=qd)
         pts = pts[members[ctx.host_id]]
     host = HostServer(ctx.host_id, pts, max_batch=args.max_batch,
-                      query_domain=qd, mesh=ctx.mesh)
+                      query_domain=qd, mesh=ctx.mesh,
+                      trace_sample_rate=args.trace_sample_rate)
     serve_host(host, ctx.cfg.control_address(ctx.host_id))
     # joins the fleet-wide shutdown barrier — the coordinator side calls
     # ctx.shutdown() after closing its proxies, and a worker that skipped

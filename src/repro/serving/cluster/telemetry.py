@@ -9,18 +9,28 @@ per-host p99s has no statistical meaning, merging the histograms is exact
 (up to the shared log-bin resolution).
 
 Throughput: per-host monotonic clocks are not comparable across processes,
-so fleet QPS is the SUM of per-host rates (each over its own observed
-window) — rates add, timestamps don't travel.
+but each host's :meth:`~repro.serving.telemetry.Telemetry.state` carries a
+WALL-anchored throughput window, so fleet QPS is computed over the UNION
+wall window — ``sum(queries) / (max(t1_wall) - min(t0_wall))``.  Summing
+per-host rates (the pre-PR-8 behaviour, kept as the fallback when a report
+lacks windows) over-reports whenever host windows only partially overlap:
+two hosts that each served 100 q/s for DIFFERENT halves of a second did
+100 q/s fleet-wide, not 200.  The summed rate survives in the report as
+``queries_per_s_summed`` so the drift itself is observable.
 
 Counter conventions: everything integer in the per-host report
 (``submitted``/``completed``/``shed``/``rejected_full``/``overflow_queries``
 /admission counters/...) sums across hosts; ``epoch`` reports the
 fleet-wide min/max so a stalled host (epoch lagging the fleet) is visible
-at a glance.
+at a glance.  Reports carrying a ``registry`` block (PR 8) additionally
+merge into one fleet :class:`repro.obs.Registry` — counters add, gauges
+combine per their declared merge mode, histograms merge bin-exact — whose
+snapshot lands under ``stages``.
 """
 
 from __future__ import annotations
 
+from ...obs import Registry
 from ..telemetry import LatencyHistogram
 
 __all__ = ["merge_reports"]
@@ -39,7 +49,8 @@ def merge_reports(host_reports: list[dict]) -> dict:
         raise ValueError("merge_reports needs at least one host report")
     counters: dict = {}
     admission: dict = {}
-    qps = 0.0
+    qps_summed = 0.0
+    windows = []            # wall-anchored per-host throughput windows
     epochs = []
     host_ids = []
     # ingest tier: bytes/compactions/slab touches SUM across hosts; ring
@@ -62,22 +73,39 @@ def merge_reports(host_reports: list[dict]) -> dict:
         for k in _ING_MAX:
             if k in sess:
                 ingest[k] = max(ingest.get(k, 0.0), float(sess[k]))
-        qps += float(st["queries_per_s"])
+        qps_summed += float(st["queries_per_s"])
+        w = st.get("window")
+        if w is not None and w.get("t0_wall") is not None:
+            windows.append(w)
         epochs.append(int(rep.get("epoch", 0)))
         host_ids.append(rep.get("host_id"))
+    if windows:
+        # union wall window: hosts that served nothing carry no window and
+        # (correctly) contribute zero queries and zero width
+        t0 = min(w["t0_wall"] for w in windows)
+        t1 = max(w["t1_wall"] for w in windows)
+        qps = sum(int(w["queries"]) for w in windows) / max(t1 - t0, 1e-9)
+    else:
+        qps = qps_summed            # legacy reports / idle fleet
     latency = {}
     for axis in _AXES:
         merged = LatencyHistogram.from_states(
             rep["merge"]["hists"][axis] for rep in host_reports)
         latency[axis] = merged.snapshot()
-    return {
+    out = {
         **counters,
         "hosts": len(host_reports),
         "host_ids": host_ids,
         "queries_per_s": qps,
+        "queries_per_s_summed": qps_summed,
         "latency": latency,
         "admission": admission,
         "ingest": ingest,
         "epoch_min": min(epochs),
         "epoch_max": max(epochs),
     }
+    reg_states = [rep["registry"] for rep in host_reports
+                  if "registry" in rep]
+    if reg_states:
+        out["stages"] = Registry.merge_states(reg_states).snapshot()
+    return out

@@ -201,6 +201,12 @@ class InterpolationRequest:
     summed engine-wide.  ``epoch`` is the dataset epoch the request was
     SERVED under (stamped at dispatch by the async server / cluster hosts;
     ``None`` on the epoch-less synchronous engine).
+
+    ``trace_id``/``parent_span`` are the request's trace context
+    (``repro.obs``): set by the client (or propagated across the rpc
+    control plane by a fleet router) to join an existing trace, or stamped
+    by the server's sampler at admission.  ``None`` = untraced — every
+    span call site is then a no-op.
     """
 
     uid: int
@@ -214,6 +220,8 @@ class InterpolationRequest:
     t_submit: float | None = None   # admission timestamp (serving clock)
     t_dispatch: float | None = None
     t_done: float | None = None
+    trace_id: str | None = None     # obs trace context (None = untraced)
+    parent_span: str | None = None
 
 
 class AidwEngine:
@@ -239,17 +247,24 @@ class AidwEngine:
     def __init__(self, points_xyz, cfg=None, *, max_batch: int = 8192,
                  query_domain=None, min_bucket: int = 64, mesh=None,
                  layout: str = "replicated", slack_s: float = 0.0,
-                 ring_cap: int = 256, clock=time.monotonic):
+                 ring_cap: int = 256, clock=time.monotonic, tracer=None,
+                 wall=time.time):
         from repro.core import AidwConfig
         from repro.core.session import InterpolationSession
+        from repro.obs import Registry
 
         from . import scheduler as S
         from .telemetry import Telemetry
 
+        # ONE registry for the whole engine: the session's stage walls and
+        # the telemetry's latency histograms land in the same namespace, so
+        # report()/Prometheus read one unified surface
+        self.registry = Registry()
+        self.tracer = tracer
         self.session = InterpolationSession(
             points_xyz, cfg or AidwConfig(), query_domain=query_domain,
             min_bucket=min_bucket, mesh=mesh, layout=layout,
-            ring_cap=ring_cap)
+            ring_cap=ring_cap, tracer=tracer, registry=self.registry)
         self.max_batch = int(max_batch)
         self.clock = clock
         # keyed on (query bucket, dataset bucket): estimates stay calibrated
@@ -258,7 +273,8 @@ class AidwEngine:
             min_bucket=min_bucket, n_points=self.session.plan.n_points)
         self.coalescer = S.DeadlineCoalescer(
             self.max_batch, self.estimator, clock=clock, slack_s=slack_s)
-        self.telemetry = Telemetry(clock=clock)
+        self.telemetry = Telemetry(clock=clock, wall=wall,
+                                   registry=self.registry)
         self.stats = {"requests": 0, "batches": 0, "queries": 0,
                       "overflow": 0, "shed": 0}
 
@@ -287,6 +303,8 @@ class AidwEngine:
         for r in requests:
             if r.t_submit is None:
                 r.t_submit = now
+            if r.trace_id is None and self.tracer is not None:
+                r.trace_id = self.tracer.new_trace()   # sampling at the root
             self.telemetry.record_submit(r)
         # form batches INCREMENTALLY with a fresh clock per batch (exactly
         # like the async worker): a request whose deadline expires while
@@ -306,7 +324,8 @@ class AidwEngine:
                 continue
             res = S.dispatch_batch(
                 self.session, group, estimator=self.estimator,
-                telemetry=self.telemetry, clock=self.clock)
+                telemetry=self.telemetry, clock=self.clock,
+                tracer=self.tracer)
             batches += 1
             served += sum(r.queries_xy.shape[0] for r in group)
             overflow += res.overflow

@@ -231,7 +231,8 @@ def launch_batch(session, group, *, clock=time.monotonic):
 
 
 def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
-                  = None, telemetry=None, clock=time.monotonic):
+                  = None, telemetry=None, clock=time.monotonic,
+                  tracer=None):
     """Materialize a launched batch and scatter results to their requests.
 
     Slices values AND the per-query overflow mask back to each owning
@@ -241,6 +242,15 @@ def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
     dispatch the measured span includes the overlap window, so the
     estimator's deadline forecasts become conservative — acceptable for a
     measured experiment, one reason pipelining is off by default.
+
+    Observability: the batch's coalesce hold (dispatch minus the LAST
+    member's arrival) and the host-side scatter wall go into the
+    telemetry's registry (``serving/coalesce_s``/``serving/scatter_s``),
+    and each TRACED request (``trace_id`` set) gets retroactive
+    queue_wait/coalesce/execute/scatter spans from the timestamps already
+    stamped — tracing adds no work between them.  The ``np.asarray``
+    materialization above IS the execute fence (host sync), so the
+    execute span honours the obs fencing contract.
     """
     vals = np.asarray(res.values)            # host sync: results materialized
     mask = None if res.overflow_mask is None \
@@ -255,19 +265,41 @@ def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
         r.done = True
         r.t_done = t1
         off += n
+    t2 = clock()
+    last_submit = max((r.t_submit for r in group
+                       if r.t_submit is not None), default=t0)
     if estimator is not None:
         estimator.record(off, t1 - t0)
     if telemetry is not None:
         telemetry.record_batch(group, t1 - t0)
+        reg = getattr(telemetry, "registry", None)
+        if reg is not None:
+            reg.observe("serving/coalesce_s", max(t0 - last_submit, 0.0))
+            reg.observe("serving/scatter_s", t2 - t1)
+    if tracer is not None:
+        for r in group:
+            tid = getattr(r, "trace_id", None)
+            if tid is None:
+                continue
+            parent = getattr(r, "parent_span", None)
+            if r.t_submit is not None:
+                tracer.record("queue_wait", r.t_submit, r.t_dispatch,
+                              trace_id=tid, parent_id=parent)
+                tracer.record("coalesce", min(last_submit, r.t_dispatch),
+                              t0, trace_id=tid, parent_id=parent)
+            tracer.record("execute", t0, t1, trace_id=tid, parent_id=parent,
+                          args={"batch_queries": off})
+            tracer.record("scatter", t1, t2, trace_id=tid, parent_id=parent)
     return res
 
 
 def dispatch_batch(session, group, *, estimator: ExecuteTimeModel | None
-                   = None, telemetry=None, clock=time.monotonic):
+                   = None, telemetry=None, clock=time.monotonic,
+                   tracer=None):
     """Execute one coalesced group and scatter results back (launch +
     scatter, back to back — the default, non-pipelined drive mode).
     Returns the batch-level :class:`repro.core.pipeline.AidwResult`.
     """
     res, t0 = launch_batch(session, group, clock=clock)
     return scatter_batch(group, res, t0, estimator=estimator,
-                         telemetry=telemetry, clock=clock)
+                         telemetry=telemetry, clock=clock, tracer=tracer)

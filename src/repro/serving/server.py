@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import scheduler as S
+from ..obs import Tracer
 from .engine import AidwEngine, InterpolationRequest
 from .queue import AdmissionQueue, AdmissionQueueFull, validate_queries
 
@@ -73,6 +74,11 @@ class _UpdateOp:
     compacted (bitwise-fresh) tables — and bumps the epoch like any other
     update, so a single server replaying a cluster's epoch log replays
     its compactions at the same points in the order.
+
+    ``trace_id``/``parent_span`` propagate the coordinator's trace context
+    (``repro.obs``) through the barrier: the worker records the apply as an
+    ``apply_epoch`` span under them, so a cluster-wide epoch broadcast
+    renders as one connected trace across hosts.
     """
 
     points_xyz: object = None
@@ -83,6 +89,8 @@ class _UpdateOp:
     error: BaseException | None = None
     cancelled: bool = False          # timed-out caller withdrew the op
     skipped: bool = False            # worker honoured the withdrawal
+    trace_id: str | None = None      # obs trace context (None = untraced)
+    parent_span: str | None = None
     applied: threading.Event = field(default_factory=threading.Event)
 
 
@@ -132,14 +140,24 @@ class AsyncAidwServer:
                  min_bucket: int = 64, mesh=None, layout: str = "replicated",
                  slack_s: float = 0.0, linger_s: float = 0.0,
                  pipeline_depth: int = 0, compact_highwater: float = 0.75,
-                 ring_cap: int = 256, clock=time.monotonic):
+                 ring_cap: int = 256, clock=time.monotonic, tracer=None,
+                 trace_sample_rate: float | None = None, host_id="0",
+                 wall=time.time):
+        # tracing is opt-in: pass a Tracer, or a trace_sample_rate to build
+        # one on the SERVING clock (span timestamps must share the clock
+        # domain of t_submit/t_dispatch/t_done — the obs clock contract)
+        if tracer is None and trace_sample_rate is not None:
+            tracer = Tracer(clock=clock, wall=wall,
+                            sample_rate=trace_sample_rate, host=str(host_id))
+        self.tracer = tracer
         # ONE construction path for the session/estimator/coalescer/
         # telemetry stack: the engine builds it, the server drives it from
         # a worker thread (and the sync facade stays usable via .engine)
         self.engine = AidwEngine(
             points_xyz, cfg, max_batch=max_batch, query_domain=query_domain,
             min_bucket=min_bucket, mesh=mesh, layout=layout, slack_s=slack_s,
-            ring_cap=ring_cap, clock=clock)
+            ring_cap=ring_cap, clock=clock, tracer=tracer, wall=wall)
+        self.registry = self.engine.registry
         self.session = self.engine.session
         self.clock = clock
         self.estimator = self.engine.estimator
@@ -180,7 +198,8 @@ class AsyncAidwServer:
 
     def submit(self, queries_xy, *, deadline_s: float | None = None,
                uid: int | None = None, block: bool = True,
-               timeout: float | None = None) -> InterpolationRequest:
+               timeout: float | None = None, trace_id: str | None = None,
+               parent_span: str | None = None) -> InterpolationRequest:
         """Admit one request; returns its :class:`InterpolationRequest`.
 
         ``deadline_s`` is RELATIVE seconds from now (converted to an absolute
@@ -189,6 +208,11 @@ class AsyncAidwServer:
         queue blocks (backpressure) unless ``block=False``/``timeout``, in
         which case :class:`repro.serving.queue.AdmissionQueueFull` escapes to
         the caller.
+
+        ``trace_id``/``parent_span`` join an EXISTING trace (a fleet router
+        propagating its context); when absent and the server has a tracer,
+        the sampler decides once here at the root — a ``None`` outcome makes
+        every downstream span call a no-op for this request.
         """
         self._raise_worker_error()
         # validate at the boundary: a malformed array admitted here would
@@ -205,6 +229,11 @@ class AsyncAidwServer:
             deadline=None if deadline_s is None else now + deadline_s)
         req.t_submit = now
         req.status = "queued"
+        if trace_id is not None:
+            req.trace_id = trace_id
+            req.parent_span = parent_span
+        elif self.tracer is not None:
+            req.trace_id = self.tracer.new_trace()   # sampling at the root
         # count in-flight BEFORE admission: the worker may pop + dispatch +
         # decrement the instant put() releases the queue lock, and a late
         # increment here would strand _inflight at 1 (flush would hang)
@@ -281,7 +310,9 @@ class AsyncAidwServer:
 
     def submit_update(self, points_xyz=None, *, inserts=None, deletes=None,
                       deltas=None, epoch: int | None = None,
-                      timeout: float | None = None) -> _UpdateOp:
+                      timeout: float | None = None,
+                      trace_id: str | None = None,
+                      parent_span: str | None = None) -> _UpdateOp:
         """Enqueue a dataset update WITHOUT waiting for it to apply.
 
         The op is a FIFO barrier in the admission queue: every request
@@ -297,8 +328,14 @@ class AsyncAidwServer:
         self._raise_worker_error()
         if deltas is not None:
             inserts, deletes = deltas
+        if trace_id is None and self.tracer is not None:
+            # standalone traced server: sample an update root locally (a
+            # fleet host's rate-0 tracer declines here, keeping sampling
+            # at the coordinator — the propagated trace_id branch above)
+            trace_id = self.tracer.new_trace()
         op = _UpdateOp(points_xyz=points_xyz, inserts=inserts,
-                       deletes=deletes, epoch=epoch)
+                       deletes=deletes, epoch=epoch, trace_id=trace_id,
+                       parent_span=parent_span)
         self.queue.put(op, timeout=timeout)
         return op
 
@@ -377,14 +414,19 @@ class AsyncAidwServer:
         return op.result + (op.epoch,)
 
     def submit_compaction(self, *, epoch: int | None = None,
-                          timeout: float | None = None) -> _UpdateOp:
+                          timeout: float | None = None,
+                          trace_id: str | None = None,
+                          parent_span: str | None = None) -> _UpdateOp:
         """Enqueue a background COMPACTION epoch without waiting (the LSM
         hot-ring fold — ``repro.core.session.InterpolationSession.compact``).
         A FIFO barrier like any update: queries admitted after it observe
         the compacted (bitwise-fresh) tables.  Returns the op handle for
         :meth:`wait_update`."""
         self._raise_worker_error()
-        op = _UpdateOp(compact=True, epoch=epoch)
+        if trace_id is None and self.tracer is not None:
+            trace_id = self.tracer.new_trace()   # standalone sampling, as
+        op = _UpdateOp(compact=True, epoch=epoch,  # in submit_update
+                       trace_id=trace_id, parent_span=parent_span)
         self.queue.put(op, timeout=timeout)
         return op
 
@@ -428,9 +470,13 @@ class AsyncAidwServer:
     def report(self) -> dict:
         """Telemetry snapshot + queue/session counters (JSON-serializable).
 
-        ``merge`` carries the full histogram states so a cluster coordinator
-        can aggregate fleet percentiles exactly
-        (:func:`repro.serving.cluster.telemetry.merge_reports`).
+        ``merge`` carries the full REGISTRY state (counters, gauges with
+        merge modes, full histogram bins — a superset of the old telemetry
+        state) so a cluster coordinator can aggregate fleet percentiles
+        exactly (:func:`repro.serving.cluster.telemetry.merge_reports`);
+        ``stages`` is the human-facing registry snapshot — per-stage walls
+        (``session/stage1_s`` .. ``serving/scatter_s``) alongside the
+        request-level latency histograms.
         """
         rep = self.telemetry.report()
         rep["epoch"] = self.epoch
@@ -439,7 +485,27 @@ class AsyncAidwServer:
         rep["session"] = {k: v for k, v in self.session.stats.items()
                           if isinstance(v, (int, float))}
         rep["merge"] = self.telemetry.state()
+        rep["stages"] = self.registry.snapshot()
+        rep["registry"] = self.registry.state()
         return rep
+
+    # -- observability endpoints (served over rpc by the cluster host) -------
+
+    def metrics_text(self, prefix: str = "aidw") -> str:
+        """Prometheus text exposition of the engine's whole registry."""
+        return self.registry.prometheus_text(prefix)
+
+    def metrics_snapshot(self) -> dict:
+        """JSON snapshot of the registry (scalars + histogram quantiles)."""
+        return self.registry.snapshot()
+
+    def spans(self, drain: bool = True) -> list[dict]:
+        """Finished span dicts from the server's tracer ([] when tracing is
+        off).  ``drain=True`` (default) empties the buffer, so a cluster
+        coordinator polling per-host spans never double-collects."""
+        if self.tracer is None:
+            return []
+        return self.tracer.drain() if drain else self.tracer.spans()
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Stop admitting, let the worker drain, and join it.  Raises
@@ -495,12 +561,20 @@ class AsyncAidwServer:
                 raise RuntimeError(
                     f"epoch {op.epoch} <= current {self.epoch}: updates "
                     f"must apply in increasing epoch order")
+            t_apply = self.clock()
             if op.compact:
                 self.session.compact()
             else:
                 self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
                                            deletes=op.deletes)
             self.epoch = op.epoch if op.epoch is not None else self.epoch + 1
+            if self.tracer is not None and op.trace_id is not None:
+                # the session fences its own plan/compact internals, so the
+                # wall here is honest device-inclusive apply time
+                self.tracer.record(
+                    "apply_epoch", t_apply, self.clock(),
+                    trace_id=op.trace_id, parent_id=op.parent_span,
+                    args={"epoch": self.epoch, "compact": op.compact})
             if op.points_xyz is not None:
                 self._epoch_gap = None      # full refresh healed the hole
             if not op.compact and op.epoch is None \
@@ -572,7 +646,8 @@ class AsyncAidwServer:
             else:
                 S.dispatch_batch(self.session, group,
                                  estimator=self.estimator,
-                                 telemetry=self.telemetry, clock=self.clock)
+                                 telemetry=self.telemetry, clock=self.clock,
+                                 tracer=self.tracer)
         if group or shed:
             with self._cv:
                 self._inflight -= len(group) + len(shed)
@@ -581,7 +656,8 @@ class AsyncAidwServer:
     def _scatter_oldest(self) -> None:
         group, res, t0 = self._pipeline.popleft()
         S.scatter_batch(group, res, t0, estimator=self.estimator,
-                        telemetry=self.telemetry, clock=self.clock)
+                        telemetry=self.telemetry, clock=self.clock,
+                        tracer=self.tracer)
         with self._cv:
             self._inflight -= len(group)
             self._cv.notify_all()

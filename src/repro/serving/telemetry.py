@@ -19,128 +19,63 @@ the drive mode:
 Everything here is dependency-free host-side bookkeeping: no JAX arrays, no
 device syncs — ``record_*`` calls cost a few dict updates, so the worker
 thread can call them per batch without perturbing the latencies it measures.
+
+Since PR 8 the histograms live in the one :class:`repro.obs.Registry`
+(names ``serving/queue_wait_s`` / ``serving/execute_s`` / ``serving/total_s``
+/ ``serving/shed_s``), so the Prometheus endpoint and ``report()`` read the
+same bins; ``LatencyHistogram`` remains exported here as the documented
+alias of :class:`repro.obs.metrics.Histogram`.
 """
 
 from __future__ import annotations
 
-import math
 import threading
 import time
-from bisect import bisect_left
+
+from ..obs import Registry
+from ..obs.metrics import Histogram
 
 __all__ = ["LatencyHistogram", "Telemetry"]
 
 
-class LatencyHistogram:
-    """Log-spaced latency histogram with quantile estimation.
-
-    Bins span ``lo``..``hi`` seconds with ``bins_per_decade`` log10-spaced
-    buckets (default: 1us..1000s, 10 buckets/decade => 91 bins, <1KB).
-    ``percentile`` returns the upper edge of the bucket holding the requested
-    rank, clamped to the exact observed max — a <=26% overestimate by
-    construction, which is the right bias for latency SLO reporting.
-    """
-
-    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
-                 bins_per_decade: int = 10):
-        self.lo = float(lo)
-        self.hi = float(hi)
-        self.bins_per_decade = int(bins_per_decade)
-        decades = math.log10(hi / lo)
-        n = int(round(decades * bins_per_decade))
-        self._edges = [lo * 10.0 ** (i / bins_per_decade)
-                       for i in range(1, n + 1)]
-        self._counts = [0] * (n + 1)        # +1: overflow bucket above hi
-        self.count = 0
-        self.sum = 0.0
-        self.max = 0.0
-
-    def record(self, seconds: float) -> None:
-        s = max(float(seconds), 0.0)
-        self._counts[bisect_left(self._edges, s)] += 1
-        self.count += 1
-        self.sum += s
-        if s > self.max:
-            self.max = s
-
-    def percentile(self, p: float) -> float:
-        """p in [0, 100] -> seconds (0.0 when empty)."""
-        if self.count == 0:
-            return 0.0
-        rank = p / 100.0 * self.count
-        seen = 0
-        for i, c in enumerate(self._counts):
-            seen += c
-            if seen >= rank and c:
-                edge = self._edges[i] if i < len(self._edges) else self.max
-                return min(edge, self.max)
-        return self.max
-
-    def snapshot(self) -> dict:
-        return {
-            "count": self.count,
-            "mean_s": self.sum / self.count if self.count else 0.0,
-            "p50_s": self.percentile(50),
-            "p95_s": self.percentile(95),
-            "p99_s": self.percentile(99),
-            "max_s": self.max,
-        }
-
-    # -- cross-host merging (repro.serving.cluster.telemetry) ----------------
-
-    def state(self) -> dict:
-        """Full mergeable state (JSON-serializable): bin counts plus the bin
-        parameters, so fleet-level percentiles can be computed exactly from
-        per-host histograms instead of averaging per-host percentiles (which
-        has no statistical meaning)."""
-        return {"lo": self.lo, "hi": self.hi,
-                "bins_per_decade": self.bins_per_decade,
-                "counts": list(self._counts),
-                "count": self.count, "sum": self.sum, "max": self.max}
-
-    def merge_state(self, state: dict) -> None:
-        """Fold another histogram's :meth:`state` into this one.  Bin layouts
-        must match — merging histograms with different edges would silently
-        misattribute counts, so mismatch raises."""
-        if (state["lo"], state["hi"], state["bins_per_decade"]) != \
-                (self.lo, self.hi, self.bins_per_decade) or \
-                len(state["counts"]) != len(self._counts):
-            raise ValueError("cannot merge histograms with different bins")
-        for i, c in enumerate(state["counts"]):
-            self._counts[i] += int(c)
-        self.count += int(state["count"])
-        self.sum += float(state["sum"])
-        self.max = max(self.max, float(state["max"]))
-
-    @classmethod
-    def from_states(cls, states) -> "LatencyHistogram":
-        """Merge per-host states into one fleet histogram."""
-        states = list(states)
-        if not states:
-            return cls()
-        h = cls(states[0]["lo"], states[0]["hi"],
-                states[0]["bins_per_decade"])
-        for s in states:
-            h.merge_state(s)
-        return h
+class LatencyHistogram(Histogram):
+    """Documented alias of :class:`repro.obs.metrics.Histogram` — the
+    log-spaced mergeable latency histogram previously defined here.  All
+    behaviour (binning, ``state``/``merge_state``/``from_states`` bin-exact
+    merging) lives on the base class; existing imports keep working."""
 
 
 class Telemetry:
     """Aggregated serving metrics for one engine/server instance.
 
     ``clock`` is injectable (tests pass a fake monotonic clock); all
-    timestamps recorded on requests are in this clock's epoch.
+    timestamps recorded on requests are in this clock's epoch.  ``wall`` is
+    the injectable WALL clock (``time.time``): monotonic clocks are not
+    comparable across processes, so the throughput window is additionally
+    anchored to wall time and carried in :meth:`state` — the fleet rollup
+    computes fleet QPS over the union wall window instead of summing
+    per-host rates measured over different windows.  ``registry`` is the
+    shared :class:`repro.obs.Registry` the histograms are registered in
+    (one is created when not provided).
     """
 
-    def __init__(self, clock=time.monotonic):
+    _HIST_NAMES = {"queue": "serving/queue_wait_s",
+                   "execute": "serving/execute_s",
+                   "total": "serving/total_s",
+                   "shed": "serving/shed_s"}
+
+    def __init__(self, clock=time.monotonic, wall=time.time,
+                 registry: Registry | None = None):
         self.clock = clock
-        self.queue = LatencyHistogram()
-        self.execute = LatencyHistogram()
-        self.total = LatencyHistogram()
+        self.wall = wall
+        self.registry = registry if registry is not None else Registry()
+        self.queue = self.registry.histogram(self._HIST_NAMES["queue"])
+        self.execute = self.registry.histogram(self._HIST_NAMES["execute"])
+        self.total = self.registry.histogram(self._HIST_NAMES["total"])
         # shed requests terminate fast by construction — folding their
         # time-to-shed into `total` would IMPROVE reported SLO percentiles
         # the more requests are dropped, so they get their own histogram
-        self.shed = LatencyHistogram()
+        self.shed = self.registry.histogram(self._HIST_NAMES["shed"])
         self.counters = {
             "submitted": 0, "completed": 0, "shed": 0, "rejected_full": 0,
             "batches": 0, "queries": 0, "overflow_queries": 0,
@@ -148,6 +83,8 @@ class Telemetry:
         }
         self._t_first: float | None = None
         self._t_last: float | None = None
+        self._w_first: float | None = None    # wall-clock window anchors
+        self._w_last: float | None = None
         # submit/reject/admission-shed arrive from client threads while the
         # worker records batches: one lock keeps counters and histograms sane
         self._lock = threading.Lock()
@@ -157,13 +94,18 @@ class Telemetry:
         harnesses call this after warmup so the report reflects steady
         state, not first-bucket compiles."""
         with self._lock:
-            self.queue = LatencyHistogram()
-            self.execute = LatencyHistogram()
-            self.total = LatencyHistogram()
-            self.shed = LatencyHistogram()
+            self.queue = self.registry.reset_histogram(
+                self._HIST_NAMES["queue"])
+            self.execute = self.registry.reset_histogram(
+                self._HIST_NAMES["execute"])
+            self.total = self.registry.reset_histogram(
+                self._HIST_NAMES["total"])
+            self.shed = self.registry.reset_histogram(
+                self._HIST_NAMES["shed"])
             for k in self.counters:
                 self.counters[k] = 0
             self._t_first = self._t_last = None
+            self._w_first = self._w_last = None
 
     # -- recording -----------------------------------------------------------
 
@@ -208,6 +150,14 @@ class Telemetry:
                     self._t_first = t_start
                 if self._t_last is None or t_done > self._t_last:
                     self._t_last = t_done
+            # re-anchor the window in wall time from the monotonic bounds:
+            # one offset sample per batch keeps the wall window exactly as
+            # wide as the monotonic one, and absolute (comparable across
+            # hosts) to within clock-sampling jitter
+            if self._t_first is not None and self.wall is not None:
+                off = self.wall() - self.clock()
+                self._w_first = self._t_first + off
+                self._w_last = self._t_last + off
 
     # -- reporting -----------------------------------------------------------
 
@@ -232,15 +182,21 @@ class Telemetry:
             }
 
     def state(self) -> dict:
-        """Mergeable cross-host snapshot: counters, per-host rate, and FULL
-        histogram states (bin counts, not just percentiles).  Fleet
-        aggregation lives in :func:`repro.serving.cluster.telemetry
-        .merge_reports`; per-host throughput windows are kept per host
-        because monotonic clocks are not comparable across processes."""
+        """Mergeable cross-host snapshot: counters, per-host rate, FULL
+        histogram states (bin counts, not just percentiles), and the
+        WALL-anchored throughput window.  Fleet aggregation lives in
+        :func:`repro.serving.cluster.telemetry.merge_reports`: monotonic
+        clocks are not comparable across processes, so fleet QPS is
+        computed from the union of the per-host ``window`` wall spans
+        (``sum(queries) / (max(t1_wall) - min(t0_wall))``) — never by
+        summing per-host rates measured over different windows."""
         with self._lock:
             return {
                 "counters": dict(self.counters),
                 "queries_per_s": self.queries_per_s(),
+                "window": {"t0_wall": self._w_first,
+                           "t1_wall": self._w_last,
+                           "queries": self.counters["queries"]},
                 "hists": {
                     "queue": self.queue.state(),
                     "execute": self.execute.state(),

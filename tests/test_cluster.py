@@ -175,8 +175,14 @@ def test_merge_reports_sums_counters_and_rates():
     assert fleet["overflow_queries"] == 2
     assert fleet["admission"] == {"admitted": 6}
     assert fleet["epoch_min"] == 2 and fleet["epoch_max"] == 3
-    # rates SUM across hosts (per-host windows; clocks don't travel)
+    # fleet QPS = sum(queries) over the UNION wall window (PR 8); the
+    # legacy summed rate stays observable as queries_per_s_summed
+    ws = [r["merge"]["window"] for r in reports]
+    t0 = min(w["t0_wall"] for w in ws)
+    t1 = max(w["t1_wall"] for w in ws)
     assert fleet["queries_per_s"] == pytest.approx(
+        sum(w["queries"] for w in ws) / (t1 - t0))
+    assert fleet["queries_per_s_summed"] == pytest.approx(
         sum(r["merge"]["queries_per_s"] for r in reports))
     assert fleet["latency"]["total"]["count"] == 2
 
@@ -443,6 +449,67 @@ def test_cluster_host_death_mid_stream_no_lost_or_duplicated(spatial_data):
         ref.flush(timeout=300)
     for got, w in zip(reqs, want):
         assert np.array_equal(np.asarray(got.values), np.asarray(w.values))
+
+
+def test_cluster_kill_mid_batch_keeps_one_connected_trace(spatial_data):
+    """ISSUE 8 acceptance: a host killed mid-batch with tracing on.  The
+    drain-resubmission records a ``resubmit`` span as a CHILD of the
+    original request's route root on the SAME trace — one connected trace
+    per request, zero lost spans (every done request has exactly one
+    serving span set) and zero duplicated ones (the dead host never
+    scattered, so it contributed none)."""
+    pts, qs = spatial_data
+    qd = spatial_queries(1024, seed=1)
+    batches = [qs[32 * i:32 * (i + 1)] for i in range(6)]
+    with AidwCluster(pts, n_hosts=2, max_batch=256, query_domain=qd,
+                     trace_sample_rate=1.0) as cl:
+        warm = [cl.submit(q) for q in batches[:2]]
+        cl.flush(timeout=300)
+        cl.collect_spans()                     # drop the warmup spans
+
+        def boom(*a, **k):
+            raise RuntimeError("injected host fault")
+
+        cl.hosts[1].server.session.query = boom   # dies on next dispatch
+        reqs = [cl.submit(q) for q in batches]
+        cl.flush(timeout=300)
+        spans = cl.collect_spans()
+        rep = cl.report()
+    assert rep["routing"]["resubmitted"] >= 1
+    assert all(r.status == "done" for r in warm + reqs)
+
+    by_trace: dict = {}
+    for s in spans:
+        by_trace.setdefault(s["trace_id"], []).append(s)
+    # every request kept ONE trace end to end: its root route span, its
+    # serving spans, and (for drained requests) the resubmit child
+    assert all(r.trace_id in by_trace for r in reqs)
+    assert len({r.trace_id for r in reqs}) == len(reqs)
+    resubmits = [s for s in spans if s["name"] == "resubmit"]
+    assert resubmits, "drain-resubmission recorded no spans"
+    for trace_id, trace in by_trace.items():
+        roots = [s for s in trace if s["name"] == "route"]
+        assert len(roots) == 1, f"trace {trace_id} has {len(roots)} roots"
+        root = roots[0]
+        for s in trace:
+            if s["name"] == "resubmit":
+                # the resubmission is a child of the ORIGINAL route span —
+                # the kill shows up inside the request's trace, not as a
+                # disconnected second trace
+                assert s["parent_id"] == root["span_id"]
+                assert s["args"]["attempt"] >= 1
+        # zero lost / zero duplicated serving spans: exactly one full
+        # queue_wait/coalesce/execute/scatter set per completed request
+        for name in ("queue_wait", "coalesce", "execute", "scatter"):
+            got = [s for s in trace if s["name"] == name]
+            assert len(got) == 1, \
+                f"trace {trace_id}: {len(got)} {name} spans"
+            assert got[0]["parent_id"] == root["span_id"]
+    # the dead host contributed no serving spans (it never scattered) —
+    # all serving-side spans come from the surviving host or the router
+    serving = [s for s in spans if s["name"] in
+               ("queue_wait", "coalesce", "execute", "scatter")]
+    assert {s["host"] for s in serving} == {"0"}
 
 
 def test_cluster_least_loaded_policy_serves_all(spatial_data):

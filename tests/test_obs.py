@@ -1,0 +1,379 @@
+"""Observability spine (ISSUE 8): tracer, metrics registry, trace
+propagation, and the report()/state() schema contracts.
+
+Acceptance criteria covered here:
+(a) span recording is retroactive, sampled once at the root, and a no-op
+    when the trace is unsampled (the <2% overhead story);
+(b) Chrome ``trace_event`` export is structurally valid and multi-host
+    span collections land in per-host lanes;
+(c) the registry merges bin-exactly across hosts and exports Prometheus
+    text under the documented ``aidw_<slash_name>`` scheme;
+(d) fleet QPS is computed over the UNION wall window (fake-clock exact),
+    with the legacy summed rate exposed as ``queries_per_s_summed``;
+(e) ``AsyncAidwServer.report()`` keeps its schema (the keys downstream
+    dashboards and ``merge_reports`` read), now including ``stages`` and
+    ``registry`` blocks;
+(f) session timing aliases: ``stats['last_plan_s']`` and
+    ``res.timings['query']`` mirror the newest registry observations, and
+    ``profile=True`` stage walls are additive.
+The 2-host kill-mid-batch trace-propagation test lives in
+tests/test_cluster.py next to the other fleet-death coverage.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import spatial_points, spatial_queries
+from repro.obs import Registry, Tracer, chrome_trace, new_span_id
+from repro.serving import AsyncAidwServer, Telemetry
+from repro.serving.cluster import merge_reports
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_retroactive_record_and_wall_anchor():
+    clk, wall = FakeClock(5.0), FakeClock(105.0)
+    tr = Tracer(clock=clk, wall=wall, sample_rate=1.0, host="h9")
+    tid = tr.new_trace()
+    assert tid is not None
+    root = tr.record("plan", 5.0, 7.5, trace_id=tid)
+    child = tr.record("bin", 5.0, 6.0, trace_id=tid, parent_id=root)
+    assert root and child and root != child
+    spans = tr.spans()
+    assert [s["name"] for s in spans] == ["plan", "bin"]
+    # wall anchoring: offset = wall - clock at construction (100.0)
+    assert spans[0]["t0"] == pytest.approx(105.0)
+    assert spans[0]["dur"] == pytest.approx(2.5)
+    assert spans[1]["parent_id"] == root
+    assert all(s["trace_id"] == tid and s["host"] == "h9" for s in spans)
+
+
+def test_tracer_rate_zero_is_total_noop():
+    tr = Tracer(clock=FakeClock(), wall=None, sample_rate=0.0)
+    assert tr.new_trace() is None
+    # record with an unsampled trace: returns None, stores nothing — every
+    # call site's cost is exactly this one if
+    assert tr.record("x", 0.0, 1.0, trace_id=None) is None
+    with tr.span("y", trace_id=None) as sp:
+        assert sp.span_id is None
+    assert tr.spans() == []
+
+
+def test_tracer_sampling_is_decided_at_the_root():
+    tr = Tracer(clock=FakeClock(), wall=None, sample_rate=0.5, seed=7)
+    decisions = [tr.new_trace() is not None for _ in range(200)]
+    assert 40 < sum(decisions) < 160            # probabilistic, seeded
+    # children never re-decide: a sampled trace records everything
+    tid = next(t for t in iter(tr.new_trace, "") if t is not None)
+    assert tr.record("child", 0.0, 1.0, trace_id=tid) is not None
+
+
+def test_tracer_span_context_manager_and_drain():
+    clk = FakeClock(0.0)
+    tr = Tracer(clock=clk, wall=None, sample_rate=1.0)
+    tid = tr.new_trace()
+    with tr.span("phase1", trace_id=tid) as sp:
+        clk.t += 0.25
+        tr.record("inner", 0.1, 0.2, trace_id=tid, parent_id=sp.span_id)
+    spans = tr.drain()
+    assert {s["name"] for s in spans} == {"inner", "phase1"}
+    ph1 = next(s for s in spans if s["name"] == "phase1")
+    assert ph1["dur"] == pytest.approx(0.25)
+    inner = next(s for s in spans if s["name"] == "inner")
+    assert inner["parent_id"] == ph1["span_id"]
+    assert tr.spans() == []                     # drain cleared the buffer
+
+
+def test_tracer_retention_cap_counts_drops():
+    tr = Tracer(clock=FakeClock(), wall=None, sample_rate=1.0, max_spans=2)
+    tid = tr.new_trace()
+    for i in range(5):
+        tr.record(f"s{i}", 0.0, 1.0, trace_id=tid)
+    assert len(tr.spans()) == 2 and tr.dropped == 3
+
+
+def test_pregenerated_root_ids_parent_before_record():
+    # the fleet-router pattern: children are parented on a root id that is
+    # only recorded (retroactively) after they already completed
+    tr = Tracer(clock=FakeClock(), wall=None, sample_rate=1.0)
+    tid, root = tr.new_trace(), new_span_id()
+    tr.record("queue_wait", 0.0, 0.5, trace_id=tid, parent_id=root)
+    assert tr.record("route", 0.0, 1.0, trace_id=tid, span_id=root) == root
+    spans = tr.spans()
+    ids = {s["span_id"] for s in spans}
+    assert all(s["parent_id"] in ids | {None} for s in spans)
+
+
+def test_chrome_trace_export_is_structurally_valid(tmp_path):
+    tr = Tracer(clock=FakeClock(1.0), wall=None, sample_rate=1.0, host="3")
+    tid = tr.new_trace()
+    tr.record("stage1", 1.0, 1.5, trace_id=tid, args={"queries": 64})
+    path = tmp_path / "trace.json"
+    tr.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    (ev,) = doc["traceEvents"]
+    assert ev["ph"] == "X" and ev["cat"] == "aidw"
+    assert ev["ts"] == pytest.approx(1.0 * 1e6)     # microseconds
+    assert ev["dur"] == pytest.approx(0.5 * 1e6)
+    assert ev["pid"] == "host-3"
+    assert ev["args"]["trace_id"] == tid and ev["args"]["queries"] == 64
+
+
+def test_chrome_trace_merges_hosts_into_lanes():
+    dicts = [{"name": "route", "trace_id": "t", "span_id": "a",
+              "parent_id": None, "t0": 0.0, "dur": 1.0, "host": "router"},
+             {"name": "execute", "trace_id": "t", "span_id": "b",
+              "parent_id": "a", "t0": 0.2, "dur": 0.5, "host": "1"}]
+    doc = chrome_trace(dicts)
+    assert {e["pid"] for e in doc["traceEvents"]} \
+        == {"host-router", "host-1"}
+    assert json.dumps(doc)                          # serializable as-is
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_merge_is_bin_exact_and_gauge_mode_aware():
+    a, b = Registry(), Registry()
+    for reg, vals in ((a, (0.001, 0.01)), (b, (0.1, 1.0))):
+        for v in vals:
+            reg.observe("session/query_s", v)
+        reg.inc("serving/batches", 2)
+    a.set("ingest/staged_bytes", 100, merge="sum")
+    b.set("ingest/staged_bytes", 50, merge="sum")
+    a.set("ingest/ring_occupancy", 0.2, merge="max")
+    b.set("ingest/ring_occupancy", 0.7, merge="max")
+    fleet = Registry.merge_states([a.state(), b.state()])
+    snap = fleet.snapshot()
+    assert snap["counters"]["serving/batches"] == 4
+    assert snap["gauges"]["ingest/staged_bytes"] == 150
+    assert snap["gauges"]["ingest/ring_occupancy"] == pytest.approx(0.7)
+    h = snap["histograms"]["session/query_s"]
+    # bin-exact: identical to one histogram fed all four observations
+    one = Registry()
+    for v in (0.001, 0.01, 0.1, 1.0):
+        one.observe("session/query_s", v)
+    assert h == one.snapshot()["histograms"]["session/query_s"]
+
+
+def test_registry_prometheus_text_naming_scheme():
+    reg = Registry()
+    reg.observe("serving/queue_wait_s", 0.004)
+    reg.inc("serving/batches")
+    reg.set("ingest/ring_occupancy", 0.5)
+    text = reg.prometheus_text()
+    assert "# TYPE aidw_serving_batches_total counter" in text
+    assert "aidw_serving_batches_total 1" in text
+    assert "# TYPE aidw_ingest_ring_occupancy gauge" in text
+    assert "# TYPE aidw_serving_queue_wait_s summary" in text
+    assert 'aidw_serving_queue_wait_s{quantile="0.99"}' in text
+    assert "aidw_serving_queue_wait_s_count 1" in text
+
+
+def test_reset_histogram_keeps_registration_and_binning():
+    reg = Registry()
+    reg.histogram("x", lo=1e-3, hi=1e2, bins_per_decade=5).record(0.5)
+    h = reg.reset_histogram("x")
+    assert h.count == 0 and (h.lo, h.hi, h.bins_per_decade) == (1e-3, 1e2, 5)
+    reg.observe("x", 0.1)
+    assert reg.snapshot()["histograms"]["x"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet QPS: union wall window (satellite b)
+# ---------------------------------------------------------------------------
+
+
+class _Req:
+    queries_xy = np.zeros((100, 2), np.float32)
+    overflow = 0
+    t_submit, t_dispatch, t_done = 1.0, 1.5, 2.0
+
+
+def _host_report(wall_at: float, host_id: int) -> dict:
+    t = Telemetry(clock=FakeClock(10.0), wall=FakeClock(wall_at))
+    t.record_batch([_Req()], 0.5)
+    return {"merge": t.state(), "epoch": 0, "host_id": host_id}
+
+
+def test_fleet_qps_uses_union_wall_window_not_summed_rates():
+    # two hosts each serve 100 queries over a 1s window, but the windows
+    # are DISJOINT in wall time: true fleet throughput is 200/2s = 100 q/s,
+    # while the pre-PR-8 summed rate over-reports 200 q/s
+    reports = [_host_report(1000.0, 0), _host_report(1001.0, 1)]
+    fleet = merge_reports(reports)
+    assert fleet["queries_per_s"] == pytest.approx(100.0)
+    assert fleet["queries_per_s_summed"] == pytest.approx(200.0)
+
+
+def test_fleet_qps_identical_windows_match_summed():
+    reports = [_host_report(1000.0, 0), _host_report(1000.0, 1)]
+    fleet = merge_reports(reports)
+    assert fleet["queries_per_s"] == pytest.approx(200.0)
+    assert fleet["queries_per_s_summed"] == pytest.approx(200.0)
+
+
+def test_fleet_qps_falls_back_to_summed_without_windows():
+    reports = [_host_report(1000.0, 0), _host_report(1001.0, 1)]
+    for r in reports:                       # legacy per-host state shape
+        del r["merge"]["window"]
+    fleet = merge_reports(reports)
+    assert fleet["queries_per_s"] == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# server report schema + serving spans (needs jax; small shapes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def traced_server_report():
+    pts = spatial_points(2048, seed=0)
+    with AsyncAidwServer(pts, max_batch=512, trace_sample_rate=1.0,
+                         query_domain=spatial_queries(256, seed=1)) as srv:
+        reqs = [srv.submit(spatial_queries(32 + i, seed=2 + i), block=False)
+                for i in range(4)]
+        srv.update_dataset(inserts=spatial_points(8, seed=9),
+                           deletes=np.arange(8), timeout=300)
+        srv.flush(timeout=300)
+        yield srv.report(), srv.spans(), reqs, srv.metrics_text()
+
+
+def test_server_report_schema_regression(traced_server_report):
+    rep, _, reqs, _ = traced_server_report
+    assert all(r.status == "done" for r in reqs)
+    # the stable top-level surface: telemetry counters + rate + latency,
+    # server attribution, and (PR 8) the stages/registry blocks
+    for key in ("submitted", "completed", "shed", "rejected_full",
+                "batches", "queries", "overflow_queries", "dataset_updates",
+                "queries_per_s", "latency", "epoch", "admission",
+                "queue_depth", "session", "merge", "stages", "registry"):
+        assert key in rep, f"report() lost key {key!r}"
+    for axis in ("queue", "execute", "total", "shed"):
+        snap = rep["latency"][axis]
+        assert {"count", "mean_s", "p50_s", "p95_s", "p99_s",
+                "max_s"} <= set(snap)
+    # the mergeable block: counters + rate + wall window + full hist states
+    assert {"counters", "queries_per_s", "window", "hists"} \
+        <= set(rep["merge"])
+    assert {"t0_wall", "t1_wall", "queries"} == set(rep["merge"]["window"])
+    assert rep["merge"]["window"]["queries"] == rep["queries"]
+    # the stage block: serving + session walls from ONE registry
+    hists = rep["stages"]["histograms"]
+    for name in ("serving/queue_wait_s", "serving/execute_s",
+                 "serving/total_s", "serving/coalesce_s",
+                 "serving/scatter_s", "session/plan_s"):
+        assert name in hists, f"stages block lost {name!r}"
+    assert hists["serving/queue_wait_s"]["count"] == len(reqs)
+    json.dumps(rep)                             # stays JSON-serializable
+
+
+def test_serving_spans_cover_every_traced_request(traced_server_report):
+    _, spans, reqs, _ = traced_server_report
+    by_trace: dict = {}
+    for s in spans:
+        by_trace.setdefault(s["trace_id"], []).append(s)
+    req_traces = [by_trace[r.trace_id] for r in reqs]
+    for trace in req_traces:
+        names = sorted(s["name"] for s in trace)
+        assert names == ["coalesce", "execute", "queue_wait", "scatter"]
+        assert all(s["parent_id"] == trace[0]["parent_id"] for s in trace)
+    # the epoch barrier got its own trace with an apply_epoch span
+    assert any(any(s["name"] == "apply_epoch" for s in t)
+               for t in by_trace.values())
+
+
+def test_server_prometheus_endpoint(traced_server_report):
+    _, _, _, text = traced_server_report
+    assert "# TYPE aidw_serving_queue_wait_s summary" in text
+    assert "aidw_serving_coalesce_s" in text
+    assert "aidw_session_plan_s" in text
+
+
+def test_server_without_tracer_serves_and_reports_no_spans():
+    pts = spatial_points(2048, seed=0)
+    with AsyncAidwServer(pts, max_batch=512,
+                         query_domain=spatial_queries(256, seed=1)) as srv:
+        r = srv.submit(spatial_queries(32, seed=2))
+        srv.flush(timeout=300)
+        assert r.status == "done" and r.trace_id is None
+        assert srv.spans() == []
+        assert srv.report()["stages"]["histograms"][
+            "serving/queue_wait_s"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# session timing aliases (satellite a)
+# ---------------------------------------------------------------------------
+
+
+def test_session_timing_aliases_mirror_registry():
+    from repro.core import AidwConfig, InterpolationSession
+
+    pts = spatial_points(2048, seed=0)
+    qs = spatial_queries(256, seed=1)
+    sess = InterpolationSession(pts, AidwConfig(), query_domain=qs)
+    # stats["last_plan_s"] is the documented alias of the newest
+    # session/plan_s observation
+    snap = sess.registry.snapshot()["histograms"]
+    assert snap["session/plan_s"]["count"] == 1
+    assert snap["session/plan_s"]["mean_s"] \
+        == pytest.approx(sess.stats["last_plan_s"])
+
+    sess.query(qs)                                  # compile the bucket
+    sess.registry.reset_histogram("session/query_s")
+    res = sess.query(qs, timings=True)
+    h = sess.registry.snapshot()["histograms"]["session/query_s"]
+    assert h["count"] == 1
+    # res.timings["query"] is the alias of the same wall
+    assert h["mean_s"] == pytest.approx(res.timings["query"])
+
+    prof = sess.query(qs, profile=True)
+    assert prof.timings["stage1"] + prof.timings["stage2"] \
+        == pytest.approx(prof.timings["query"])
+    h = sess.registry.snapshot()["histograms"]
+    assert h["session/stage1_s"]["count"] == 1
+    assert h["session/stage2_s"]["count"] == 1
+    # profiled split is bit-identical to the fused path
+    assert np.array_equal(np.asarray(prof.values), np.asarray(res.values))
+
+
+def test_session_spans_nest_plan_and_profiled_query():
+    from repro.core import AidwConfig, InterpolationSession
+
+    pts = spatial_points(2048, seed=0)
+    qs = spatial_queries(256, seed=1)
+    tr = Tracer(sample_rate=1.0, host="s")
+    sess = InterpolationSession(pts, AidwConfig(), query_domain=qs,
+                                tracer=tr)
+    sess.query(qs, profile=True)
+    spans = tr.spans()
+    names = {s["name"] for s in spans}
+    assert {"plan", "bin", "query", "stage1", "stage2"} <= names
+    plan = next(s for s in spans if s["name"] == "plan")
+    binsp = next(s for s in spans if s["name"] == "bin")
+    assert binsp["parent_id"] == plan["span_id"]
+    assert binsp["dur"] <= plan["dur"]
+    query = next(s for s in spans if s["name"] == "query")
+    for st in ("stage1", "stage2"):
+        sp = next(s for s in spans if s["name"] == st)
+        assert sp["parent_id"] == query["span_id"]
+        assert sp["trace_id"] == query["trace_id"]
