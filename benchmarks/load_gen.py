@@ -37,18 +37,25 @@ so propagated contexts are recorded but no fleet-invisible roots start.
 ``--trace-out PATH`` writes the collected spans as Chrome ``trace_event``
 JSON (loads in ``chrome://tracing``/Perfetto; the CI cluster-suite uploads
 it as the sample-trace artifact).  ``--trace-overhead-gate`` runs the
-rate-0 overhead acceptance check instead of a plain load run: two
-identical loads, one without a tracer and one with a sample-rate-0 tracer
-(the always-on production configuration), and RAISES when the traced p99
-exceeds ``TRACE_OVERHEAD_LIMIT`` (2%) over baseline — best of 3 attempts,
-since open-loop p99 on a shared CPU box is noisy and the gate exists to
-catch hot-path instrumentation cost, not scheduler jitter.  Standalone:
+observability overhead acceptance check instead of a plain load run: two
+identical loads, one with no tracer and no flight recorder, one with a
+sample-rate-0 tracer plus the always-on recorder (the production
+configuration), and RAISES when the instrumented p99 exceeds
+``TRACE_OVERHEAD_LIMIT`` (2%) over baseline — best of 3 attempts, since
+open-loop p99 on a shared CPU box is noisy and the gate exists to catch
+hot-path instrumentation cost, not scheduler jitter.  The same flag then
+runs the tail-sampling retention gate (``recorder_retention_rows``): a
+deadline-heavy trace where >= 95% of missed-deadline requests must retain
+full span trees, zero in-SLO requests may be retained, and the tail
+attribution must decompose the p99-p50 gap within 15%.  ``--debugz-out
+PATH`` (PR 9) writes the diagnostics bundle — fleet-merged under
+``--cluster`` — as the CI debugz artifact.  Standalone:
 
     PYTHONPATH=src python benchmarks/load_gen.py [--json] [--mesh]
         [--requests N] [--rate QPS] [--updates K]
         [--cluster N [--cluster-procs]] [--policy least_loaded]
         [--trace-sample-rate P] [--trace-out trace.json]
-        [--trace-overhead-gate]
+        [--trace-overhead-gate] [--debugz-out debugz.json]
 """
 
 from __future__ import annotations
@@ -166,6 +173,10 @@ def run_load(server, trace, *, updates: int = 0,
         "writes": len(write_ops),
         "lost": len(reqs) - len(terminal),
         "duplicated": len(reqs) - len({r.uid for r in reqs}),
+        # the request objects themselves (NOT JSON: the CLI pops this
+        # before serializing) — the recorder retention gate needs per-
+        # request terminal state to cross-check against retained traces
+        "_reqs": reqs,
     }
 
 
@@ -174,7 +185,9 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
           pipeline_depth: int = 0, layout: str = "replicated",
           ring_cap: int = 1024, write_rate_rps: float = 0.0,
           write_batch: int = 32,
-          trace_sample_rate: float | None = None) -> dict:
+          trace_sample_rate: float | None = None,
+          record_tail: bool = True, recorder_opts: dict | None = None,
+          debugz: bool = False) -> dict:
     """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
     and the JSON CLI so both measure the same configuration).
 
@@ -188,12 +201,19 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
     per-slab delta staging instead of a full re-stage per delta.
     ``trace_sample_rate`` builds the server's tracer at that rate (``None``
     = no tracer at all — the overhead-gate baseline); collected spans ride
-    out under ``"spans"``.
+    out under ``"spans"``.  ``record_tail=False`` drops the always-on
+    flight recorder too (the PR-9 overhead-gate baseline: no observability
+    objects at all on the hot path); ``recorder_opts`` pass through to
+    :class:`repro.obs.FlightRecorder` (the retention gate pins
+    ``top_percentile=None`` so retention is a pure function of the trace);
+    ``debugz=True`` attaches the server's diagnostics bundle under
+    ``"debugz"``.
     """
     pts = spatial_points(points, seed=seed)
     with AsyncAidwServer(pts, max_batch=max_batch, mesh=mesh, layout=layout,
                          ring_cap=ring_cap, pipeline_depth=pipeline_depth,
                          trace_sample_rate=trace_sample_rate,
+                         record_tail=record_tail, recorder_opts=recorder_opts,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         for _ in range(3):
             srv.submit(spatial_queries(req_queries, seed=2))
@@ -209,6 +229,8 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
                                    pts[:, :2].max(axis=0)))
         if trace_sample_rate:
             out["spans"] = srv.spans()
+        if debugz:
+            out["debugz"] = srv.debugz()
         return out
 
 
@@ -216,7 +238,8 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
                   max_batch: int = 4096, updates: int = 3,
                   req_queries: int = 96, seed: int = 0,
                   policy: str = "round_robin", mesh=None,
-                  trace_sample_rate: float | None = None) -> dict:
+                  trace_sample_rate: float | None = None,
+                  debugz: bool = False) -> dict:
     """Replay ``trace`` against an ``n_hosts`` fleet; returns the merged
     fleet report (flattened: ``report`` = fleet view, ``hosts``/``routing``
     attached).
@@ -229,7 +252,9 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
     ``trace_sample_rate`` samples at the ROUTER; hosts (subprocess ones
     included) run their tracers at rate 0 so they record propagated
     contexts without starting fleet-invisible roots; spans collected from
-    every live host ride out under ``"spans"``.
+    every live host ride out under ``"spans"``.  ``debugz=True`` attaches
+    the MERGED fleet diagnostics bundle (per-host debugz + fleet-level
+    SLO events + tail-latency attribution) under ``"debugz"``.
     """
     import os
 
@@ -274,6 +299,8 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
             out["epoch"] = rep["epoch"]
             if trace_sample_rate:
                 out["spans"] = cl.collect_spans()
+            if debugz:
+                out["debugz"] = cl.debugz()
     finally:
         for w in workers:
             try:
@@ -390,13 +417,14 @@ TRACE_OVERHEAD_LIMIT = 1.02     # traced/baseline p99 ceiling (the <2% story)
 def trace_overhead_rows(n_requests: int = 64, rate_rps: float = 200.0,
                         req_queries: int = 96, points: int = 16384,
                         seed: int = 0, attempts: int = 3) -> list[tuple]:
-    """The rate-0 tracing overhead acceptance gate.
+    """The always-on observability overhead acceptance gate.
 
-    Replays one open-loop trace twice — ``trace_sample_rate=None`` (no
-    tracer object anywhere: the pre-PR-8 hot path) vs
-    ``trace_sample_rate=0.0`` (tracer constructed, sampler never admits:
-    the always-on production configuration, whose cost is one ``None``
-    check per call site) — and RAISES when the traced p99 exceeds
+    Replays one open-loop trace twice — baseline with NO observability
+    objects anywhere on the hot path (``trace_sample_rate=None`` +
+    ``record_tail=False``: the pre-PR-8 configuration) vs the full
+    production configuration (``trace_sample_rate=0.0``: tracer built,
+    sampler never admits; flight recorder ON, classifying and recording
+    every request) — and RAISES when the instrumented p99 exceeds
     ``TRACE_OVERHEAD_LIMIT`` x baseline on the best of ``attempts`` runs.
     Deadline-free trace (a shed tail would censor the very p99 under
     comparison) at a sub-saturation rate (at oversaturation p99 measures
@@ -406,8 +434,10 @@ def trace_overhead_rows(n_requests: int = 64, rate_rps: float = 200.0,
     kw = dict(updates=0, req_queries=req_queries, seed=seed)
     best = float("inf")
     for _ in range(attempts):
-        base = drive(points, trace, trace_sample_rate=None, **kw)
-        traced = drive(points, trace, trace_sample_rate=0.0, **kw)
+        base = drive(points, trace, trace_sample_rate=None,
+                     record_tail=False, **kw)
+        traced = drive(points, trace, trace_sample_rate=0.0,
+                       record_tail=True, **kw)
         for out in (base, traced):
             if out["lost"] or out["duplicated"]:
                 raise RuntimeError(
@@ -421,14 +451,97 @@ def trace_overhead_rows(n_requests: int = 64, rate_rps: float = 200.0,
             break
     if best > TRACE_OVERHEAD_LIMIT:
         raise RuntimeError(
-            f"trace overhead gate: sample-rate-0 tracing p99 is {best:.3f}x "
-            f"baseline (> {TRACE_OVERHEAD_LIMIT}x) over {attempts} attempts "
-            f"(baseline {b99 * 1e3:.2f}ms, traced {t99 * 1e3:.2f}ms)")
+            f"trace overhead gate: rate-0 tracing + flight recorder p99 is "
+            f"{best:.3f}x baseline (> {TRACE_OVERHEAD_LIMIT}x) over "
+            f"{attempts} attempts "
+            f"(baseline {b99 * 1e3:.2f}ms, instrumented {t99 * 1e3:.2f}ms)")
     tag = f"{points}x{req_queries}@{rate_rps:.0f}rps"
     return [
         (f"serving/trace_overhead_p99_ratio/{tag}", 0.0,
-         f"rate-0 tracing p99 {best:.3f}x baseline "
+         f"rate-0 tracing + recorder p99 {best:.3f}x baseline "
          f"(limit {TRACE_OVERHEAD_LIMIT}x, best of {attempts})"),
+    ]
+
+
+def recorder_retention_rows(n_requests: int = 48, rate_rps: float = 300.0,
+                            req_queries: int = 96, points: int = 16384,
+                            seed: int = 0) -> list[tuple]:
+    """The tail-sampling retention acceptance gate.
+
+    Replays a deadline-heavy open-loop trace (half the requests carry
+    deadlines drawn from 0.5–10ms — tight enough that some MUST miss under
+    real dispatch latency) against a recorder with the noise classes off
+    (``top_percentile=None``: no 'slow' class, so retention is a pure
+    function of each request's own outcome) and a ring large enough that
+    nothing evicts.  Asserts the ISSUE-9 acceptance bars:
+
+    - >= 95% of requests that MISSED their deadline (shed at admission/
+      dispatch, or served past it) have a full span tree retained;
+    - ZERO in-SLO requests (served in time, no overflow, no zero-weight
+      neighborhoods) retained — tail sampling, not head sampling;
+    - the tail-latency attribution built from the recorder's state
+      decomposes the p99-p50 gap into per-stage contributions whose sum
+      lands within 15% of the gap (exact by construction when any additive
+      stage shows positive excess — the row records the residual).
+    """
+    from repro.obs import tail_attribution
+
+    trace = make_trace(n_requests, rate_rps, req_queries,
+                       deadline_frac=0.5, deadline_ms=(0.5, 10.0), seed=seed)
+    out = drive(points, trace, updates=0, req_queries=req_queries, seed=seed,
+                trace_sample_rate=0.0, record_tail=True,
+                recorder_opts={"top_percentile": None,
+                               "ring": 4 * n_requests},
+                debugz=True)
+    if out["lost"] or out["duplicated"]:
+        raise RuntimeError(f"retention run lost/duplicated requests: "
+                           f"{out['lost']}/{out['duplicated']}")
+    reqs = out["_reqs"]
+    rec = out["debugz"]["recorder"]
+    retained = {t["id"] for t in rec["traces"]}
+
+    def rec_id(r):
+        return getattr(r, "trace_id", None) or f"req-{r.uid}"
+
+    missed = [r for r in reqs
+              if r.status == "shed"
+              or (r.deadline is not None and r.status == "done"
+                  and r.t_done is not None and r.t_done > r.deadline)]
+    in_slo = [r for r in reqs
+              if r.status == "done" and not r.overflow
+              and not getattr(r, "zero_weight", 0)
+              and (r.deadline is None
+                   or (r.t_done is not None and r.t_done <= r.deadline))]
+    miss_kept = sum(rec_id(r) in retained for r in missed)
+    slo_kept = [rec_id(r) for r in in_slo if rec_id(r) in retained]
+    if missed and miss_kept < 0.95 * len(missed):
+        raise RuntimeError(
+            f"retention gate: only {miss_kept}/{len(missed)} missed-deadline "
+            f"requests have retained span trees (need >= 95%; recorder "
+            f"dropped={rec['dropped']})")
+    if slo_kept:
+        raise RuntimeError(
+            f"retention gate: {len(slo_kept)} in-SLO requests retained "
+            f"(tail sampling must retain zero): {slo_kept[:5]}")
+
+    attr = tail_attribution([rec],
+                            registry_state=out["debugz"].get("registry"))
+    gap, attributed = attr["gap_s"], attr["attributed_s"]
+    residual = abs(attributed - gap) / max(gap, 1e-12)
+    if gap > 0 and any(s["tail_mean_s"] > 0
+                       for s in attr["stages"].values()
+                       if s.get("additive")) and residual > 0.15:
+        raise RuntimeError(
+            f"attribution identity: per-stage contributions sum to "
+            f"{attributed * 1e3:.2f}ms vs p99-p50 gap {gap * 1e3:.2f}ms "
+            f"({residual:.0%} residual > 15%)")
+    tag = f"{points}x{req_queries}@{rate_rps:.0f}rps"
+    return [
+        (f"serving/recorder_retention/{tag}", 0.0,
+         f"{miss_kept}/{len(missed)} missed-deadline requests retained, "
+         f"0/{len(in_slo)} in-SLO retained, "
+         f"attribution residual {residual:.1%} of "
+         f"{gap * 1e3:.2f}ms gap"),
     ]
 
 
@@ -517,9 +630,16 @@ def main() -> None:
                         "(needs --trace-sample-rate > 0; CI uploads it as "
                         "the sample-trace artifact)")
     p.add_argument("--trace-overhead-gate", action="store_true",
-                   help="run the rate-0 tracing overhead acceptance gate "
-                        "(<2% p99 over an untraced baseline, best of 3) "
-                        "instead of a plain load run; raises on failure")
+                   help="run the observability overhead acceptance gate "
+                        "(<2% p99 with rate-0 tracing + flight recorder ON "
+                        "over a bare baseline, best of 3) plus the tail-"
+                        "sampling retention gate instead of a plain load "
+                        "run; raises on failure")
+    p.add_argument("--debugz-out", default=None, metavar="PATH",
+                   help="write the diagnostics bundle (queue/epoch state, "
+                        "SLO events, flight-recorder traces, tail-latency "
+                        "attribution; fleet-merged in --cluster mode) as "
+                        "JSON to PATH after the run")
     p.add_argument("--json", action="store_true",
                    help="emit the full JSON latency report (CI artifact)")
     args = p.parse_args()
@@ -528,6 +648,8 @@ def main() -> None:
         rows = trace_overhead_rows(n_requests=args.requests,
                                    req_queries=args.req_queries,
                                    points=args.points, seed=args.seed)
+        rows += recorder_retention_rows(req_queries=args.req_queries,
+                                        points=args.points, seed=args.seed)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
@@ -552,16 +674,24 @@ def main() -> None:
                             max_batch=args.max_batch, updates=args.updates,
                             req_queries=args.req_queries, seed=args.seed,
                             policy=args.policy, mesh=mesh,
-                            trace_sample_rate=args.trace_sample_rate)
+                            trace_sample_rate=args.trace_sample_rate,
+                            debugz=bool(args.debugz_out))
     else:
         out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
                     updates=args.updates, req_queries=args.req_queries,
                     seed=args.seed, pipeline_depth=args.pipeline,
                     layout=args.layout, write_rate_rps=args.write_rate,
                     write_batch=args.write_batch,
-                    trace_sample_rate=args.trace_sample_rate)
+                    trace_sample_rate=args.trace_sample_rate,
+                    debugz=bool(args.debugz_out))
 
+    out.pop("_reqs", None)               # request objects are not JSON
     spans = out.pop("spans", [])
+    if args.debugz_out:
+        with open(args.debugz_out, "w") as f:
+            json.dump(out.pop("debugz"), f, indent=1)
+        print(f"# wrote debugz bundle to {args.debugz_out}",
+              file=sys.stderr)
     if args.trace_out:
         from repro.obs import chrome_trace
 

@@ -38,6 +38,11 @@ repo-root perf-trajectory artifact.  The artifact name is derived per PR —
 ``BENCH_ARTIFACT_TAG`` env var (so CI never re-overwrites an earlier PR's
 trajectory file the way a hardcoded name would) — and the CI mesh-suite job
 regenerates and uploads it per PR.  An explicit ``--json PATH`` still wins.
+After writing, the PERF-TRAJECTORY REGRESSION GATE compares this run's
+``stage/*`` rows against the most recent prior ``BENCH_*.json`` carrying
+each row and fails the run when any per-stage wall regressed by more than
+``REGRESSION_LIMIT`` (25%); rows with no prior measurement are
+grandfathered in, so adding a stage never blocks the PR that adds it.
 """
 
 from __future__ import annotations
@@ -46,11 +51,62 @@ import argparse
 import os
 import sys
 
-DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR8")
+DEFAULT_TAG = os.environ.get("BENCH_ARTIFACT_TAG", "PR9")
+
+# perf-trajectory regression guard: a stage/* row that got > this much
+# slower than the most recent prior BENCH_*.json carrying the same row
+# fails the run (absent-before rows are grandfathered — new stages enter
+# the trajectory without blocking the PR that adds them)
+REGRESSION_LIMIT = 1.25
 
 
 def default_artifact(tag: str = DEFAULT_TAG) -> str:
     return f"BENCH_{tag}.json"
+
+
+def _prior_artifacts(root, current) -> list:
+    """Prior BENCH_*.json artifacts at the repo root, NEWEST first (PR tag
+    order: BENCH_PR8 before BENCH_PR5), excluding the one being written."""
+    import re
+
+    def key(p):
+        m = re.search(r"BENCH_PR(\d+)", p.name)
+        return int(m.group(1)) if m else -1
+
+    return sorted((p for p in root.glob("BENCH_*.json")
+                   if p.resolve() != current.resolve()),
+                  key=key, reverse=True)
+
+
+def check_regressions(rows, out_path, limit: float = REGRESSION_LIMIT,
+                      prefix: str = "stage/") -> list[str]:
+    """Compare this run's ``prefix`` rows against the most recent prior
+    artifact that carries each row; return the list of violation strings
+    (callers raise).  Rows with no prior measurement, or with a prior/
+    current value of ~0 (gate rows report 0.0 us), are skipped."""
+    import json
+
+    priors: dict[str, tuple[float, str]] = {}
+    for p in _prior_artifacts(out_path.parent, out_path):
+        try:
+            data = json.loads(p.read_text())
+        except (OSError, ValueError):
+            continue
+        for r in data.get("rows", []):
+            n = r.get("name", "")
+            if n.startswith(prefix) and n not in priors:
+                priors[n] = (float(r.get("us_per_call", 0.0)), p.name)
+    bad = []
+    for name, us, _ in rows:
+        if not name.startswith(prefix) or name not in priors:
+            continue                     # grandfather rows absent before
+        prior_us, src = priors[name]
+        if prior_us <= 1e-9 or us <= 1e-9:
+            continue
+        if us > limit * prior_us:
+            bad.append(f"{name}: {us:.1f}us vs {prior_us:.1f}us in {src} "
+                       f"({us / prior_us:.2f}x > {limit}x)")
+    return bad
 
 
 def main() -> None:
@@ -163,6 +219,13 @@ def main() -> None:
                      for n, us, d in rows],
         }, indent=1) + "\n")
         print(f"# wrote {out}", file=sys.stderr)
+
+        bad = check_regressions(rows, out)
+        if bad:
+            raise SystemExit(
+                "perf-trajectory regression gate "
+                f"(> {REGRESSION_LIMIT}x vs prior artifact):\n  "
+                + "\n  ".join(bad))
 
 
 if __name__ == "__main__":

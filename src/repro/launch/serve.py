@@ -112,6 +112,7 @@ def run_aidw_async(args, pts, mesh) -> None:
         print(f"aidw serve: devices={s['devices']} "
               f"stage1_builds={s['stage1_builds']} "
               f"delta_updates={s['delta_updates']} queries={s['queries']}")
+        _dump_debugz(args, srv.debugz())
 
 
 def run_aidw_cluster(args, pts, mesh=None) -> None:
@@ -158,6 +159,29 @@ def run_aidw_cluster(args, pts, mesh=None) -> None:
                   f"completed {h['completed']} "
                   f"queries {h['queries']} (n_points "
                   f"{h['session']['n_points']})")
+        _dump_debugz(args, cl.debugz())
+
+
+def _dump_debugz(args, bundle: dict) -> None:
+    """Write the diagnostics bundle for ``--debug-dump PATH`` and print
+    the tail-latency attribution it carries (single-server bundles have
+    per-host shape; fleet bundles are pre-merged)."""
+    if not getattr(args, "debug_dump", None):
+        return
+    import json
+
+    from repro.obs import render_attribution, tail_attribution
+
+    attr = bundle.get("attribution")
+    if attr is None and bundle.get("recorder"):
+        attr = tail_attribution([bundle["recorder"]],
+                                registry_state=bundle.get("registry"))
+        bundle = {**bundle, "attribution": attr}
+    with open(args.debug_dump, "w") as f:
+        json.dump(bundle, f, indent=1)
+    print(f"debugz bundle -> {args.debug_dump}")
+    if attr is not None:
+        print(render_attribution(attr))
 
 
 def main() -> None:
@@ -180,6 +204,11 @@ def main() -> None:
     p.add_argument("--policy", default="round_robin",
                    choices=("round_robin", "least_loaded"),
                    help="cluster routing policy")
+    p.add_argument("--debug-dump", metavar="PATH",
+                   help="AIDW --async/--cluster: write the debugz "
+                        "diagnostics bundle (queue/epoch state, SLO "
+                        "events, flight-recorder traces, tail-latency "
+                        "attribution) to PATH as JSON after the waves")
     p.add_argument("--points", type=int, default=16384)
     p.add_argument("--req-queries", type=int, default=384)
     p.add_argument("--max-batch", type=int, default=4096)

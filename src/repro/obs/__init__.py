@@ -47,11 +47,49 @@ Chrome ``trace_event`` JSON (loads in ``chrome://tracing``/Perfetto).
 Registry -> Prometheus naming: see :mod:`repro.obs.metrics` — internal
 slash-namespaced names (``session/plan_s``) export as
 ``aidw_session_plan_s`` (counters ``_total``-suffixed, histograms
-summary-style with ``quantile`` labels).
+summary-style with ``quantile`` labels, ``# HELP``/``# TYPE`` per
+family).  Histograms carry per-bin **exemplars**
+(``observe(..., exemplar=trace_id)``): a p99 bucket links straight to a
+flight-recorder trace.
+
+Always-on vs sampled — the two tiers of the tail story:
+
+* The **Tracer** is HEAD-sampled (root decides at submit); production
+  runs it at ``sample_rate=0``, so it explains requests you chose in
+  advance, never the stragglers.
+* The :class:`~repro.obs.recorder.FlightRecorder` is ALWAYS-ON and
+  TAIL-sampled: every request pays a fixed-size coarse breakdown
+  (queue_wait/coalesce/execute/scatter floats off the existing fence
+  points), and the full span tree is retained in a bounded ring only
+  when the request is anomalous.  Anomaly classes (stable API):
+  ``deadline_miss``, ``shed``, ``overflow``, ``zero_weight``, and
+  ``slow`` (total at/above the recorder's own running
+  ``top_percentile``, armed after ``min_window`` observations).
+  Retention is deterministic under fake clocks; evictions are counted in
+  ``dropped``.  Because the recorder is always-on it lives INSIDE the
+  <2% p99 budget — the load_gen overhead gate re-verifies p99 <=1.02x
+  with the recorder enabled.
+* The :class:`~repro.obs.slo.SloMonitor` evaluates burn-rate windows
+  over cumulative counters (deadline-miss rate, shed rate) plus gauge
+  thresholds (queue depth, ring occupancy vs ``compact_highwater``) on
+  the COLD path only (``report()``/``debugz()`` pulls); breaches emit
+  edge-triggered events into the recorder's event ring.  Fleet epoch
+  staleness is derived at the ``AidwCluster.debugz()`` merge point.
+* :func:`~repro.obs.attribution.tail_attribution` decomposes the
+  p99−p50 gap into per-stage contributions from the retained outliers
+  (proportional to each additive stage's tail excess over its p50), with
+  a stall block for ``session/compact_stall_s`` and
+  ``serving/epoch_barrier_s`` — rendered as JSON and text
+  (:func:`~repro.obs.attribution.render_attribution`).
 """
 
+from .attribution import render_attribution, tail_attribution
 from .metrics import Counter, Gauge, Histogram, Registry
+from .recorder import FlightRecorder
+from .slo import SloMonitor, fleet_epoch_events
 from .trace import Span, Tracer, chrome_trace, fence, new_span_id
 
-__all__ = ["Counter", "Gauge", "Histogram", "Registry",
-           "Span", "Tracer", "chrome_trace", "fence", "new_span_id"]
+__all__ = ["Counter", "FlightRecorder", "Gauge", "Histogram", "Registry",
+           "SloMonitor", "Span", "Tracer", "chrome_trace", "fence",
+           "fleet_epoch_events", "new_span_id", "render_attribution",
+           "tail_attribution"]

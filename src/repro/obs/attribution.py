@@ -1,0 +1,185 @@
+"""Tail-latency attribution: decompose the p99−p50 gap into per-stage
+contributions from the flight recorder's retained outliers.
+
+The question "why is p99 slow" is a question about the DIFFERENCE
+between tail requests and typical requests, not about where time goes on
+average — a stage can dominate the mean and contribute nothing to the
+tail.  The decomposition here:
+
+1. ``gap = p99(total) − p50(total)`` from the recorder's always-on
+   total histogram (every request, not just retained ones);
+2. the *tail set* is the retained SERVED outliers whose total is at/above
+   the p99 threshold (sheds are excluded — they have no stage breakdown
+   and their fast termination is censored from the histogram too);
+   when retention classes caught outliers below p99 only, the single
+   slowest retained record stands in;
+3. per additive stage, ``excess = max(mean_tail(stage) − p50(stage), 0)``
+   — how much more of that stage a tail request pays than the typical
+   request;
+4. the gap is attributed proportionally:
+   ``attributed = gap * excess / sum(excess)`` — so the per-stage
+   contributions sum to the measured gap EXACTLY whenever any stage shows
+   excess (raw excesses are reported alongside; the proportional view is
+   the headline because fence-grained stage walls overlap imperfectly).
+
+Only ``queue_wait`` and ``execute`` are additive: by the scheduler's
+timing identity ``total = queue_wait + execute`` exactly (coalesce
+overlaps queue_wait inside the submit→dispatch window; scatter lands
+after ``t_done``).  The overlapping stages are still reported — a tail
+dominated by coalesce time is actionable (linger too long) even though
+its wall is a subset of queue_wait's.
+
+The report also carries a ``stalls`` block read from the registry state:
+``session/compact_stall_s`` (the FIFO-barrier hold while the stop-the-
+world compaction folds) and ``serving/epoch_barrier_s`` (dataset-update
+holds) — the two serving-loop stalls that surface as queue_wait in the
+per-request view; the block names the culprit behind a queue_wait-heavy
+tail.
+"""
+
+from __future__ import annotations
+
+from .metrics import Histogram
+
+__all__ = ["tail_attribution", "render_attribution", "ADDITIVE_STAGES"]
+
+# total == queue_wait + execute by the scheduler's timing identity
+ADDITIVE_STAGES = ("queue_wait", "execute")
+# reported but excluded from the additive decomposition (overlapping)
+OVERLAY_STAGES = ("coalesce", "scatter")
+
+# registry histograms surfaced as the stall block (name -> short label)
+_STALL_HISTS = {
+    "session/compact_stall_s": "compaction stall (FIFO barrier hold)",
+    "serving/epoch_barrier_s": "epoch barrier (dataset update hold)",
+    "session/compact_s": "compaction device fold",
+}
+
+
+def tail_attribution(recorder_states, *, registry_state=None,
+                     p_tail: float = 99.0, p_base: float = 50.0) -> dict:
+    """Build the attribution report from one or more
+    ``FlightRecorder.state()`` dicts (a fleet merge is just the list of
+    per-host states — histograms merge bin-exactly, trace lists
+    concatenate).  ``registry_state`` (a ``Registry.state()`` dict,
+    optionally fleet-merged) feeds the stall block."""
+    if isinstance(recorder_states, dict):
+        recorder_states = [recorder_states]
+    states = [s for s in recorder_states if s]
+
+    def merged(name):
+        hs = [s["hists"][name] for s in states
+              if s.get("hists", {}).get(name)]
+        return Histogram.from_states(hs) if hs else Histogram()
+
+    total = merged("total")
+    p_lo = total.percentile(p_base)
+    p_hi = total.percentile(p_tail)
+    gap = max(p_hi - p_lo, 0.0)
+
+    outliers = [t for s in states for t in s.get("traces", [])
+                if "shed" not in t.get("anomalies", ())
+                and t.get("breakdown", {}).get("total") is not None]
+    tail = [t for t in outliers if t["breakdown"]["total"] >= p_hi]
+    tail_is_fallback = False
+    if not tail and outliers:
+        tail = [max(outliers, key=lambda t: t["breakdown"]["total"])]
+        tail_is_fallback = True
+
+    def stage_row(name, additive):
+        base = merged(name).percentile(p_base)
+        walls = [t["breakdown"].get(name) for t in tail]
+        walls = [w for w in walls if w is not None]
+        mean = (sum(walls) / len(walls)) if walls else 0.0
+        return {"p50_s": base, "tail_mean_s": mean,
+                "excess_s": max(mean - base, 0.0),
+                "additive": additive}
+
+    stages = {n: stage_row(n, True) for n in ADDITIVE_STAGES}
+    stages.update({n: stage_row(n, False) for n in OVERLAY_STAGES})
+
+    # shares come from per-stage EXCESS over the p50 baseline; when no
+    # additive stage exceeds its baseline (log-bin edge effects under
+    # saturation: percentile() returns bin upper edges, which can
+    # overshoot every observed wall) degrade to raw tail-mean mass so a
+    # positive gap still decomposes instead of going unattributed
+    excess_sum = sum(stages[n]["excess_s"] for n in ADDITIVE_STAGES)
+    share_basis, basis_key = "excess", "excess_s"
+    if excess_sum <= 0:
+        excess_sum = sum(stages[n]["tail_mean_s"] for n in ADDITIVE_STAGES)
+        share_basis, basis_key = "tail_mean", "tail_mean_s"
+    for n in ADDITIVE_STAGES:
+        share = (stages[n][basis_key] / excess_sum) if excess_sum > 0 \
+            else 0.0
+        stages[n]["share"] = share
+        stages[n]["attributed_s"] = gap * share
+    for n in OVERLAY_STAGES:
+        stages[n]["share"] = None
+        stages[n]["attributed_s"] = None
+
+    attributed = sum(stages[n]["attributed_s"] for n in ADDITIVE_STAGES)
+
+    stalls = {}
+    if registry_state:
+        # Registry.state() keys its mergeable bin states "hists" (the
+        # snapshot() form, "histograms", holds percentiles, not bins)
+        reg_hists = registry_state.get("hists", {})
+        for hname, label in _STALL_HISTS.items():
+            hs = reg_hists.get(hname)
+            if not hs:
+                continue
+            h = Histogram.from_states([hs])
+            stalls[hname] = {"label": label, "count": h.count,
+                             "p50_s": h.percentile(50.0),
+                             "p99_s": h.percentile(99.0),
+                             "max_s": h.max, "sum_s": h.sum}
+
+    return {"p_tail": p_tail, "p_base": p_base,
+            "n_total": total.count,
+            "p50_s": p_lo, "p99_s": p_hi, "gap_s": gap,
+            "tail_n": len(tail), "tail_is_fallback": tail_is_fallback,
+            "outliers_retained": len(outliers),
+            "share_basis": share_basis,
+            "stages": stages,
+            "attributed_s": attributed,
+            "unattributed_s": max(gap - attributed, 0.0),
+            "stalls": stalls}
+
+
+def render_attribution(report: dict) -> str:
+    """Human-readable rendering of :func:`tail_attribution` output."""
+    r = report
+    lines = [
+        f"tail-latency attribution (p{r['p_base']:g} -> p{r['p_tail']:g},"
+        f" n={r['n_total']})",
+        f"  p50 {r['p50_s'] * 1e3:9.3f} ms   p99 {r['p99_s'] * 1e3:9.3f}"
+        f" ms   gap {r['gap_s'] * 1e3:9.3f} ms",
+        f"  tail set: {r['tail_n']} retained outlier(s)"
+        + (" [fallback: slowest retained]" if r["tail_is_fallback"]
+           else ""),
+    ]
+    lines.append(f"  {'stage':<12} {'p50':>10} {'tail mean':>10}"
+                 f" {'excess':>10} {'attributed':>11} {'share':>7}")
+    for name, s in r["stages"].items():
+        att = "" if s["attributed_s"] is None \
+            else f"{s['attributed_s'] * 1e3:9.3f}ms"
+        shr = "" if s["share"] is None else f"{s['share'] * 100:5.1f}%"
+        tag = "" if s["additive"] else "  (overlaps)"
+        lines.append(
+            f"  {name:<12} {s['p50_s'] * 1e3:8.3f}ms"
+            f" {s['tail_mean_s'] * 1e3:8.3f}ms"
+            f" {s['excess_s'] * 1e3:8.3f}ms {att:>11} {shr:>7}{tag}")
+    basis = "" if r.get("share_basis", "excess") == "excess" \
+        else " [shares by tail-mean mass: no stage exceeded baseline]"
+    lines.append(f"  attributed {r['attributed_s'] * 1e3:.3f} ms"
+                 f" / gap {r['gap_s'] * 1e3:.3f} ms"
+                 f" (unattributed {r['unattributed_s'] * 1e3:.3f} ms){basis}")
+    if r["stalls"]:
+        lines.append("  stalls:")
+        for hname, st in r["stalls"].items():
+            lines.append(
+                f"    {hname:<28} n={st['count']:<5}"
+                f" p50 {st['p50_s'] * 1e3:8.3f}ms"
+                f" p99 {st['p99_s'] * 1e3:8.3f}ms"
+                f" max {st['max_s'] * 1e3:8.3f}ms  ({st['label']})")
+    return "\n".join(lines)

@@ -28,7 +28,14 @@ Design rules:
   ``<prefix>_<name>`` with ``/``, ``.``, ``-`` and spaces folded to ``_``
   (default prefix ``aidw``).  Counters get the conventional ``_total``
   suffix; histograms are rendered summary-style as ``_count`` / ``_sum`` /
-  ``_max`` plus ``{quantile="0.5|0.95|0.99"}`` samples.
+  ``_max`` plus ``{quantile="0.5|0.95|0.99"}`` samples.  Every family is
+  preceded by its ``# HELP`` and ``# TYPE`` comment lines.
+* **Exemplars link buckets to traces.**  ``record(s, exemplar=trace_id)``
+  keeps ONE exemplar id per log bin (latest wins), merged bin-exactly in
+  :meth:`Histogram.merge_state` and emitted in the JSON snapshot/state —
+  so a fleet p99 bucket points straight at a flight-recorder trace.  The
+  Prometheus text exposition is unchanged (exemplars are an OpenMetrics
+  extension; the 0.0.4 text format has no syntax for them).
 """
 
 from __future__ import annotations
@@ -61,13 +68,17 @@ class Histogram:
         self._edges = [lo * 10.0 ** (i / bins_per_decade)
                        for i in range(1, n + 1)]
         self._counts = [0] * (n + 1)        # +1: overflow bucket above hi
+        self._exemplars: dict[int, str] = {}   # bin index -> trace id
         self.count = 0
         self.sum = 0.0
         self.max = 0.0
 
-    def record(self, seconds: float) -> None:
+    def record(self, seconds: float, exemplar: str | None = None) -> None:
         s = max(float(seconds), 0.0)
-        self._counts[bisect_left(self._edges, s)] += 1
+        i = bisect_left(self._edges, s)
+        self._counts[i] += 1
+        if exemplar is not None:
+            self._exemplars[i] = exemplar     # one per bin, latest wins
         self.count += 1
         self.sum += s
         if s > self.max:
@@ -87,7 +98,7 @@ class Histogram:
         return self.max
 
     def snapshot(self) -> dict:
-        return {
+        out = {
             "count": self.count,
             "mean_s": self.sum / self.count if self.count else 0.0,
             "p50_s": self.percentile(50),
@@ -95,6 +106,13 @@ class Histogram:
             "p99_s": self.percentile(99),
             "max_s": self.max,
         }
+        if self._exemplars:
+            # upper bin edge -> exemplar id: the human-facing view keys by
+            # latency bound, not bin index
+            out["exemplars"] = {
+                f"{self._edges[i] if i < len(self._edges) else self.hi:g}":
+                    x for i, x in sorted(self._exemplars.items())}
+        return out
 
     # -- cross-host merging --------------------------------------------------
 
@@ -103,10 +121,15 @@ class Histogram:
         parameters, so fleet-level percentiles can be computed exactly from
         per-host histograms instead of averaging per-host percentiles (which
         has no statistical meaning)."""
-        return {"lo": self.lo, "hi": self.hi,
-                "bins_per_decade": self.bins_per_decade,
-                "counts": list(self._counts),
-                "count": self.count, "sum": self.sum, "max": self.max}
+        out = {"lo": self.lo, "hi": self.hi,
+               "bins_per_decade": self.bins_per_decade,
+               "counts": list(self._counts),
+               "count": self.count, "sum": self.sum, "max": self.max}
+        if self._exemplars:
+            # JSON object keys must be strings; merge_state converts back
+            out["exemplars"] = {str(i): x
+                                for i, x in self._exemplars.items()}
+        return out
 
     def merge_state(self, state: dict) -> None:
         """Fold another histogram's :meth:`state` into this one.  Bin layouts
@@ -121,6 +144,9 @@ class Histogram:
         self.count += int(state["count"])
         self.sum += float(state["sum"])
         self.max = max(self.max, float(state["max"]))
+        # bin-exact exemplar merge; .get guards pre-exemplar peer states
+        for i, x in (state.get("exemplars") or {}).items():
+            self._exemplars[int(i)] = x
 
     @classmethod
     def from_states(cls, states) -> "Histogram":
@@ -231,8 +257,9 @@ class Registry:
     def set(self, name: str, v: float, merge: str = "last") -> None:
         self.gauge(name, merge).set(v)
 
-    def observe(self, name: str, seconds: float) -> None:
-        self.histogram(name).record(seconds)
+    def observe(self, name: str, seconds: float,
+                exemplar: str | None = None) -> None:
+        self.histogram(name).record(seconds, exemplar=exemplar)
 
     # -- reporting -----------------------------------------------------------
 
@@ -302,7 +329,9 @@ class Registry:
 
         Counters render as ``<p>_<name>_total``; gauges as ``<p>_<name>``;
         histograms summary-style: ``_count``, ``_sum``, ``_max`` plus
-        ``{quantile="0.5|0.95|0.99"}`` samples in seconds.
+        ``{quantile="0.5|0.95|0.99"}`` samples in seconds.  Each family is
+        preceded by ``# HELP`` (the internal slash-namespaced name, so
+        dashboards can map back to ``Registry`` keys) and ``# TYPE``.
         """
         with self._lock:
             counters = {k: c.value for k, c in self._counters.items()}
@@ -311,15 +340,18 @@ class Registry:
         lines = []
         for k in sorted(counters):
             n = self._prom_name(prefix, k) + "_total"
+            lines.append(f"# HELP {n} cumulative count of {k}")
             lines.append(f"# TYPE {n} counter")
             lines.append(f"{n} {counters[k]}")
         for k in sorted(gauges):
             n = self._prom_name(prefix, k)
+            lines.append(f"# HELP {n} gauge {k}")
             lines.append(f"# TYPE {n} gauge")
             lines.append(f"{n} {gauges[k]}")
         for k in sorted(hists):
             n = self._prom_name(prefix, k)
             s = hists[k]
+            lines.append(f"# HELP {n} summary of {k} in seconds")
             lines.append(f"# TYPE {n} summary")
             for q, key in ((0.5, "p50_s"), (0.95, "p95_s"), (0.99, "p99_s")):
                 lines.append(f'{n}{{quantile="{q}"}} {s[key]}')

@@ -1,0 +1,257 @@
+"""Always-on flight recorder: tail-sampling for the anomalies head-sampling
+misses.
+
+The :class:`~repro.obs.trace.Tracer` samples at the ROOT: with
+``sample_rate=0`` (the production default, enforced by the <2% overhead
+gate) the p99 stragglers, deadline misses, and sheds leave no trace at
+all.  The :class:`FlightRecorder` inverts that: EVERY request records a
+fixed-size coarse breakdown — queue_wait/coalesce/execute/scatter walls,
+a handful of floats stamped from the timestamps the scheduler already
+fenced — and the full span tree is retained only when the request turns
+out to be *anomalous*:
+
+* ``deadline_miss`` — served, but after its deadline;
+* ``shed``          — deadline expired before dispatch (never served);
+* ``overflow``      — >= 1 of its queries overflowed the kNN candidate
+  window (Stage-1 certification);
+* ``zero_weight``   — >= 1 of its queries hit the f32 weight-sum
+  underflow sentinel;
+* ``slow``          — total latency at/above the ``top_percentile`` of
+  the recorder's OWN running histogram (armed only after ``min_window``
+  observations; ``top_percentile=None`` disables the class).
+
+Retention is deterministic under fake clocks: every decision is a pure
+function of the injected clock and the request's stamped timestamps (span
+ids derive from the request uid, never from ``uuid4``), so tests replay
+bit-identical rings.  The ring is bounded (FIFO eviction, oldest record
+first) with an explicit :attr:`dropped` counter — same honesty contract
+as ``Tracer.max_spans``.
+
+Overhead discipline mirrors the tracer's ``None``-check-when-off rule:
+call sites guard with ``if recorder is not None``; when on, a per-request
+observation costs five histogram records (a bisect each) plus a dict — no
+allocation-heavy span objects unless the request is anomalous.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+from .metrics import Histogram
+
+__all__ = ["FlightRecorder", "ANOMALY_CLASSES", "COARSE_STAGES"]
+
+# classification vocabulary (stable API: slo/attribution/tests key on it)
+ANOMALY_CLASSES = ("deadline_miss", "shed", "overflow", "zero_weight",
+                   "slow")
+# the additive coarse stages: queue_wait + execute == total by
+# construction (coalesce overlaps queue_wait; scatter lands after t_done)
+COARSE_STAGES = ("queue_wait", "coalesce", "execute", "scatter")
+
+
+class FlightRecorder:
+    """Per-request coarse accounting + anomaly-gated full-trace retention.
+
+    ``clock`` is the SERVING clock the request timestamps are stamped with
+    (the obs clock contract); ``wall`` anchors exported span timestamps
+    across processes (pass ``wall=None`` under fake clocks — the anchor is
+    captured ONCE at construction, exactly like ``Tracer``).  ``ring``
+    bounds the retained-trace ring and ``event_ring`` the SLO-event ring;
+    both evict FIFO and count evictions in :attr:`dropped` /
+    :attr:`events_dropped`.
+    """
+
+    def __init__(self, *, clock=time.monotonic, wall=time.time,
+                 host="0", ring: int = 256, event_ring: int = 256,
+                 top_percentile: float | None = 99.0,
+                 min_window: int = 64):
+        self.clock = clock
+        self._offset = (wall() - clock()) if wall is not None else 0.0
+        self.host = str(host)
+        self.ring = int(ring)
+        self.event_ring = int(event_ring)
+        self.top_percentile = top_percentile
+        self.min_window = int(min_window)
+        self.dropped = 0
+        self.events_dropped = 0
+        self.requests = 0
+        self.anomalies = {c: 0 for c in ANOMALY_CLASSES}
+        self._traces: deque = deque()
+        self._events: deque = deque()
+        # total + per-stage running histograms: the slow-class threshold
+        # and the attribution report's p50 baselines both read these
+        self._hists = {"total": Histogram()}
+        for s in COARSE_STAGES:
+            self._hists[s] = Histogram()
+        # observe_request runs on the worker thread while observe_shed
+        # arrives from client threads (shed-on-arrival) and state() from
+        # diagnostics pullers
+        self._lock = threading.Lock()
+
+    # -- recording (hot path) ------------------------------------------------
+
+    def observe_request(self, req, *, t0: float, t1: float, t2: float,
+                        last_submit: float) -> str | None:
+        """Fold one SERVED request in; returns the retained-record id when
+        the request was anomalous (``None`` otherwise — the common case).
+
+        Called from ``scheduler.scatter_batch`` after the execute fence,
+        with the batch timestamps it already stamped: ``t0`` dispatch,
+        ``t1`` results materialized on host, ``t2`` scatter done,
+        ``last_submit`` the batch's newest member arrival.
+        """
+        t_sub = req.t_submit
+        t_disp = req.t_dispatch if req.t_dispatch is not None else t0
+        t_done = req.t_done if req.t_done is not None else t1
+        if t_sub is None:
+            t_sub = t_disp
+        breakdown = {
+            "queue_wait": max(t_disp - t_sub, 0.0),
+            "coalesce": max(t0 - min(last_submit, t_disp), 0.0),
+            "execute": max(t1 - t0, 0.0),
+            "scatter": max(t2 - t1, 0.0),
+            "total": max(t_done - t_sub, 0.0),
+        }
+        classes = []
+        if req.deadline is not None and t_done > req.deadline:
+            classes.append("deadline_miss")
+        if req.overflow:
+            classes.append("overflow")
+        if getattr(req, "zero_weight", 0):
+            classes.append("zero_weight")
+        with self._lock:
+            total_hist = self._hists["total"]
+            # the slow decision reads the PRIOR window (this request's own
+            # observation folds in below): deterministic, never
+            # self-referential, armed only past min_window
+            if self.top_percentile is not None \
+                    and total_hist.count >= self.min_window \
+                    and breakdown["total"] \
+                    >= total_hist.percentile(self.top_percentile):
+                classes.append("slow")
+            self.requests += 1
+            total_hist.record(breakdown["total"])
+            for s in COARSE_STAGES:
+                self._hists[s].record(breakdown[s])
+            for c in classes:
+                self.anomalies[c] += 1
+            if not classes:
+                return None
+            return self._retain(req, classes, breakdown,
+                                t_sub=t_sub, t_disp=t_disp, t0=t0, t1=t1,
+                                t2=t2, last_submit=last_submit)
+
+    def observe_shed(self, req) -> str | None:
+        """Fold one SHED request in (terminal, never served).  Its
+        time-to-shed is NOT recorded into the total histogram — shed
+        requests terminate fast by construction, and folding them in would
+        improve the percentile the more traffic is dropped (the same
+        censoring rule ``serving.telemetry`` applies)."""
+        t_sub = req.t_submit
+        t_done = req.t_done if req.t_done is not None else self.clock()
+        if t_sub is None:
+            t_sub = t_done
+        breakdown = {"queue_wait": max(t_done - t_sub, 0.0),
+                     "total": max(t_done - t_sub, 0.0)}
+        classes = ["shed"]
+        if req.deadline is not None:     # a shed IS a missed deadline
+            classes.append("deadline_miss")
+        with self._lock:
+            self.requests += 1
+            for c in classes:
+                self.anomalies[c] += 1
+            return self._retain(req, classes, breakdown,
+                                t_sub=t_sub, t_disp=None, t0=None, t1=None,
+                                t2=None, last_submit=None)
+
+    def event(self, kind: str, severity: str = "warning",
+              data: dict | None = None) -> None:
+        """Append one structured event (the SLO monitor's emission hook)
+        to the bounded event ring."""
+        ev = {"t_wall": self.clock() + self._offset, "kind": kind,
+              "severity": severity, "host": self.host,
+              "data": data or {}}
+        with self._lock:
+            self._events.append(ev)
+            while len(self._events) > self.event_ring:
+                self._events.popleft()
+                self.events_dropped += 1
+
+    # -- retention -----------------------------------------------------------
+
+    def _retain(self, req, classes, breakdown, *, t_sub, t_disp, t0, t1,
+                t2, last_submit) -> str:
+        # lock already held.  Record id: join the request's sampled trace
+        # when it has one (the histogram-exemplar link), else derive a
+        # deterministic id from the uid
+        rid = getattr(req, "trace_id", None) or f"req-{req.uid}"
+        off = self._offset
+        spans = [{"name": "request", "trace_id": rid,
+                  "span_id": f"{rid}/r", "parent_id": None,
+                  "t0": t_sub + off, "dur": breakdown["total"],
+                  "host": self.host,
+                  "args": {"uid": req.uid, "anomalies": list(classes)}}]
+
+        def child(name, a, b, args=None):
+            spans.append({"name": name, "trace_id": rid,
+                          "span_id": f"{rid}/{name}",
+                          "parent_id": f"{rid}/r", "t0": a + off,
+                          "dur": max(b - a, 0.0), "host": self.host,
+                          "args": args})
+
+        if t_disp is not None:
+            child("queue_wait", t_sub, t_disp)
+            child("coalesce", min(last_submit, t_disp), t0)
+            child("execute", t0, t1,
+                  args={"overflow": int(req.overflow),
+                        "zero_weight": int(getattr(req, "zero_weight", 0))})
+            child("scatter", t1, t2)
+        rec = {"id": rid, "uid": req.uid, "host": self.host,
+               "anomalies": list(classes),
+               "breakdown": {k: float(v) for k, v in breakdown.items()},
+               "epoch": getattr(req, "epoch", None),
+               "spans": spans}
+        self._traces.append(rec)
+        while len(self._traces) > self.ring:
+            self._traces.popleft()           # FIFO: oldest record evicts
+            self.dropped += 1
+        return rid
+
+    # -- reporting -----------------------------------------------------------
+
+    def retained(self) -> list[dict]:
+        """The retained anomaly records, oldest first (non-draining — a
+        diagnostics pull must never mutate what the next pull sees)."""
+        with self._lock:
+            return list(self._traces)
+
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def snapshot(self) -> dict:
+        """Scalar counters (the ``report()['recorder']`` block)."""
+        with self._lock:
+            return {"requests": self.requests,
+                    "retained": len(self._traces),
+                    "dropped": self.dropped,
+                    "events": len(self._events),
+                    "events_dropped": self.events_dropped,
+                    "anomalies": dict(self.anomalies)}
+
+    def state(self) -> dict:
+        """Full JSON-serializable state for the debugz bundle: counters,
+        mergeable stage histograms, retained traces, and events —
+        :func:`repro.obs.attribution.tail_attribution` consumes a list of
+        these."""
+        with self._lock:
+            return {"host": self.host,
+                    "requests": self.requests,
+                    "dropped": self.dropped,
+                    "events_dropped": self.events_dropped,
+                    "anomalies": dict(self.anomalies),
+                    "hists": {k: h.state() for k, h in self._hists.items()},
+                    "traces": list(self._traces),
+                    "events": list(self._events)}

@@ -1,0 +1,193 @@
+"""SLO burn-rate monitor over the serving metrics ``Registry``.
+
+An SLO is a target rate of *bad events* over total events (e.g. "at most
+1% of requests miss their deadline").  The monitor keeps a bounded ring
+of cumulative-counter samples and, on evaluation, computes the observed
+bad-event rate over each configured trailing window; the **burn rate** is
+``observed_rate / target_rate`` — burn 1.0 spends error budget exactly
+as fast as the SLO allows, burn 14 on the short window is the classic
+page-now threshold.  Multi-window evaluation (default 60 s and 300 s)
+distinguishes a transient blip (short window hot, long window cold) from
+a sustained burn (both hot).
+
+The monitor is COLD-PATH ONLY: nothing on the request path touches it.
+``sample()`` is called from ``report()`` / ``debugz()`` pulls with the
+cumulative counters of the moment; ``evaluate()`` is pure arithmetic over
+the retained samples.  Rate SLOs need at least two samples spanning a
+window before they report — ``windows_evaluated`` says how many actually
+had data.  Gauge SLOs (queue depth, ring occupancy vs the compaction
+highwater) are instantaneous threshold checks on the latest sample.
+
+Breaches emit structured events into the
+:class:`~repro.obs.recorder.FlightRecorder` event ring (deduplicated per
+(slo, window) while the breach persists) and appear in the ``slo`` block
+of ``server.report()``.  Fleet-level epoch staleness cannot be seen from
+any single host; :func:`fleet_epoch_events` derives it in
+``AidwCluster.debugz()`` from the per-host bundle epochs.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+__all__ = ["SloMonitor", "fleet_epoch_events", "DEFAULT_TARGETS"]
+
+# rate targets are bad/total fractions; gauge targets are absolute
+# thresholds on the latest sampled value (None disables the check)
+DEFAULT_TARGETS = {
+    "deadline_miss_rate": 0.01,   # <=1% of requests may miss deadline
+    "shed_rate": 0.01,            # <=1% of requests may be shed
+    "queue_depth_frac": 0.9,      # admission queue nearly full
+    "ring_occupancy": None,       # set from compact_highwater by server
+}
+
+# which cumulative counters feed each rate SLO: (bad, total)
+_RATE_COUNTERS = {
+    "deadline_miss_rate": ("deadline_miss", "requests"),
+    "shed_rate": ("shed", "requests"),
+}
+
+
+class SloMonitor:
+    """Burn-rate windows over cumulative counters + gauge thresholds.
+
+    ``sample(counters, gauges)`` appends one cumulative snapshot;
+    ``evaluate()`` returns the JSON ``slo`` block and pushes breach
+    events into ``recorder`` (when given).  All timestamps come from the
+    injected ``clock`` so the window math replays exactly under fake
+    clocks.
+    """
+
+    def __init__(self, *, clock=time.monotonic,
+                 windows=(60.0, 300.0), targets=None,
+                 recorder=None, max_samples: int = 512):
+        self.clock = clock
+        self.windows = tuple(float(w) for w in windows)
+        self.targets = dict(DEFAULT_TARGETS)
+        if targets:
+            self.targets.update(targets)
+        self.recorder = recorder
+        self.max_samples = int(max_samples)
+        self._samples: deque = deque()
+        # (slo, window) -> currently breaching?  Edge-triggered event
+        # emission: one event when a burn crosses 1.0, not one per pull.
+        self._breaching: dict = {}
+
+    def sample(self, counters: dict, gauges: dict | None = None,
+               now: float | None = None) -> None:
+        """Record one cumulative snapshot.  ``counters`` must be
+        monotonically non-decreasing across calls (restarts reset the
+        window by clearing samples, not by going backwards)."""
+        t = self.clock() if now is None else now
+        self._samples.append((float(t), dict(counters),
+                              dict(gauges or {})))
+        while len(self._samples) > self.max_samples:
+            self._samples.popleft()
+
+    def evaluate(self, now: float | None = None) -> dict:
+        """The ``slo`` report block: per-SLO per-window burn rates, gauge
+        threshold checks, and the breach events newly emitted by this
+        evaluation."""
+        t = self.clock() if now is None else now
+        out = {"targets": {k: v for k, v in self.targets.items()
+                           if v is not None},
+               "windows_s": list(self.windows),
+               "rates": {}, "gauges": {}, "events": []}
+        if not self._samples:
+            return out
+        latest_t, latest_c, latest_g = self._samples[-1]
+
+        for slo, (bad_key, total_key) in _RATE_COUNTERS.items():
+            target = self.targets.get(slo)
+            if target is None:
+                continue
+            per_window = {}
+            for w in self.windows:
+                base = self._baseline(t - w)
+                if base is None:
+                    continue
+                base_t, base_c, _ = base
+                d_total = latest_c.get(total_key, 0) \
+                    - base_c.get(total_key, 0)
+                d_bad = latest_c.get(bad_key, 0) - base_c.get(bad_key, 0)
+                rate = (d_bad / d_total) if d_total > 0 else 0.0
+                burn = rate / target
+                per_window[str(int(w))] = {
+                    "rate": rate, "burn": burn,
+                    "bad": int(d_bad), "total": int(d_total),
+                    "span_s": latest_t - base_t,
+                }
+                self._edge(out, slo, str(int(w)), burn >= 1.0,
+                           {"rate": rate, "burn": burn,
+                            "target": target, "window_s": w})
+            if per_window:
+                per_window["windows_evaluated"] = len(
+                    [k for k in per_window if k != "windows_evaluated"])
+                out["rates"][slo] = per_window
+
+        for slo in ("queue_depth_frac", "ring_occupancy"):
+            target = self.targets.get(slo)
+            if target is None or slo not in latest_g:
+                continue
+            val = float(latest_g[slo])
+            out["gauges"][slo] = {"value": val, "target": float(target),
+                                  "breaching": val >= target}
+            self._edge(out, slo, "gauge", val >= target,
+                       {"value": val, "target": float(target)})
+        return out
+
+    # -- internals -----------------------------------------------------------
+
+    def _baseline(self, cutoff: float):
+        """The newest sample at/before ``cutoff`` (the window's left
+        edge), or the oldest retained sample if the ring already spans
+        past it; ``None`` when fewer than two samples exist (no window to
+        difference over)."""
+        if len(self._samples) < 2:
+            return None
+        base = None
+        for s in self._samples:
+            if s[0] <= cutoff:
+                base = s
+            else:
+                break
+        if base is None:
+            base = self._samples[0]
+        if base is self._samples[-1]:
+            return None
+        return base
+
+    def _edge(self, out: dict, slo: str, window: str, breaching: bool,
+              data: dict) -> None:
+        key = (slo, window)
+        was = self._breaching.get(key, False)
+        self._breaching[key] = breaching
+        if breaching and not was:
+            ev = {"kind": "slo_breach", "slo": slo, "window": window}
+            ev.update(data)
+            out["events"].append(ev)
+            if self.recorder is not None:
+                self.recorder.event("slo_breach", severity="critical",
+                                    data={"slo": slo, "window": window,
+                                          **data})
+
+
+def fleet_epoch_events(host_bundles: dict, *, max_lag: int = 1) -> list:
+    """Epoch-staleness check across a fleet's debugz bundles: no single
+    host can see it, so the merge point derives it.  Returns breach
+    events when ``max(epoch) - min(epoch)`` exceeds ``max_lag`` —
+    stragglers are pinning the epoch barrier for everyone routed to
+    them."""
+    epochs = {hid: b.get("epoch") for hid, b in host_bundles.items()
+              if b.get("epoch") is not None}
+    if len(epochs) < 2:
+        return []
+    lo, hi = min(epochs.values()), max(epochs.values())
+    if hi - lo <= max_lag:
+        return []
+    stale = sorted(h for h, e in epochs.items() if e < hi - max_lag)
+    return [{"kind": "slo_breach", "slo": "epoch_staleness",
+             "window": "fleet", "min_epoch": int(lo),
+             "max_epoch": int(hi), "lag": int(hi - lo),
+             "stale_hosts": stale}]

@@ -27,7 +27,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.obs import Tracer, new_span_id
+from repro.obs import (Registry, Tracer, fleet_epoch_events, new_span_id,
+                       tail_attribution)
 
 from .epochs import EpochCoordinator, EpochUpdate
 from .host import HostServer
@@ -48,6 +49,47 @@ def _parallel_hosts(items, fn, max_workers: int | None = None) -> list:
         return [fn(it) for it in items]
     with ThreadPoolExecutor(max_workers=max_workers or len(items)) as pool:
         return list(pool.map(fn, items))
+
+
+def _merge_debugz(host_bundles: dict, unreachable: list, *,
+                  epoch=None, routing=None) -> dict:
+    """Merge per-host debugz bundles into ONE fleet bundle.
+
+    Registries merge bin-exactly (fleet stage percentiles are computed
+    from the union of per-host bins, never averaged); recorder states
+    concatenate into :func:`repro.obs.tail_attribution`, so the
+    attribution block decomposes the FLEET p99−p50 gap; SLO events are
+    the union of per-host breach events plus the fleet-only epoch
+    staleness check (no single host can see another's epoch lag)."""
+    bundles = dict(host_bundles)
+    reg_states = [b["registry"] for b in bundles.values()
+                  if b.get("registry")]
+    fleet_reg = Registry.merge_states(reg_states) if reg_states \
+        else Registry()
+    rec_states = [b["recorder"] for b in bundles.values()
+                  if b.get("recorder")]
+    events = [e for b in bundles.values()
+              for e in (b.get("slo") or {}).get("events", [])]
+    events += fleet_epoch_events(bundles)
+    epochs = {h: b["epoch"] for h, b in bundles.items()
+              if b.get("epoch") is not None}
+    return {
+        "epoch": epoch,
+        "hosts": bundles,
+        "unreachable": list(unreachable),
+        "routing": routing,
+        "fleet": {
+            "queue_depth": sum(b.get("queue_depth", 0)
+                               for b in bundles.values()),
+            "epochs": {"min": min(epochs.values()) if epochs else None,
+                       "max": max(epochs.values()) if epochs else None,
+                       "by_host": epochs},
+            "stages": fleet_reg.snapshot(),
+        },
+        "slo": {"events": events},
+        "attribution": tail_attribution(rec_states,
+                                        registry_state=fleet_reg.state()),
+    }
 
 
 class AidwCluster:
@@ -272,6 +314,29 @@ class AidwCluster:
             except Exception:
                 pass
         return out
+
+    def debugz(self) -> dict:
+        """One merged fleet diagnostics bundle (JSON-serializable).
+
+        Pulls every live host's ``debugz`` bundle — a host whose pull
+        fails is listed under ``unreachable`` and contributes nothing
+        (diagnostics must never drain a host, same rule as
+        :meth:`collect_spans`; the bundle stays useful mid-incident when
+        a host is down, which is exactly when it is pulled) — and merges
+        them: bin-exact fleet registry, fleet-level tail-latency
+        attribution over the union of flight-recorder states, per-host
+        SLO events plus the fleet epoch-staleness check, and routing
+        counters."""
+        bundles, unreachable = {}, []
+        for hid in self.router.live_hosts():
+            host = self.router._hosts[hid]
+            try:
+                bundles[str(hid)] = host.debugz()
+            except Exception:
+                unreachable.append(str(hid))
+        return _merge_debugz(bundles, unreachable,
+                             epoch=self.coordinator.epoch,
+                             routing=self.router.report())
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Close every host.  A crash surfacing from a host that was already
@@ -780,6 +845,20 @@ class ShardedAidwCluster:
             except Exception:
                 pass
         return out
+
+    def debugz(self) -> dict:
+        """Merged shard-fleet diagnostics bundle (see
+        :meth:`AidwCluster.debugz`; shards have no router, so ``routing``
+        is ``None`` and unreachable shards are listed by index)."""
+        bundles, unreachable = {}, []
+        for host in self.hosts:
+            hid = str(getattr(host, "host_id", len(bundles)))
+            try:
+                bundles[hid] = host.debugz()
+            except Exception:
+                unreachable.append(hid)
+        return _merge_debugz(bundles, unreachable,
+                             epoch=self.coordinator.epoch)
 
     def close(self, timeout: float | None = 30.0) -> None:
         errs = []

@@ -169,6 +169,15 @@ class HostServer:
         """This host's finished span dicts ([] when tracing is off)."""
         return self.server.spans(drain=drain)
 
+    def debugz(self) -> dict:
+        """This host's diagnostics bundle (queue/epoch position, registry
+        state, SLO evaluation, flight-recorder traces) stamped with the
+        FLEET host identity — the server's internal host_id and the fleet's
+        can differ for process-backed hosts."""
+        bundle = self.server.debugz()
+        bundle["host_id"] = self.host_id
+        return bundle
+
     def close(self, timeout: float | None = 30.0) -> None:
         self.server.close(timeout=timeout)
 

@@ -300,6 +300,13 @@ class RemoteHost:
         trace collection hook; ``drain=True`` empties the remote buffer)."""
         return self._call("spans", timeout=60.0, drain=int(drain))["spans"]
 
+    def debugz(self) -> dict:
+        """Pull the remote host's diagnostics bundle (queue/epoch position,
+        registry state, SLO evaluation, flight-recorder traces).  The
+        bundle is JSON by construction, so it rides the control plane
+        as-is."""
+        return self._call("debugz", timeout=60.0)["bundle"]
+
     def reset_telemetry(self) -> None:
         self._call("reset", timeout=30.0)
 
@@ -495,6 +502,10 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                       snapshot=host.metrics_snapshot())
             elif op == "spans":
                 reply(mid, spans=host.spans(drain=bool(msg.get("drain", 1))))
+            elif op == "debugz":
+                # diagnostics: inline like report/metrics/spans — never
+                # behind the blocking set, so a wedged worker still answers
+                reply(mid, bundle=host.debugz())
             elif op == "reset":
                 host.reset_telemetry()
                 reply(mid, ok=1)

@@ -216,6 +216,8 @@ class InterpolationRequest:
     deadline: float | None = None   # absolute clock seconds; None = no SLO
     status: str = "pending"         # pending | queued | done | shed
     overflow: int = 0               # this request's overflowed queries
+    zero_weight: int = 0            # queries that hit the f32 weight-sum
+                                    # underflow sentinel (anomaly class)
     epoch: int | None = None        # dataset epoch served under (async only)
     t_submit: float | None = None   # admission timestamp (serving clock)
     t_dispatch: float | None = None

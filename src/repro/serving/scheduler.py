@@ -232,7 +232,7 @@ def launch_batch(session, group, *, clock=time.monotonic):
 
 def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
                   = None, telemetry=None, clock=time.monotonic,
-                  tracer=None):
+                  tracer=None, recorder=None):
     """Materialize a launched batch and scatter results to their requests.
 
     Slices values AND the per-query overflow mask back to each owning
@@ -250,17 +250,26 @@ def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
     queue_wait/coalesce/execute/scatter spans from the timestamps already
     stamped — tracing adds no work between them.  The ``np.asarray``
     materialization above IS the execute fence (host sync), so the
-    execute span honours the obs fencing contract.
+    execute span honours the obs fencing contract.  The always-on
+    ``recorder`` (:class:`repro.obs.recorder.FlightRecorder`) observes
+    every request from the SAME fence points — retention decisions need
+    the per-request zero-weight/overflow slices, which is why the mask
+    slicing below is per-request to begin with.
     """
     vals = np.asarray(res.values)            # host sync: results materialized
     mask = None if res.overflow_mask is None \
         else np.asarray(res.overflow_mask)
+    zmask = getattr(res, "zero_weight_mask", None)
+    if zmask is not None:
+        zmask = np.asarray(zmask)
     t1 = clock()
     off = 0
     for r in group:
         n = r.queries_xy.shape[0]
         r.values = vals[off:off + n]
         r.overflow = 0 if mask is None else int(mask[off:off + n].sum())
+        if zmask is not None:
+            r.zero_weight = int(zmask[off:off + n].sum())
         r.status = STATUS_DONE
         r.done = True
         r.t_done = t1
@@ -290,16 +299,21 @@ def scatter_batch(group, res, t0, *, estimator: ExecuteTimeModel | None
             tracer.record("execute", t0, t1, trace_id=tid, parent_id=parent,
                           args={"batch_queries": off})
             tracer.record("scatter", t1, t2, trace_id=tid, parent_id=parent)
+    if recorder is not None:
+        for r in group:
+            recorder.observe_request(r, t0=t0, t1=t1, t2=t2,
+                                     last_submit=last_submit)
     return res
 
 
 def dispatch_batch(session, group, *, estimator: ExecuteTimeModel | None
                    = None, telemetry=None, clock=time.monotonic,
-                   tracer=None):
+                   tracer=None, recorder=None):
     """Execute one coalesced group and scatter results back (launch +
     scatter, back to back — the default, non-pipelined drive mode).
     Returns the batch-level :class:`repro.core.pipeline.AidwResult`.
     """
     res, t0 = launch_batch(session, group, clock=clock)
     return scatter_batch(group, res, t0, estimator=estimator,
-                         telemetry=telemetry, clock=clock, tracer=tracer)
+                         telemetry=telemetry, clock=clock, tracer=tracer,
+                         recorder=recorder)

@@ -48,7 +48,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import scheduler as S
-from ..obs import Tracer
+from ..obs import FlightRecorder, SloMonitor, Tracer
 from .engine import AidwEngine, InterpolationRequest
 from .queue import AdmissionQueue, AdmissionQueueFull, validate_queries
 
@@ -86,6 +86,7 @@ class _UpdateOp:
     deletes: object = None
     epoch: int | None = None         # explicit cluster epoch; None = +1
     compact: bool = False            # fold hot rings instead of a delta
+    t_enqueue: float | None = None   # when the barrier entered the FIFO
     error: BaseException | None = None
     cancelled: bool = False          # timed-out caller withdrew the op
     skipped: bool = False            # worker honoured the withdrawal
@@ -142,7 +143,8 @@ class AsyncAidwServer:
                  pipeline_depth: int = 0, compact_highwater: float = 0.75,
                  ring_cap: int = 256, clock=time.monotonic, tracer=None,
                  trace_sample_rate: float | None = None, host_id="0",
-                 wall=time.time):
+                 wall=time.time, recorder=None, record_tail: bool = True,
+                 recorder_opts: dict | None = None):
         # tracing is opt-in: pass a Tracer, or a trace_sample_rate to build
         # one on the SERVING clock (span timestamps must share the clock
         # domain of t_submit/t_dispatch/t_done — the obs clock contract)
@@ -150,6 +152,16 @@ class AsyncAidwServer:
             tracer = Tracer(clock=clock, wall=wall,
                             sample_rate=trace_sample_rate, host=str(host_id))
         self.tracer = tracer
+        self.host_id = str(host_id)
+        # the flight recorder is ALWAYS-ON by default (tail-sampling —
+        # head-sampled tracers never see the stragglers); record_tail=False
+        # opts out for overhead A/B baselines, recorder_opts tunes
+        # ring/top_percentile/min_window without constructing one by hand
+        if recorder is None and record_tail:
+            recorder = FlightRecorder(clock=clock, wall=wall,
+                                      host=self.host_id,
+                                      **(recorder_opts or {}))
+        self.recorder = recorder
         # ONE construction path for the session/estimator/coalescer/
         # telemetry stack: the engine builds it, the server drives it from
         # a worker thread (and the sync facade stays usable via .engine)
@@ -164,6 +176,15 @@ class AsyncAidwServer:
         self.coalescer = self.engine.coalescer
         self.telemetry = self.engine.telemetry
         self.queue = AdmissionQueue(max_depth, clock=clock)
+        self._max_depth = int(max_depth)
+        # SLO monitor: cold-path only — sampled/evaluated on report()/
+        # debugz() pulls, never on the request path.  The ring-occupancy
+        # threshold is the compaction highwater: occupancy pinned at/above
+        # it means compactions are not keeping up with churn.
+        self.slo = SloMonitor(
+            clock=clock, recorder=self.recorder,
+            targets={"ring_occupancy": compact_highwater
+                     if compact_highwater > 0 else None})
         self.linger_s = float(linger_s)
         # pipeline_depth > 0: launch up to that many batches ahead of the
         # host-side scatter (jax async dispatch overlap — measured
@@ -258,6 +279,8 @@ class AsyncAidwServer:
         if not admitted:                      # expired on arrival: shed
             S.shed_request(req, self.clock())
             self.telemetry.record_shed(req)
+            if self.recorder is not None:
+                self.recorder.observe_shed(req)
             with self._cv:
                 self._inflight -= 1
                 self._cv.notify_all()
@@ -335,7 +358,7 @@ class AsyncAidwServer:
             trace_id = self.tracer.new_trace()
         op = _UpdateOp(points_xyz=points_xyz, inserts=inserts,
                        deletes=deletes, epoch=epoch, trace_id=trace_id,
-                       parent_span=parent_span)
+                       parent_span=parent_span, t_enqueue=self.clock())
         self.queue.put(op, timeout=timeout)
         return op
 
@@ -426,7 +449,8 @@ class AsyncAidwServer:
         if trace_id is None and self.tracer is not None:
             trace_id = self.tracer.new_trace()   # standalone sampling, as
         op = _UpdateOp(compact=True, epoch=epoch,  # in submit_update
-                       trace_id=trace_id, parent_span=parent_span)
+                       trace_id=trace_id, parent_span=parent_span,
+                       t_enqueue=self.clock())
         self.queue.put(op, timeout=timeout)
         return op
 
@@ -487,7 +511,50 @@ class AsyncAidwServer:
         rep["merge"] = self.telemetry.state()
         rep["stages"] = self.registry.snapshot()
         rep["registry"] = self.registry.state()
+        rep["slo"] = self._slo_eval()
+        if self.recorder is not None:
+            rep["recorder"] = self.recorder.snapshot()
         return rep
+
+    def _slo_eval(self) -> dict:
+        """Sample the current cumulative counters/gauges into the SLO
+        monitor and evaluate burn rates (cold path: report()/debugz()
+        pulls only)."""
+        c = self.telemetry.counters
+        anomalies = self.recorder.anomalies if self.recorder is not None \
+            else {}
+        counters = {"requests": c["completed"] + c["shed"],
+                    "deadline_miss": anomalies.get("deadline_miss", 0),
+                    "shed": c["shed"]}
+        gauges = {"queue_depth_frac":
+                  len(self.queue) / max(self._max_depth, 1)}
+        occ = self.session.stats.get("ring_occupancy")
+        if occ is not None:
+            gauges["ring_occupancy"] = float(occ)
+        self.slo.sample(counters, gauges)
+        return self.slo.evaluate()
+
+    def debugz(self) -> dict:
+        """One JSON-serializable diagnostics bundle for this server: queue
+        and epoch position, session/ring state, full registry state, the
+        SLO evaluation, and the flight recorder's retained anomaly traces.
+        Non-draining — a debugz pull never changes what the next pull (or
+        the running SLO windows) sees."""
+        bundle = {
+            "host_id": self.host_id,
+            "alive": self.alive,
+            "epoch": self.epoch,
+            "queue_depth": len(self.queue),
+            "admission": dict(self.queue.counters),
+            "session": {k: v for k, v in self.session.stats.items()
+                        if isinstance(v, (int, float))},
+            "stages": self.registry.snapshot(),
+            "registry": self.registry.state(),
+            "slo": self._slo_eval(),
+            "recorder": self.recorder.state()
+            if self.recorder is not None else None,
+        }
+        return bundle
 
     # -- observability endpoints (served over rpc by the cluster host) -------
 
@@ -568,11 +635,24 @@ class AsyncAidwServer:
                 self.engine.update_dataset(op.points_xyz, inserts=op.inserts,
                                            deletes=op.deletes)
             self.epoch = op.epoch if op.epoch is not None else self.epoch + 1
+            t_end = self.clock()
+            # the FIFO-barrier hold, first-class: from the moment the op
+            # entered the admission queue (every query admitted behind it
+            # is pinned) to applied — NOT just the device fold wall the
+            # session records as session/compact_s.  This is the number
+            # that shows up as queue_wait in the victims' breakdowns; the
+            # attribution report's stall block names it as the culprit.
+            self.registry.observe(
+                "session/compact_stall_s" if op.compact
+                else "serving/epoch_barrier_s",
+                t_end - (op.t_enqueue if op.t_enqueue is not None
+                         else t_apply),
+                exemplar=op.trace_id)
             if self.tracer is not None and op.trace_id is not None:
                 # the session fences its own plan/compact internals, so the
                 # wall here is honest device-inclusive apply time
                 self.tracer.record(
-                    "apply_epoch", t_apply, self.clock(),
+                    "apply_epoch", t_apply, t_end,
                     trace_id=op.trace_id, parent_id=op.parent_span,
                     args={"epoch": self.epoch, "compact": op.compact})
             if op.points_xyz is not None:
@@ -585,7 +665,9 @@ class AsyncAidwServer:
                 # fold BEHIND whatever queries are already admitted (best
                 # effort — a full queue skips; the next delta re-triggers)
                 try:
-                    self.queue.put(_UpdateOp(compact=True), block=False)
+                    self.queue.put(_UpdateOp(compact=True,
+                                             t_enqueue=self.clock()),
+                                   block=False)
                 except AdmissionQueueFull:
                     pass
         except BaseException as e:          # surface to the waiting client
@@ -630,6 +712,8 @@ class AsyncAidwServer:
         group, shed = self.coalescer.next_batch(pending)
         for r in shed:
             self.telemetry.record_shed(r)
+            if self.recorder is not None:
+                self.recorder.observe_shed(r)
         if group:
             # stamp the dataset epoch the batch executes under: updates only
             # apply between batches on this same thread, so one stamp covers
@@ -647,7 +731,7 @@ class AsyncAidwServer:
                 S.dispatch_batch(self.session, group,
                                  estimator=self.estimator,
                                  telemetry=self.telemetry, clock=self.clock,
-                                 tracer=self.tracer)
+                                 tracer=self.tracer, recorder=self.recorder)
         if group or shed:
             with self._cv:
                 self._inflight -= len(group) + len(shed)
@@ -657,7 +741,7 @@ class AsyncAidwServer:
         group, res, t0 = self._pipeline.popleft()
         S.scatter_batch(group, res, t0, estimator=self.estimator,
                         telemetry=self.telemetry, clock=self.clock,
-                        tracer=self.tracer)
+                        tracer=self.tracer, recorder=self.recorder)
         with self._cv:
             self._inflight -= len(group)
             self._cv.notify_all()

@@ -136,10 +136,17 @@ class Telemetry:
                 self.counters["completed"] += 1
                 self.counters["queries"] += r.queries_xy.shape[0]
                 self.counters["overflow_queries"] += r.overflow
+                # exemplar: the sampled trace id when the request has one,
+                # else the flight recorder's deterministic uid-derived id —
+                # a p99 bucket then names a pullable trace either way
+                uid = getattr(r, "uid", None)
+                ex = getattr(r, "trace_id", None) or (
+                    f"req-{uid}" if uid is not None else None)
                 if r.t_submit is not None and r.t_dispatch is not None:
-                    self.queue.record(r.t_dispatch - r.t_submit)
+                    self.queue.record(r.t_dispatch - r.t_submit,
+                                      exemplar=ex)
                 if r.t_submit is not None and r.t_done is not None:
-                    self.total.record(r.t_done - r.t_submit)
+                    self.total.record(r.t_done - r.t_submit, exemplar=ex)
                 t_done = r.t_done if r.t_done is not None else self.clock()
                 # throughput window opens at the first SUBMIT and closes at
                 # the last completion — completion-to-completion would be

@@ -911,3 +911,121 @@ def test_sharded_cluster_churn_with_compaction_matches_replay():
     # the grid_ring layout adds its own documented 1-ulp Stage-2 caveat
     err = np.abs(np.asarray(want.values) - got.values).max()
     assert err < 5e-4, err
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 9: fleet-wide debugz bundles
+# ---------------------------------------------------------------------------
+
+
+class _AnomalyReq:
+    """Stamped-timestamp stub for injecting deterministic anomalies into a
+    host's live flight recorder (the debugz merge is what's under test,
+    not the serving path that normally feeds it)."""
+
+    def __init__(self, uid, *, deadline=None, t_submit=0.0,
+                 t_dispatch=None, t_done=None):
+        self.uid = uid
+        self.deadline = deadline
+        self.overflow = 0
+        self.zero_weight = 0
+        self.t_submit = t_submit
+        self.t_dispatch = t_dispatch
+        self.t_done = t_done
+        self.trace_id = None
+        self.epoch = None
+
+
+def _inject_tail(rec, base_uid):
+    """50 in-SLO 10ms requests + one 1s deadline-misser whose excess is
+    all queue_wait — a deterministic p99-p50 gap with a retained tail."""
+    for i in range(50):
+        r = _AnomalyReq(base_uid + i, t_submit=0.0, t_dispatch=0.001,
+                        t_done=0.01)
+        rec.observe_request(r, t0=0.001, t1=0.01, t2=0.01, last_submit=0.0)
+    slow = _AnomalyReq(base_uid + 50, deadline=0.5, t_submit=0.0,
+                       t_dispatch=0.99, t_done=1.0)
+    rec.observe_request(slow, t0=0.99, t1=1.0, t2=1.0, last_submit=0.0)
+
+
+def test_cluster_debugz_merged_bundle_schema_and_attribution(spatial_data):
+    """ISSUE 9 acceptance: ``AidwCluster.debugz()`` on a 2-host fleet
+    returns ONE merged bundle — per-host sections, bin-exact fleet stage
+    registry, fleet SLO events, and a tail-latency attribution whose
+    per-stage contributions sum within 15% of the p99-p50 gap."""
+    import json
+
+    pts, qs = spatial_data
+    qd = spatial_queries(1024, seed=1)
+    with AidwCluster(pts, n_hosts=2, max_batch=256, query_domain=qd) as cl:
+        reqs = [cl.submit(qs[32 * i:32 * (i + 1)]) for i in range(4)]
+        cl.update_dataset(inserts=spatial_points(16, seed=9),
+                          deletes=np.arange(16), timeout=300)
+        cl.flush(timeout=300)
+        assert all(r.status == "done" for r in reqs)
+        # deterministic anomaly injection into the LIVE recorders: each
+        # host retains one queue_wait-dominated deadline-misser
+        for k, host in enumerate(cl.hosts):
+            _inject_tail(host.server.recorder, base_uid=1000 * (k + 1))
+        bundle = cl.debugz()
+
+    assert set(bundle) == {"epoch", "hosts", "unreachable", "routing",
+                           "fleet", "slo", "attribution"}
+    assert sorted(bundle["hosts"]) == ["0", "1"] \
+        and bundle["unreachable"] == []
+    assert bundle["epoch"] == 1
+    for hid, hb in bundle["hosts"].items():
+        assert hb["host_id"] == int(hid) and hb["alive"]
+        assert hb["recorder"]["requests"] >= 51
+        assert {"targets", "rates", "gauges", "events"} <= set(hb["slo"])
+    fleet = bundle["fleet"]
+    assert fleet["epochs"] == {"min": 1, "max": 1,
+                               "by_host": {"0": 1, "1": 1}}
+    # bin-exact fleet merge: both hosts' serving walls in one histogram
+    served = sum(b["recorder"]["anomalies"]["deadline_miss"]
+                 for b in bundle["hosts"].values())
+    assert served == 2
+    assert "serving/queue_wait_s" in fleet["stages"]["histograms"]
+
+    # THE acceptance identity, on the merged fleet attribution
+    attr = bundle["attribution"]
+    # 102 injected + the real served traffic also folded by the recorder
+    assert attr["n_total"] >= 102 and attr["tail_n"] >= 2
+    gap = attr["gap_s"]
+    assert gap > 0
+    assert abs(attr["attributed_s"] - gap) <= 0.15 * gap
+    assert attr["stages"]["queue_wait"]["share"] > 0.9
+    json.dumps(bundle)                       # one JSON artifact, as shipped
+
+
+def test_cluster_debugz_partial_bundle_when_host_unreachable(spatial_data):
+    """Diagnostics must never drain a host: a host whose debugz pull
+    FAILS lands in ``unreachable`` — it is not drained, the other host's
+    bundle and the fleet merge still come back whole (the bundle stays
+    useful mid-incident, which is exactly when it is pulled)."""
+    import json
+
+    pts, qs = spatial_data
+    qd = spatial_queries(1024, seed=1)
+    with AidwCluster(pts, n_hosts=2, max_batch=256, query_domain=qd) as cl:
+        reqs = [cl.submit(qs[32 * i:32 * (i + 1)]) for i in range(4)]
+        cl.flush(timeout=300)
+
+        def boom(*a, **k):
+            raise RuntimeError("injected debugz fault")
+
+        cl.hosts[1].server.debugz = boom
+        bundle = cl.debugz()
+        # the pull failure did NOT drain the host: it still serves
+        assert cl.router.live_hosts() == [0, 1]
+        after = cl.submit(qs[:16])
+        cl.flush(timeout=300)
+        assert after.status == "done"
+
+    assert sorted(bundle["hosts"]) == ["0"]
+    assert bundle["unreachable"] == ["1"]
+    assert bundle["hosts"]["0"]["alive"]
+    assert bundle["fleet"]["epochs"]["by_host"] == {"0": 0}
+    assert bundle["attribution"]["n_total"] >= 0
+    assert all(r.status == "done" for r in reqs)
+    json.dumps(bundle)

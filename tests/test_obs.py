@@ -1,5 +1,6 @@
-"""Observability spine (ISSUE 8): tracer, metrics registry, trace
-propagation, and the report()/state() schema contracts.
+"""Observability spine (ISSUES 8+9): tracer, metrics registry, trace
+propagation, flight recorder, SLO monitor, tail attribution, and the
+report()/state() schema contracts.
 
 Acceptance criteria covered here:
 (a) span recording is retroactive, sampled once at the root, and a no-op
@@ -7,17 +8,25 @@ Acceptance criteria covered here:
 (b) Chrome ``trace_event`` export is structurally valid and multi-host
     span collections land in per-host lanes;
 (c) the registry merges bin-exactly across hosts and exports Prometheus
-    text under the documented ``aidw_<slash_name>`` scheme;
+    text under the documented ``aidw_<slash_name>`` scheme — with an
+    EXACT-exposition regression (``# HELP``/``# TYPE`` per family);
 (d) fleet QPS is computed over the UNION wall window (fake-clock exact),
     with the legacy summed rate exposed as ``queries_per_s_summed``;
 (e) ``AsyncAidwServer.report()`` keeps its schema (the keys downstream
-    dashboards and ``merge_reports`` read), now including ``stages`` and
-    ``registry`` blocks;
+    dashboards and ``merge_reports`` read), now including ``stages``,
+    ``registry``, ``slo`` and ``recorder`` blocks;
 (f) session timing aliases: ``stats['last_plan_s']`` and
     ``res.timings['query']`` mirror the newest registry observations, and
-    ``profile=True`` stage walls are additive.
-The 2-host kill-mid-batch trace-propagation test lives in
-tests/test_cluster.py next to the other fleet-death coverage.
+    ``profile=True`` stage walls are additive;
+(g) PR 9: flight-recorder retention is DETERMINISTIC under fake clocks
+    (anomaly classes, FIFO ring eviction, explicit dropped counters, the
+    prior-window slow rule), SLO burn rates match hand-computed
+    arithmetic with edge-triggered breach events, the tail attribution
+    decomposes p99-p50 into per-stage contributions that SUM to the gap,
+    and histogram exemplars merge bin-exactly.
+The 2-host kill-mid-batch trace-propagation test and the fleet debugz
+bundle tests live in tests/test_cluster.py next to the other
+fleet-death coverage.
 """
 
 from __future__ import annotations
@@ -28,7 +37,10 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import spatial_points, spatial_queries
-from repro.obs import Registry, Tracer, chrome_trace, new_span_id
+from repro.obs import (FlightRecorder, Registry, SloMonitor, Tracer,
+                       chrome_trace, fleet_epoch_events, new_span_id,
+                       tail_attribution)
+from repro.obs.metrics import Histogram
 from repro.serving import AsyncAidwServer, Telemetry
 from repro.serving.cluster import merge_reports
 
@@ -265,8 +277,15 @@ def test_server_report_schema_regression(traced_server_report):
     for key in ("submitted", "completed", "shed", "rejected_full",
                 "batches", "queries", "overflow_queries", "dataset_updates",
                 "queries_per_s", "latency", "epoch", "admission",
-                "queue_depth", "session", "merge", "stages", "registry"):
+                "queue_depth", "session", "merge", "stages", "registry",
+                "slo", "recorder"):
         assert key in rep, f"report() lost key {key!r}"
+    # the PR 9 blocks: SLO evaluation + flight-recorder counters
+    assert {"targets", "windows_s", "rates", "gauges", "events"} \
+        <= set(rep["slo"])
+    assert {"requests", "retained", "dropped", "events",
+            "events_dropped", "anomalies"} <= set(rep["recorder"])
+    assert rep["recorder"]["requests"] == len(reqs)
     for axis in ("queue", "execute", "total", "shed"):
         snap = rep["latency"][axis]
         assert {"count", "mean_s", "p50_s", "p95_s", "p99_s",
@@ -280,9 +299,12 @@ def test_server_report_schema_regression(traced_server_report):
     hists = rep["stages"]["histograms"]
     for name in ("serving/queue_wait_s", "serving/execute_s",
                  "serving/total_s", "serving/coalesce_s",
-                 "serving/scatter_s", "session/plan_s"):
+                 "serving/scatter_s", "session/plan_s",
+                 "serving/epoch_barrier_s"):
         assert name in hists, f"stages block lost {name!r}"
     assert hists["serving/queue_wait_s"]["count"] == len(reqs)
+    # the update_dataset barrier in the fixture observed its FIFO hold
+    assert hists["serving/epoch_barrier_s"]["count"] == 1
     json.dumps(rep)                             # stays JSON-serializable
 
 
@@ -377,3 +399,428 @@ def test_session_spans_nest_plan_and_profiled_query():
         sp = next(s for s in spans if s["name"] == st)
         assert sp["parent_id"] == query["span_id"]
         assert sp["trace_id"] == query["trace_id"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: deterministic tail-sampling retention (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+class _RecReq:
+    """Minimal request stub for the recorder: stamped timestamps only."""
+
+    def __init__(self, uid, *, deadline=None, overflow=0, zero_weight=0,
+                 t_submit=0.0, t_dispatch=None, t_done=None,
+                 trace_id=None, epoch=None):
+        self.uid = uid
+        self.deadline = deadline
+        self.overflow = overflow
+        self.zero_weight = zero_weight
+        self.t_submit = t_submit
+        self.t_dispatch = t_dispatch
+        self.t_done = t_done
+        self.trace_id = trace_id
+        self.epoch = epoch
+
+
+def _observe_fast(rec, uid, *, total=0.01, **kw):
+    """One in-SLO request: queue_wait 10% of total, execute the rest."""
+    qw = 0.1 * total
+    req = _RecReq(uid, t_submit=0.0, t_dispatch=qw, t_done=total, **kw)
+    return rec.observe_request(req, t0=qw, t1=total, t2=total,
+                               last_submit=0.0)
+
+
+def test_recorder_in_slo_requests_leave_no_trace():
+    rec = FlightRecorder(clock=FakeClock(), wall=None, host="h",
+                         top_percentile=None)
+    assert _observe_fast(rec, 1) is None
+    assert rec.retained() == []
+    snap = rec.snapshot()
+    assert snap["requests"] == 1 and snap["retained"] == 0
+    assert all(v == 0 for v in snap["anomalies"].values())
+    # the coarse breakdown still folded into the running histograms
+    assert rec.state()["hists"]["total"]["count"] == 1
+
+
+def test_recorder_classifies_and_retains_each_anomaly_class():
+    rec = FlightRecorder(clock=FakeClock(), wall=None, host="h",
+                         top_percentile=None)
+    # served past its deadline, plus overflow + zero-weight queries
+    req = _RecReq(7, deadline=0.02, overflow=2, zero_weight=1,
+                  t_submit=0.0, t_dispatch=0.01, t_done=0.04)
+    rid = rec.observe_request(req, t0=0.01, t1=0.04, t2=0.05,
+                              last_submit=0.0)
+    assert rid == "req-7"
+    (rec_record,) = rec.retained()
+    assert rec_record["anomalies"] == ["deadline_miss", "overflow",
+                                       "zero_weight"]
+    bd = rec_record["breakdown"]
+    assert bd["queue_wait"] == pytest.approx(0.01)
+    assert bd["execute"] == pytest.approx(0.03)
+    assert bd["scatter"] == pytest.approx(0.01)
+    assert bd["total"] == pytest.approx(0.04)
+    # additive identity: queue_wait + execute == total (scatter lands
+    # after t_done; coalesce overlaps queue_wait)
+    assert bd["queue_wait"] + bd["execute"] == pytest.approx(bd["total"])
+    names = sorted(s["name"] for s in rec_record["spans"])
+    assert names == ["coalesce", "execute", "queue_wait", "request",
+                     "scatter"]
+    # deterministic span ids: derived from the uid, never uuid4
+    assert {s["span_id"] for s in rec_record["spans"]} \
+        == {"req-7/r", "req-7/queue_wait", "req-7/coalesce",
+            "req-7/execute", "req-7/scatter"}
+    assert rec.snapshot()["anomalies"]["deadline_miss"] == 1
+
+
+def test_recorder_retention_is_bitwise_deterministic():
+    def run():
+        rec = FlightRecorder(clock=FakeClock(), wall=None, host="h",
+                             top_percentile=None)
+        _observe_fast(rec, 1)
+        req = _RecReq(2, deadline=0.01, t_submit=0.0, t_dispatch=0.005,
+                      t_done=0.03)
+        rec.observe_request(req, t0=0.005, t1=0.02, t2=0.03,
+                            last_submit=0.0)
+        rec.observe_shed(_RecReq(3, deadline=0.001, t_submit=0.0,
+                                 t_done=0.002))
+        return rec.state()
+
+    assert run() == run()                   # replays bit-identically
+
+
+def test_recorder_shed_retained_but_censored_from_histograms():
+    rec = FlightRecorder(clock=FakeClock(5.0), wall=None, host="h",
+                         top_percentile=None)
+    rec.observe_shed(_RecReq(4, deadline=0.01, t_submit=0.0, t_done=0.02))
+    (r,) = rec.retained()
+    assert r["anomalies"] == ["shed", "deadline_miss"]
+    assert r["breakdown"]["queue_wait"] == pytest.approx(0.02)
+    # censoring: folding time-to-shed into the total histogram would
+    # IMPROVE percentiles as traffic is dropped
+    assert rec.state()["hists"]["total"]["count"] == 0
+    assert rec.snapshot()["anomalies"]["shed"] == 1
+
+
+def test_recorder_ring_evicts_fifo_and_counts_drops():
+    rec = FlightRecorder(clock=FakeClock(), wall=None, host="h",
+                         ring=2, top_percentile=None)
+    for uid in (1, 2, 3):
+        rec.observe_shed(_RecReq(uid, deadline=0.01, t_submit=0.0,
+                                 t_done=0.02))
+    assert [r["id"] for r in rec.retained()] == ["req-2", "req-3"]
+    assert rec.dropped == 1                  # explicit, not silent
+    assert rec.snapshot()["dropped"] == 1
+
+
+def test_recorder_slow_class_reads_the_prior_window():
+    rec = FlightRecorder(clock=FakeClock(), wall=None, host="h",
+                         top_percentile=50.0, min_window=2)
+    # below min_window the class is unarmed, however slow the request
+    assert _observe_fast(rec, 1, total=5.0) is None
+    assert _observe_fast(rec, 2, total=0.01) is None
+    # armed: 5ms is below the prior-window p50 (~10ms) -> not slow
+    assert _observe_fast(rec, 3, total=0.005) is None
+    # 10x the prior-window p50 -> slow, retained
+    rid = _observe_fast(rec, 4, total=6.0)
+    assert rid == "req-4"
+    assert rec.snapshot()["anomalies"]["slow"] == 1
+    # top_percentile=None disables the class entirely
+    off = FlightRecorder(clock=FakeClock(), wall=None, min_window=0,
+                         top_percentile=None)
+    for uid in range(8):
+        assert _observe_fast(off, uid, total=float(uid + 1)) is None
+
+
+def test_recorder_event_ring_bounded_with_drop_counter():
+    rec = FlightRecorder(clock=FakeClock(1.0), wall=None, host="h",
+                         event_ring=2)
+    for i in range(3):
+        rec.event(f"e{i}", severity="warning", data={"i": i})
+    evs = rec.events()
+    assert [e["kind"] for e in evs] == ["e1", "e2"]
+    assert rec.events_dropped == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor: burn-rate arithmetic + edge-triggered breaches (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def _slo(clk, rec=None, windows=(10.0,), miss_target=0.05):
+    return SloMonitor(clock=clk, windows=windows, recorder=rec,
+                      targets={"deadline_miss_rate": miss_target,
+                               "shed_rate": None,
+                               "queue_depth_frac": None,
+                               "ring_occupancy": None})
+
+
+def test_slo_burn_rate_matches_hand_computed_rates():
+    clk = FakeClock(0.0)
+    mon = _slo(clk)
+    mon.sample({"requests": 0, "deadline_miss": 0})
+    clk.t = 10.0
+    mon.sample({"requests": 200, "deadline_miss": 20})
+    ev = mon.evaluate()
+    w = ev["rates"]["deadline_miss_rate"]["10"]
+    # hand-computed: 20 bad / 200 total = 10% observed, target 5% -> burn 2
+    assert w["rate"] == pytest.approx(0.1)
+    assert w["burn"] == pytest.approx(2.0)
+    assert (w["bad"], w["total"]) == (20, 200)
+    assert w["span_s"] == pytest.approx(10.0)
+    assert ev["rates"]["deadline_miss_rate"]["windows_evaluated"] == 1
+    (breach,) = ev["events"]
+    assert breach["slo"] == "deadline_miss_rate" and breach["burn"] == 2.0
+
+
+def test_slo_breach_events_are_edge_triggered():
+    clk = FakeClock(0.0)
+    rec = FlightRecorder(clock=clk, wall=None)
+    mon = _slo(clk, rec)
+    mon.sample({"requests": 0, "deadline_miss": 0})
+    clk.t = 10.0
+    mon.sample({"requests": 100, "deadline_miss": 50})
+    assert len(mon.evaluate()["events"]) == 1     # crossing emits once
+    assert mon.evaluate()["events"] == []         # sustained: no re-emit
+    (ev,) = rec.events()
+    assert ev["kind"] == "slo_breach" and ev["severity"] == "critical"
+    # recovery clears the latch; a NEW burn re-emits
+    clk.t = 20.0
+    mon.sample({"requests": 300, "deadline_miss": 50})
+    assert mon.evaluate()["events"] == []         # window rate back to 0
+    clk.t = 30.0
+    mon.sample({"requests": 500, "deadline_miss": 150})
+    assert len(mon.evaluate()["events"]) == 1
+
+
+def test_slo_needs_two_samples_spanning_a_window():
+    clk = FakeClock(0.0)
+    mon = _slo(clk)
+    assert mon.evaluate()["rates"] == {}          # no samples at all
+    mon.sample({"requests": 100, "deadline_miss": 100})
+    assert mon.evaluate()["rates"] == {}          # one sample: no window
+
+
+def test_slo_gauge_thresholds_and_events():
+    clk = FakeClock(0.0)
+    mon = SloMonitor(clock=clk, windows=(10.0,),
+                     targets={"deadline_miss_rate": None, "shed_rate": None,
+                              "queue_depth_frac": 0.9,
+                              "ring_occupancy": 0.8})
+    mon.sample({}, gauges={"queue_depth_frac": 0.95, "ring_occupancy": 0.5})
+    ev = mon.evaluate()
+    assert ev["gauges"]["queue_depth_frac"]["breaching"] is True
+    assert ev["gauges"]["ring_occupancy"]["breaching"] is False
+    assert [e["slo"] for e in ev["events"]] == ["queue_depth_frac"]
+
+
+def test_fleet_epoch_staleness_derived_at_the_merge_point():
+    assert fleet_epoch_events({"a": {"epoch": 3}, "b": {"epoch": 4}}) == []
+    (ev,) = fleet_epoch_events({"a": {"epoch": 3}, "b": {"epoch": 5}})
+    assert ev["slo"] == "epoch_staleness" and ev["window"] == "fleet"
+    assert (ev["min_epoch"], ev["max_epoch"], ev["lag"]) == (3, 5, 2)
+    assert ev["stale_hosts"] == ["a"]
+    assert fleet_epoch_events({"a": {"epoch": 1}}) == []   # 1 host: no view
+
+
+# ---------------------------------------------------------------------------
+# tail-latency attribution: the decomposition identity (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def _fed_recorder(host="0", n_fast=100, n_slow=2):
+    """A recorder fed ``n_fast`` 10ms in-SLO requests and ``n_slow``
+    1s deadline-missers whose excess is ALL queue_wait."""
+    rec = FlightRecorder(clock=FakeClock(), wall=None, host=host,
+                         top_percentile=None)
+    for uid in range(n_fast):
+        _observe_fast(rec, uid, total=0.01)
+    for uid in range(n_fast, n_fast + n_slow):
+        req = _RecReq(uid, deadline=0.5, t_submit=0.0, t_dispatch=0.99,
+                      t_done=1.0)
+        rec.observe_request(req, t0=0.99, t1=1.0, t2=1.0, last_submit=0.0)
+    return rec
+
+
+def test_attribution_identity_decomposes_the_gap():
+    attr = tail_attribution([_fed_recorder().state()])
+    assert attr["n_total"] == 102 and attr["tail_n"] == 2
+    assert not attr["tail_is_fallback"]
+    gap = attr["gap_s"]
+    assert gap > 0
+    # THE acceptance identity: per-stage contributions sum to the gap
+    # (well within the 15% bar — exact by construction with excess > 0)
+    assert attr["attributed_s"] == pytest.approx(gap)
+    assert attr["unattributed_s"] == pytest.approx(0.0)
+    assert attr["share_basis"] == "excess"
+    st = attr["stages"]
+    # the tail's excess is queue_wait by construction
+    assert st["queue_wait"]["share"] > 0.95
+    assert st["queue_wait"]["attributed_s"] == pytest.approx(
+        gap * st["queue_wait"]["share"])
+    assert sum(s["share"] for n, s in st.items() if s["additive"]) \
+        == pytest.approx(1.0)
+    # overlay stages are reported but never attributed (they overlap)
+    assert st["coalesce"]["attributed_s"] is None
+    assert st["scatter"]["share"] is None
+
+
+def test_attribution_fleet_merge_and_stall_block():
+    reg = Registry()
+    reg.observe("session/compact_stall_s", 0.25, exemplar="upd-1")
+    reg.observe("serving/epoch_barrier_s", 0.1)
+    attr = tail_attribution(
+        [_fed_recorder("0").state(), _fed_recorder("1").state()],
+        registry_state=reg.state())
+    # two hosts merged bin-exactly: counts double, identity still exact
+    assert attr["n_total"] == 204 and attr["tail_n"] == 4
+    assert attr["attributed_s"] == pytest.approx(attr["gap_s"])
+    # the stall block reads Registry.state()'s "hists" key
+    stalls = attr["stalls"]
+    assert stalls["session/compact_stall_s"]["count"] == 1
+    assert stalls["session/compact_stall_s"]["max_s"] \
+        == pytest.approx(0.25)
+    assert stalls["serving/epoch_barrier_s"]["p99_s"] > 0
+
+
+def test_attribution_tail_mean_basis_when_no_stage_exceeds_baseline():
+    # bimodal population with NO retained record above the baselines:
+    # excess-based shares would attribute nothing; the report degrades to
+    # tail-mean mass so a positive gap still decomposes
+    rec = FlightRecorder(clock=FakeClock(), wall=None,
+                         top_percentile=None)
+    for uid in range(60):
+        _observe_fast(rec, uid, total=0.01)
+    for uid in range(60, 100):
+        _observe_fast(rec, uid, total=1.0)     # slow but in-SLO: not kept
+    req = _RecReq(100, overflow=1, t_submit=0.0, t_dispatch=1e-4,
+                  t_done=1.0)
+    rec.observe_request(req, t0=1e-4, t1=3e-4, t2=3e-4, last_submit=0.0)
+    attr = tail_attribution([rec.state()])
+    assert attr["gap_s"] > 0 and attr["tail_n"] == 1
+    assert attr["share_basis"] == "tail_mean"
+    assert attr["attributed_s"] == pytest.approx(attr["gap_s"])
+
+
+def test_attribution_empty_states_are_harmless():
+    attr = tail_attribution([])
+    assert attr["n_total"] == 0 and attr["gap_s"] == 0.0
+    assert attr["attributed_s"] == 0.0 and attr["stalls"] == {}
+
+
+# ---------------------------------------------------------------------------
+# histogram exemplars: bucket -> trace links (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_exemplars_latest_wins_and_merge_is_bin_exact():
+    a, b = Histogram(), Histogram()
+    a.record(0.004, exemplar="t-old")
+    a.record(0.0042, exemplar="t-new")      # same log bin: latest wins
+    a.record(0.5, exemplar="t-big")
+    b.record(0.0041, exemplar="t-peer")     # same bin as t-new, other host
+    b.record(20.0, exemplar="t-huge")
+    st = a.state()
+    assert set(st["exemplars"].values()) == {"t-new", "t-big"}
+    merged = Histogram.from_states([st, b.state()])
+    ex = merged.state()["exemplars"]
+    # bin-exact: the shared bin took the LAST-merged host's exemplar, the
+    # disjoint bins kept their own
+    assert set(ex.values()) == {"t-peer", "t-big", "t-huge"}
+    # snapshot keys by upper bin edge (human-facing latency bound)
+    snap_ex = merged.snapshot()["exemplars"]
+    assert all(float(k) > 0 for k in snap_ex)
+    # a pre-exemplar peer state (no "exemplars" key) still merges
+    legacy = Histogram()
+    legacy.record(1.0)
+    merged.merge_state(legacy.state())
+    assert merged.count == 6
+
+
+def test_exemplars_absent_when_unused_and_not_in_prometheus_text():
+    h = Histogram()
+    h.record(0.01)
+    assert "exemplars" not in h.state()
+    assert "exemplars" not in h.snapshot()
+    reg = Registry()
+    reg.observe("serving/total_s", 0.01, exemplar="trace-xyz")
+    text = reg.prometheus_text()
+    # the 0.0.4 text format has no exemplar syntax: exposition unchanged
+    assert "trace-xyz" not in text and "exemplar" not in text
+
+
+def test_telemetry_exemplars_link_buckets_to_request_traces(
+        traced_server_report):
+    rep, _, reqs, _ = traced_server_report
+    ex = rep["merge"]["hists"]["total"].get("exemplars", {})
+    assert ex, "total-latency histogram lost its exemplars"
+    assert set(ex.values()) <= {r.trace_id for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: exact-format regression (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_exposition_exact_format():
+    reg = Registry()
+    reg.inc("serving/batches", 3)
+    reg.set("ingest/ring_occupancy", 0.5)
+    reg.observe("serving/queue_wait_s", 0.004)
+    assert reg.prometheus_text() == (
+        "# HELP aidw_serving_batches_total cumulative count of "
+        "serving/batches\n"
+        "# TYPE aidw_serving_batches_total counter\n"
+        "aidw_serving_batches_total 3\n"
+        "# HELP aidw_ingest_ring_occupancy gauge ingest/ring_occupancy\n"
+        "# TYPE aidw_ingest_ring_occupancy gauge\n"
+        "aidw_ingest_ring_occupancy 0.5\n"
+        "# HELP aidw_serving_queue_wait_s summary of serving/queue_wait_s "
+        "in seconds\n"
+        "# TYPE aidw_serving_queue_wait_s summary\n"
+        'aidw_serving_queue_wait_s{quantile="0.5"} 0.004\n'
+        'aidw_serving_queue_wait_s{quantile="0.95"} 0.004\n'
+        'aidw_serving_queue_wait_s{quantile="0.99"} 0.004\n'
+        "aidw_serving_queue_wait_s_sum 0.004\n"
+        "aidw_serving_queue_wait_s_count 1\n"
+        "aidw_serving_queue_wait_s_max 0.004\n")
+
+
+def test_every_prometheus_family_has_help_and_type(traced_server_report):
+    _, _, _, text = traced_server_report
+    lines = text.splitlines()
+    families = {ln.split()[0].split("{")[0]
+                for ln in lines if ln and not ln.startswith("#")}
+    helped = {ln.split()[2] for ln in lines if ln.startswith("# HELP")}
+    typed = {ln.split()[2] for ln in lines if ln.startswith("# TYPE")}
+    for fam in families:
+        base = fam
+        for suffix in ("_sum", "_count", "_max"):
+            if base.endswith(suffix) and base.removesuffix(suffix) in typed:
+                base = base.removesuffix(suffix)
+                break
+        assert base in typed, f"{fam} has no # TYPE"
+        assert base in helped, f"{fam} has no # HELP"
+
+
+# ---------------------------------------------------------------------------
+# compaction-stall histogram: the FIFO-barrier hold (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_compact_stall_histogram_covers_the_fifo_hold():
+    pts = spatial_points(2048, seed=0)
+    with AsyncAidwServer(pts, max_batch=512,
+                         query_domain=spatial_queries(256, seed=1)) as srv:
+        srv.submit(spatial_queries(32, seed=2))
+        srv.compact(timeout=300)
+        srv.flush(timeout=300)
+        hists = srv.report()["stages"]["histograms"]
+        stall = hists["session/compact_stall_s"]
+        assert stall["count"] == 1
+        # the stall covers the WHOLE hold (enqueue -> applied), so it can
+        # never undershoot the device fold wall the session records
+        if "session/compact_s" in hists and hists["session/compact_s"][
+                "count"]:
+            assert stall["max_s"] >= hists["session/compact_s"]["max_s"] \
+                - 1e-6
