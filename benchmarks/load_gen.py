@@ -56,6 +56,8 @@ PATH`` (PR 9) writes the diagnostics bundle — fleet-merged under
         [--cluster N [--cluster-procs]] [--policy least_loaded]
         [--trace-sample-rate P] [--trace-out trace.json]
         [--trace-overhead-gate] [--debugz-out debugz.json]
+        [--no-warmup] [--prewarm sync|background]
+        [--compilation-cache-dir DIR]
 """
 
 from __future__ import annotations
@@ -187,13 +189,19 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
           write_batch: int = 32,
           trace_sample_rate: float | None = None,
           record_tail: bool = True, recorder_opts: dict | None = None,
-          debugz: bool = False) -> dict:
+          debugz: bool = False, warmup: bool = True,
+          prewarm: str | None = None) -> dict:
     """Build a server, warm it, and replay ``trace`` (shared by the CSV rows
     and the JSON CLI so both measure the same configuration).
 
     Warmup primes the executables + the scheduler's execute-time model,
     then telemetry is RESET so the reported window reflects steady state,
-    not first-bucket compiles.  ``pipeline_depth`` turns on the worker's
+    not first-bucket compiles.  ``warmup=False`` (``--no-warmup``) skips
+    both, so the replay measures the COLD trajectory — first-bucket
+    compiles land inside the reported latencies (the cold-start rows; pair
+    with a persistent compilation cache to measure the restart path).
+    ``prewarm`` passes through to :class:`AsyncAidwServer` (AOT-compile
+    the whole bucket ladder at construction).  ``pipeline_depth`` turns on the worker's
     launch-ahead pipelining (``--pipeline``; a measured experiment — see
     ROADMAP's post-PR-5 re-triage for the CPU result).  ``write_rate_rps``
     turns on the mixed read/write open-loop mode (:func:`run_load`);
@@ -214,14 +222,16 @@ def drive(points: int, trace, *, max_batch: int = 4096, mesh=None,
                          ring_cap=ring_cap, pipeline_depth=pipeline_depth,
                          trace_sample_rate=trace_sample_rate,
                          record_tail=record_tail, recorder_opts=recorder_opts,
+                         prewarm=prewarm,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
-        for _ in range(3):
-            srv.submit(spatial_queries(req_queries, seed=2))
-        srv.flush(timeout=600)
-        srv.telemetry.reset()
-        srv.spans()                     # drop warmup spans ([] if no tracer)
-        for k in srv.queue.counters:
-            srv.queue.counters[k] = 0
+        if warmup:
+            for _ in range(3):
+                srv.submit(spatial_queries(req_queries, seed=2))
+            srv.flush(timeout=600)
+            srv.telemetry.reset()
+            srv.spans()                 # drop warmup spans ([] if no tracer)
+            for k in srv.queue.counters:
+                srv.queue.counters[k] = 0
         out = run_load(srv, trace, updates=updates, points=points,
                        seed=seed, write_rate_rps=write_rate_rps,
                        write_batch=write_batch,
@@ -239,7 +249,7 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
                   req_queries: int = 96, seed: int = 0,
                   policy: str = "round_robin", mesh=None,
                   trace_sample_rate: float | None = None,
-                  debugz: bool = False) -> dict:
+                  debugz: bool = False, warmup: bool = True) -> dict:
     """Replay ``trace`` against an ``n_hosts`` fleet; returns the merged
     fleet report (flattened: ``report`` = fleet view, ``hosts``/``routing``
     attached).
@@ -284,12 +294,14 @@ def drive_cluster(points: int, trace, *, n_hosts: int, procs: bool = False,
                          **({} if hosts else
                             {"max_batch": max_batch,
                              "query_domain": qd, "mesh": mesh})) as cl:
-            # parallel warmup: every host compiles its executables
-            # CONCURRENTLY under one fleet deadline (cold-start used to be
-            # per-host sequential and dominated the 2-host CPU bench rows)
-            cl.warmup(spatial_queries(req_queries, seed=2),
-                      batches_per_host=3, timeout=600)
-            cl.reset_telemetry()
+            if warmup:
+                # parallel warmup: every host compiles its executables
+                # CONCURRENTLY under one fleet deadline (cold-start used to
+                # be per-host sequential and dominated the 2-host CPU bench
+                # rows)
+                cl.warmup(spatial_queries(req_queries, seed=2),
+                          batches_per_host=3, timeout=600)
+                cl.reset_telemetry()
             out = run_load(cl, trace, updates=updates, points=points,
                            seed=seed)
             rep = out["report"]              # AidwCluster.report(): nested
@@ -619,6 +631,20 @@ def main() -> None:
     p.add_argument("--policy", default="round_robin",
                    choices=("round_robin", "least_loaded"))
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--no-warmup", action="store_true",
+                   help="skip the warmup batches + telemetry reset, so the "
+                        "replay measures the COLD trajectory (first-bucket "
+                        "compiles land inside the reported latencies)")
+    p.add_argument("--prewarm", choices=("background", "sync"), default=None,
+                   help="AOT-compile + warm the whole bucket ladder at "
+                        "server construction (single-server mode; 'sync' "
+                        "blocks, 'background' compiles off the worker "
+                        "thread)")
+    p.add_argument("--compilation-cache-dir", metavar="DIR", default=None,
+                   help="persistent XLA compilation cache directory "
+                        "(default: AIDW_CACHE_DIR env; a restart with the "
+                        "same directory deserializes instead of "
+                        "recompiling)")
     p.add_argument("--trace-sample-rate", type=float, default=None,
                    metavar="P",
                    help="end-to-end tracing: root sample rate (cluster "
@@ -643,6 +669,10 @@ def main() -> None:
     p.add_argument("--json", action="store_true",
                    help="emit the full JSON latency report (CI artifact)")
     args = p.parse_args()
+
+    # before any compile: flag > AIDW_CACHE_DIR env > disabled
+    from repro.runtime import compile_cache
+    compile_cache.enable(args.compilation_cache_dir)
 
     if args.trace_overhead_gate:
         rows = trace_overhead_rows(n_requests=args.requests,
@@ -675,7 +705,8 @@ def main() -> None:
                             req_queries=args.req_queries, seed=args.seed,
                             policy=args.policy, mesh=mesh,
                             trace_sample_rate=args.trace_sample_rate,
-                            debugz=bool(args.debugz_out))
+                            debugz=bool(args.debugz_out),
+                            warmup=not args.no_warmup)
     else:
         out = drive(args.points, trace, max_batch=args.max_batch, mesh=mesh,
                     updates=args.updates, req_queries=args.req_queries,
@@ -683,7 +714,8 @@ def main() -> None:
                     layout=args.layout, write_rate_rps=args.write_rate,
                     write_batch=args.write_batch,
                     trace_sample_rate=args.trace_sample_rate,
-                    debugz=bool(args.debugz_out))
+                    debugz=bool(args.debugz_out),
+                    warmup=not args.no_warmup, prewarm=args.prewarm)
 
     out.pop("_reqs", None)               # request objects are not JSON
     spans = out.pop("spans", [])

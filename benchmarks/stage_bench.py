@@ -19,7 +19,10 @@ itself is honest.  Two workloads drive the stack:
   ``serving/scatter_s``, and the tracer's spans give a second,
   independently-recorded view of the same intervals.
 
-Rows (CSV schema ``name,us_per_call,derived``): ``stage/stage1``,
+Rows (CSV schema ``name,us_per_call,derived`` plus an
+``includes_compile`` stamp — ``staging``/``compact`` hold first-and-only
+observations so XLA compile time is inside them, and benchmarks/run.py
+excludes stamped rows from the regression gate): ``stage/stage1``,
 ``stage/stage2``, ``stage/staging``, ``stage/compact``,
 ``stage/queue_wait``, ``stage/coalesce`` — each with at least one RAISING
 acceptance gate:
@@ -168,21 +171,29 @@ def session_stage_rows(sizes=SIZES) -> list[tuple]:
             f"stage bench gate: {n_compacts} compact() calls but "
             f"{cmp_h['count']} session/compact_s observations")
 
+    # 4th element: includes_compile — stage1/stage2 walls are measured on
+    # warmed executables; the staging and compact walls each hold their
+    # FIRST (and only) observations, so XLA trace+compile time is inside
+    # them.  run.py excludes stamped rows from the regression gate: a
+    # compile-contaminated wall regressing 1.25x says nothing about the
+    # production path (and a persistent-cache hit would "improve" it 10x).
     tag = f"{m}x{base}"
     return [
         (f"stage/stage1/{tag}", s1["mean_s"] * 1e6,
          f"{s1['mean_s'] / prof:.0%} of profiled query "
          f"({prof * 1e6:.0f}us; e2e {e2e_s * 1e6:.0f}us, "
-         f"{ratio:.2f}x within {E2E_TOL}x band)"),
+         f"{ratio:.2f}x within {E2E_TOL}x band)", False),
         (f"stage/stage2/{tag}", s2["mean_s"] * 1e6,
-         f"{s2['mean_s'] / prof:.0%} of profiled query, n={s2['count']}"),
+         f"{s2['mean_s'] / prof:.0%} of profiled query, n={s2['count']}",
+         False),
         (f"stage/staging/{tag}", stg["mean_s"] * 1e6,
          f"delta-path staging, n={stg['count']}; construction nesting "
          f"bin {binh['mean_s'] * 1e6:.0f}us + staging "
-         f"{stg0['mean_s'] * 1e6:.0f}us <= plan {plan['mean_s'] * 1e6:.0f}us"),
+         f"{stg0['mean_s'] * 1e6:.0f}us <= plan {plan['mean_s'] * 1e6:.0f}us",
+         True),
         (f"stage/compact/{tag}", cmp_h["mean_s"] * 1e6,
          f"{cmp_h['count']} grid_ring compactions observed "
-         f"(count gate exact)"),
+         f"(count gate exact)", True),
     ]
 
 
@@ -235,10 +246,10 @@ def serving_stage_rows(points: int = 16384, req_queries: int = 96,
     return [
         (f"stage/queue_wait/{tag}", qw["mean_s"] * 1e6,
          f"queue+execute-total drift {drift * 1e6:.2f}us (<1% gate), "
-         f"n={qw['count']}"),
+         f"n={qw['count']}", False),
         (f"stage/coalesce/{tag}", co["mean_s"] * 1e6,
          f"{len(co_spans)} spans == {done} completed requests; execute "
-         f"span/metric agree within {SPAN_METRIC_TOL:.0%}"),
+         f"span/metric agree within {SPAN_METRIC_TOL:.0%}", False),
     ]
 
 
@@ -256,12 +267,15 @@ def main() -> None:
     args = p.parse_args()
     rows = stage_rows()
     if args.json:
-        print(json.dumps([{"name": n, "us_per_call": us, "derived": d}
-                          for n, us, d in rows], indent=1))
+        print(json.dumps([{"name": r[0], "us_per_call": r[1],
+                           "derived": r[2],
+                           "includes_compile": bool(r[3])
+                           if len(r) > 3 else False}
+                          for r in rows], indent=1))
         return
     print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,43 @@ for one ``execute`` call, so sessions donate it (``donate_argnums``) on
 backends that support buffer donation (not CPU); plan arrays are long-lived
 and must NEVER be donated — they are reused by every subsequent query.
 
+AOT / ladder rules (``InterpolationSession.precompile``; PR 10):
+
+Because of the padding rules above, a session's entire steady-state compile
+surface is finite and known at plan time: one executable per (query-bucket,
+capacity-bucket) pair, where query buckets are the power-of-two ladder up to
+``max_batch`` and the capacity bucket is fixed by the plan.  ``precompile``
+walks that ladder through ``jax.jit(...).lower().compile()`` and installs
+the resulting ``Compiled`` objects ahead of any traffic, so the first query
+of every bucket size dispatches a prebuilt executable — zero traces, zero
+backend compiles (the invariant tests/test_coldstart.py pins per layout).
+The contract has three edges to know about:
+
+* AOT covers the EXECUTE jit only.  The session's eager helper ops (query
+  padding, result slicing, the warm-path reductions) still compile lazily
+  per novel batch size; ``precompile(warm=True)`` — and the server prewarm,
+  which submits one warm batch per bucket — flushes those for exact bucket
+  sizes.  An odd-sized batch therefore pays a tiny one-off pad/sum compile
+  on first sight even on a fully prewarmed server; the post-warmup compile
+  counter treats any such hot-path compile as an anomaly worth flagging,
+  not an error.
+* The ladder survives delta updates by construction: ``plan_delta`` freezes
+  the GridSpec and capacity bucket (incremental-binning rules below), so
+  the AOT signature stays valid.  A full re-plan (fresh spec or capacity
+  crossing) invalidates every installed executable; the session drops them
+  and ``stats['aot_buckets']`` falls to 0 rather than serve a stale shape.
+* Compiled-ladder entries are written through the persistent compilation
+  cache when ``repro.runtime.compile_cache.enable`` ran first, so a
+  restarted process — or a fleet host sharing ``AIDW_CACHE_DIR`` —
+  deserializes the ladder instead of recompiling it.  Background prewarm
+  additionally compiles under
+  ``compile_cache.background_compile_options()`` (single-split CPU
+  codegen) on a thread niced to the scheduler floor, keeping the
+  seconds-long compile phase off the serving hot path; the server flips an
+  internal event (``_prewarm_compiled``) at the compile→warm phase
+  boundary so observers can tell expensive compilation apart from the
+  ordinary queued warm batches that follow it.
+
 Sharding rules (mesh-parallel serving; see :func:`shard_plan`):
 
 The per-query pass is embarrassingly parallel, so one plan can serve a whole

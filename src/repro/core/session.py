@@ -35,6 +35,17 @@ session keeps the build resident and makes the per-query path cheap:
   (power-of-two PER LANE times the device product), and replicated-layout
   results stay bit-identical per query to the single-device session on
   the same plan.
+* ``AOT ladder``  — :meth:`precompile` lowers + compiles the whole
+  power-of-two bucket ladder ahead of time via
+  ``jax.jit(...).lower().compile()`` and stores the resulting ``Compiled``
+  executables; :meth:`_run` dispatches to them directly, bypassing jit
+  tracing AND the XLA compile layer entirely, so the first query of every
+  precompiled bucket is a warm query.  ``warm=True`` additionally executes
+  each ladder bucket once (exact bucket size) to warm the tiny eager
+  helper ops around the executable (pad/slice/sum).  Stored executables
+  carry a staleness signature (spec, cfg, shapes); a full re-plan clears
+  them and falls back to the lazy jit path until the next
+  :meth:`precompile`.
 * ``delta update`` — ``update(inserts=..., deletes=...)`` (or
   ``deltas=(inserts, deletes)``) patches the resident CSR table in
   O(Δ log Δ + memcpy) via :func:`repro.core.grid.rebin_delta` instead of
@@ -148,8 +159,15 @@ class InterpolationSession:
                       "slabs_touched": 0, "full_restages": 0,
                       "ring_occupancy": 0.0, "ring_points": 0,
                       "tombstone_frac": 0.0, "compactions": 0,
-                      "spilled_updates": 0}
+                      "spilled_updates": 0,
+                      # cold-start telemetry: distinct buckets with a live
+                      # AOT executable (precompile) — 0 on lazy sessions
+                      "aot_buckets": 0}
         self._seen_buckets: set[int] = set()
+        # AOT bucket ladder: (bucket, donate) -> (Compiled, signature).
+        # Entries whose signature no longer matches the resident plan are
+        # ignored by _run (and cleared wholesale on full re-plans).
+        self._aot: dict[tuple[int, bool], tuple] = {}
         self._plan: P.AidwPlan | None = None
         self._splan: P.ShardedAidwPlan | None = None
         # grid_ring only: per-query Stage-1 candidate counts of the LAST
@@ -229,6 +247,10 @@ class InterpolationSession:
         self._splan, rep = P.grid_ring_plan_compact(self._splan)
         # fence: the compaction wall covers the restage, not its dispatch
         jax.block_until_ready(self._splan.slab_arrays)
+        # compaction may regrow slab capacities; stale AOT executables are
+        # shape-specialized, so drop them (signature check would skip them
+        # anyway — clearing keeps the compiled_buckets gauge honest)
+        self._aot_invalidate()
         t1 = clk()
         self.registry.observe("session/compact_s", t1 - t0)
         if tid is not None:
@@ -317,6 +339,9 @@ class InterpolationSession:
             self._place()
         self.stats["stage1_builds"] += 1
         self.stats["n_points"] = int(self._plan.n_points)
+        # full re-plan: spec/area/capacity may all have moved — every AOT
+        # executable is specialized on them, so the ladder must recompile
+        self._aot_invalidate()
         self._finish_update(t0, clk, tid, bin_t, t_stage)
 
     def _finish_update(self, t0, clk, tid, bin_t, t_stage) -> None:
@@ -345,14 +370,18 @@ class InterpolationSession:
 
     # -- query path ----------------------------------------------------------
 
-    def _bucket(self, n: int) -> int:
+    def _bucket_for(self, n: int) -> int:
+        """Pure bucket math (no hit/miss accounting): the padded batch size
+        a batch of ``n`` queries dispatches at under this session's mesh."""
         if self._n_dev == 1:
-            b = bucket_size(n, self.min_bucket)
-        else:
-            # power-of-two per lane, divisible by the device product globally
-            per = -(-n // self._n_dev)
-            b = bucket_size(per, max(1, self.min_bucket // self._n_dev)) \
-                * self._n_dev
+            return bucket_size(n, self.min_bucket)
+        # power-of-two per lane, divisible by the device product globally
+        per = -(-n // self._n_dev)
+        return bucket_size(per, max(1, self.min_bucket // self._n_dev)) \
+            * self._n_dev
+
+    def _bucket(self, n: int) -> int:
+        b = self._bucket_for(n)
         if b in self._seen_buckets:
             self.stats["bucket_hits"] += 1
         else:
@@ -360,15 +389,156 @@ class InterpolationSession:
             self.stats["bucket_misses"] += 1
         return b
 
-    def _run(self, qp, donate: bool):
-        """Dispatch one padded bucket to the right executable.
+    # -- AOT bucket ladder ---------------------------------------------------
 
-        Every branch returns the same 5-tuple:
-        ``(values, alpha, r_obs, overflow_mask, zero_weight_mask)``."""
+    def bucket_ladder(self, max_queries: int) -> list[int]:
+        """Every bucket the session can dispatch for batches up to
+        ``max_queries``: doubling powers of two (times the device product on
+        a mesh) from the minimum bucket up to ``_bucket_for(max_queries)``."""
+        top = self._bucket_for(int(max_queries))
+        b = self._bucket_for(1)
+        out = [b]
+        while b < top:
+            b *= 2
+            out.append(b)
+        return out
+
+    def _aot_signature(self) -> tuple:
+        """Staleness witness for stored ``Compiled`` executables: the static
+        jit arguments plus the shapes/dtypes of every captured plan array.
+        An AOT entry is only dispatched while its signature matches the
+        resident plan — delta updates preserve it (n_points is traced),
+        full re-plans and capacity-bucket moves change it."""
+        pln = self._plan
+        if self._layout == "grid_ring":
+            sp = self._splan
+            arr = sp.slab_arrays
+            return ("grid_ring", pln.spec, pln.cfg, sp.rps, sp.halo,
+                    sp.max_level,
+                    tuple((k, arr[k].shape, str(arr[k].dtype))
+                          for k in sorted(arr)))
+        if self._layout == "ring":
+            sp = self._splan
+            return ("ring", pln.cfg, tuple(sp.ring_points.shape))
+        table_sig = tuple((tuple(a.shape), str(a.dtype))
+                          for a in jax.tree_util.tree_leaves(pln.table))
+        return (self._layout, pln.spec, pln.cfg, pln.area, table_sig,
+                tuple(pln.points_xy.shape), tuple(pln.values.shape))
+
+    def _aot_invalidate(self) -> None:
+        self._aot.clear()
+        self.stats["aot_buckets"] = 0
+        self.registry.set("compiled_buckets", 0, merge="max")
+
+    def _lower(self, qp, donate: bool):
+        """Lower the active layout's executor for one padded bucket; the
+        caller ``.compile()``s the result.  Static arguments are baked into
+        the lowering — the stored ``Compiled`` is called with the DYNAMIC
+        arguments only (mirrors the jit call in :meth:`_run`)."""
         pln = self._plan
         if self._layout == "grid_ring":
             sp = self._splan
             fn = P.grid_ring_session_execute(
+                sp.mesh, sp.ring_axis, pln.cfg, pln.spec, sp.rps, sp.halo,
+                sp.max_level)
+            arr = sp.slab_arrays
+            return fn.lower(
+                arr["sx"], arr["sy"], arr["sz"], arr["cell_start"],
+                arr["row_lo"], arr["bx"], arr["by"], arr["bz"],
+                arr["rx"], arr["ry"], arr["rz"], qp,
+                jnp.float32(pln.n_points), jnp.float32(pln.area))
+        if self._layout == "ring":
+            sp = self._splan
+            fn = P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
+            return fn.lower(sp.ring_points, qp, jnp.float32(pln.n_points),
+                            jnp.float32(pln.area))
+        if self._mesh is not None:
+            fn = P.sharded_session_execute(self._mesh, donate)
+        else:
+            fn = P._session_execute_donate if donate else P._session_execute
+        return fn.lower(pln.spec, pln.cfg, pln.area,
+                        pln.table, pln.points_xy, pln.values, qp,
+                        pln.n_points)
+
+    def precompile(self, max_queries: int | None = None, buckets=None,
+                   warm: bool = False,
+                   compiler_options: dict | None = None) -> list[int]:
+        """Ahead-of-time compile the bucket ladder for the ACTIVE layout.
+
+        Lowers + compiles every (query-bucket × current-capacity-bucket)
+        executable via ``jit(...).lower().compile()`` and stores the
+        ``Compiled`` objects; subsequent :meth:`query` calls of those
+        buckets dispatch straight to them — no trace, no XLA compile, warm
+        from the first hit.  Pass ``max_queries=`` to cover the doubling
+        ladder up to that batch size (:meth:`bucket_ladder`) or an explicit
+        ``buckets=`` iterable (each entry is rounded to its bucket).  Donate
+        variants are compiled alongside when the backend donates.
+
+        ``warm=True`` additionally EXECUTES each bucket once on dummy
+        queries (exact bucket size, results discarded) so the tiny eager
+        helper ops around the executable — pad/slice/sum — are compiled
+        too; leave it False when another thread owns device execution (the
+        async server routes its warm batches through the worker instead).
+        ``compiler_options`` pass through to ``Lowered.compile`` — the
+        server's background prewarm uses
+        :func:`repro.runtime.compile_cache.background_compile_options` to
+        keep CPU codegen off the serving cores (options are part of the
+        persistent-cache key; see that function's docstring).
+
+        Each compile wall lands in the ``session/compile_s`` histogram; the
+        ``compiled_buckets`` gauge and ``stats["aot_buckets"]`` track the
+        distinct buckets with a live executable.  Returns the sorted bucket
+        list covered by this call."""
+        if buckets is None:
+            if max_queries is None:
+                raise ValueError(
+                    "precompile() needs max_queries= or buckets=")
+            buckets = self.bucket_ladder(max_queries)
+        buckets = sorted({self._bucket_for(int(b)) for b in buckets})
+        sig = self._aot_signature()
+        donates = (False, True) \
+            if (self._donate and self._layout in ("single", "replicated")) \
+            else (False,)
+        for b in buckets:
+            qp = jnp.zeros((b, 2), jnp.float32)
+            for dn in donates:
+                ent = self._aot.get((b, dn))
+                if ent is not None and ent[1] == sig:
+                    continue
+                t0 = time.perf_counter()
+                self._aot[(b, dn)] = (
+                    self._lower(qp, dn).compile(
+                        compiler_options=compiler_options), sig)
+                self.registry.observe("session/compile_s",
+                                      time.perf_counter() - t0)
+            # precompiled buckets are warm by construction, not misses
+            self._seen_buckets.add(b)
+        live = {b for (b, _d), (_c, s) in self._aot.items() if s == sig}
+        self.stats["aot_buckets"] = len(live)
+        self.registry.set("compiled_buckets", len(live), merge="max")
+        if warm:
+            for b in buckets:
+                self.query(np.tile(np.asarray(self._host_pts[0, :2],
+                                              dtype=np.float32), (b, 1)))
+        return buckets
+
+    def _run(self, qp, donate: bool):
+        """Dispatch one padded bucket to the right executable.
+
+        An AOT entry from :meth:`precompile` whose staleness signature still
+        matches the resident plan wins (no trace, no compile layer); every
+        other case falls back to the lazy jit path.  Every branch returns
+        the same 5-tuple:
+        ``(values, alpha, r_obs, overflow_mask, zero_weight_mask)``."""
+        pln = self._plan
+        dn = bool(donate) if self._layout in ("single", "replicated") \
+            else False
+        ent = self._aot.get((int(qp.shape[0]), dn))
+        aot = ent[0] if ent is not None \
+            and ent[1] == self._aot_signature() else None
+        if self._layout == "grid_ring":
+            sp = self._splan
+            fn = aot if aot is not None else P.grid_ring_session_execute(
                 sp.mesh, sp.ring_axis, pln.cfg, pln.spec, sp.rps, sp.halo,
                 sp.max_level)
             arr = sp.slab_arrays
@@ -383,11 +553,16 @@ class InterpolationSession:
             return values, alpha, r_obs, overflow, zero
         if self._layout == "ring":
             sp = self._splan
-            fn = P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
+            fn = aot if aot is not None \
+                else P.ring_session_execute(sp.mesh, sp.ring_axis, pln.cfg)
             values, alpha, r_obs, zero = fn(
                 sp.ring_points, qp, jnp.float32(pln.n_points),
                 jnp.float32(pln.area))
             return values, alpha, r_obs, jnp.zeros(qp.shape[0], bool), zero
+        if aot is not None:
+            # statics (spec, cfg, area) were baked in at lower time
+            return aot(pln.table, pln.points_xy, pln.values, qp,
+                       pln.n_points)
         if self._mesh is not None:
             fn = P.sharded_session_execute(self._mesh, donate)
         else:

@@ -83,7 +83,7 @@ def run_aidw_async(args, pts, mesh) -> None:
     from repro.serving import AsyncAidwServer
 
     with AsyncAidwServer(pts, max_batch=args.max_batch, mesh=mesh,
-                         layout=args.layout,
+                         layout=args.layout, prewarm=args.prewarm,
                          query_domain=spatial_queries(1024, seed=1)) as srv:
         def wave(wave_id: int, deadline_s):
             return [srv.submit(
@@ -204,6 +204,15 @@ def main() -> None:
     p.add_argument("--policy", default="round_robin",
                    choices=("round_robin", "least_loaded"),
                    help="cluster routing policy")
+    p.add_argument("--prewarm", choices=("background", "sync"), default=None,
+                   help="AIDW --async: AOT-compile + warm the whole bucket "
+                        "ladder at server construction ('sync' blocks, "
+                        "'background' compiles off the worker thread while "
+                        "serving lazily)")
+    p.add_argument("--compilation-cache-dir", metavar="DIR", default=None,
+                   help="persistent XLA compilation cache directory "
+                        "(default: AIDW_CACHE_DIR env; a restart with the "
+                        "same directory deserializes instead of recompiling)")
     p.add_argument("--debug-dump", metavar="PATH",
                    help="AIDW --async/--cluster: write the debugz "
                         "diagnostics bundle (queue/epoch state, SLO "
@@ -220,6 +229,10 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
+
+    # before any compile: flag > AIDW_CACHE_DIR env > disabled
+    from repro.runtime import compile_cache
+    compile_cache.enable(args.compilation_cache_dir)
 
     if args.aidw:
         run_aidw(args)

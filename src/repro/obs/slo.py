@@ -40,6 +40,11 @@ DEFAULT_TARGETS = {
     "shed_rate": 0.01,            # <=1% of requests may be shed
     "queue_depth_frac": 0.9,      # admission queue nearly full
     "ring_occupancy": None,       # set from compact_highwater by server
+    # ANY compile reaching the hot path after the bucket ladder was
+    # prewarmed is an anomaly (the server's counter behind this gauge
+    # only increments once prewarm completed — before that, lazy
+    # compiles are expected and ignored)
+    "post_warmup_compiles": 1.0,
 }
 
 # which cumulative counters feed each rate SLO: (bad, total)
@@ -126,7 +131,8 @@ class SloMonitor:
                     [k for k in per_window if k != "windows_evaluated"])
                 out["rates"][slo] = per_window
 
-        for slo in ("queue_depth_frac", "ring_occupancy"):
+        for slo in ("queue_depth_frac", "ring_occupancy",
+                    "post_warmup_compiles"):
             target = self.targets.get(slo)
             if target is None or slo not in latest_g:
                 continue

@@ -1,3 +1,8 @@
-"""Fault-tolerance runtime: heartbeats, stragglers, elastic rescale plans."""
+"""Runtime services: fault tolerance (heartbeats, stragglers, elastic
+rescale plans) and the persistent-compilation-cache layer."""
+from . import compile_cache
 from .fault_tolerance import (ElasticPlanner, HeartbeatMonitor, RescalePlan,
                               SpikeGuard, StragglerDetector)
+
+__all__ = ["ElasticPlanner", "HeartbeatMonitor", "RescalePlan", "SpikeGuard",
+           "StragglerDetector", "compile_cache"]

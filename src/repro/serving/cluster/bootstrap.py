@@ -52,11 +52,16 @@ class ClusterConfig:
     control_port: int = 29900
     mesh_axis: str = "q"
     use_local_mesh: bool = True       # serve across all local devices
+    # persistent XLA compilation cache directory (None = disabled).  Fleet
+    # host processes bootstrapped with the same directory SHARE one cache:
+    # the first host compiles, every later join deserializes.
+    cache_dir: str | None = None
 
     @classmethod
     def from_env(cls, **overrides) -> "ClusterConfig":
         """Identity from ``AIDW_CLUSTER_{N_HOSTS,HOST_ID,JAX_COORDINATOR,
-        CONTROL_HOST,CONTROL_PORT}`` env vars, overridable by kwargs."""
+        CONTROL_HOST,CONTROL_PORT}`` env vars (plus ``AIDW_CACHE_DIR`` for
+        the shared compilation cache), overridable by kwargs."""
         env = {
             "n_hosts": int(os.environ.get("AIDW_CLUSTER_N_HOSTS", "1")),
             "host_id": int(os.environ.get("AIDW_CLUSTER_HOST_ID", "0")),
@@ -66,6 +71,7 @@ class ClusterConfig:
                 os.environ.get("AIDW_CLUSTER_CONTROL_HOST", "127.0.0.1"),
             "control_port":
                 int(os.environ.get("AIDW_CLUSTER_CONTROL_PORT", "29900")),
+            "cache_dir": os.environ.get("AIDW_CACHE_DIR") or None,
         }
         env.update(overrides)
         return cls(**env)
@@ -140,6 +146,14 @@ def bootstrap(cfg: ClusterConfig | None = None, **overrides) -> ClusterContext:
     if not (0 <= cfg.host_id < cfg.n_hosts):
         raise ValueError(
             f"host_id {cfg.host_id} out of range for n_hosts={cfg.n_hosts}")
+
+    # persistent compilation cache BEFORE any compile: subprocess fleet
+    # hosts bootstrapped with the same directory (flag or AIDW_CACHE_DIR)
+    # share one cache, so a joining host deserializes the ladder the first
+    # host compiled.  Also installs the compile-event listeners that feed
+    # the per-host compile_cache_hits/misses counters.
+    from ...runtime import compile_cache
+    compile_cache.enable(cfg.cache_dir)
 
     import jax
 

@@ -221,8 +221,39 @@ class AidwCluster:
         """Newest assigned epoch (hosts may still be applying it)."""
         return self.coordinator.epoch
 
+    def prewarm(self, *, timeout: float | None = None) -> dict:
+        """AOT-compile + warm every live host's WHOLE bucket ladder in
+        PARALLEL (the fleet-wide cold-start killer): each host's
+        ``prewarm`` control-plane op runs on its own thread under ONE
+        fleet deadline, so ladders compile concurrently across hosts
+        (and, with a shared persistent compilation cache, every host
+        after the first deserializes instead of compiling).  A host that
+        merely times out stays in rotation still compiling — slowness is
+        not death, same rule as :meth:`warmup`; a host whose prewarm
+        ERRORS is drained.  Returns ``{host_id: prewarm status dict}``
+        for the hosts that finished in time."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        results: dict = {}
+
+        def prewarm_one(hid):
+            host = self.router._hosts[hid]
+            fn = getattr(host, "prewarm", None)
+            if fn is None:
+                return
+            rem = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            try:
+                results[hid] = fn(wait=True, timeout=rem)
+            except TimeoutError:
+                pass
+            except Exception:
+                self.router.drain(hid)
+
+        _parallel_hosts(self.router.live_hosts(), prewarm_one)
+        return results
+
     def warmup(self, queries_xy, *, batches_per_host: int = 3,
-               timeout: float | None = None) -> None:
+               timeout: float | None = None, prewarm: bool = False) -> None:
         """Prime every host's executables (and execute-time model) in
         PARALLEL: ``batches_per_host`` copies of ``queries_xy`` submitted
         DIRECTLY to each host (bypassing the router, so round-robin can
@@ -230,8 +261,12 @@ class AidwCluster:
         per host under ONE fleet deadline.  Cold-start compiles overlap
         across hosts instead of summing — the dominant cost of the 2-host
         CPU bench rows before this existed.  A host that fails its warmup
-        is drained, not fatal."""
+        is drained, not fatal.  ``prewarm=True`` first runs the fleet
+        :meth:`prewarm` op under the same deadline, so the warm batches
+        dispatch to already-AOT-compiled ladder executables."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        if prewarm:
+            self.prewarm(timeout=timeout)
 
         def warm_one(hid):
             host = self.router._hosts[hid]
@@ -818,6 +853,31 @@ class ShardedAidwCluster:
     @property
     def epoch(self) -> int:
         return self.coordinator.epoch
+
+    def prewarm(self, *, timeout: float | None = None) -> dict:
+        """AOT-compile + warm every shard host's bucket ladder in
+        PARALLEL under one fleet deadline (see
+        :meth:`AidwCluster.prewarm`).  Unlike the replicated fleet there
+        are no replicas to drain to, so a shard whose prewarm ERRORS
+        propagates loudly; a shard that merely runs past the deadline is
+        skipped (still compiling, will finish lazily).  Returns
+        ``{shard_index: prewarm status dict}``."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def prewarm_one(item):
+            s, host = item
+            fn = getattr(host, "prewarm", None)
+            if fn is None:
+                return None
+            rem = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            try:
+                return s, fn(wait=True, timeout=rem)
+            except TimeoutError:
+                return None
+
+        out = _parallel_hosts(enumerate(self.hosts), prewarm_one)
+        return dict(r for r in out if r is not None)
 
     def flush(self, timeout: float | None = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout

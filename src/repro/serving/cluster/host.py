@@ -122,6 +122,16 @@ class HostServer:
 
     # -- routing / fleet surface ---------------------------------------------
 
+    def prewarm(self, wait: bool = True,
+                timeout: float | None = None) -> dict:
+        """AOT-compile + warm this host's whole bucket ladder (the fleet
+        control-plane prewarm op): a joining or restarted host calls this
+        BEFORE entering rotation, so its first routed batch dispatches to
+        an already-compiled executable.  Returns the server's prewarm
+        status dict (prewarmed flag, live AOT bucket count,
+        persistent-compilation-cache stats)."""
+        return self.server.prewarm(wait=wait, timeout=timeout)
+
     @property
     def epoch(self) -> int:
         return self.server.epoch

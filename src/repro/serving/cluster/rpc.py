@@ -40,6 +40,7 @@ from __future__ import annotations
 import base64
 import itertools
 import json
+import os
 import socket
 import subprocess
 import sys
@@ -268,6 +269,18 @@ class RemoteHost:
         return (dec_array(reply["swz"]), dec_array(reply["sw"]),
                 reply.get("epoch"))
 
+    def prewarm(self, wait: bool = True,
+                timeout: float | None = None) -> dict:
+        """Fleet control-plane prewarm: AOT-compile + warm the remote
+        host's whole bucket ladder before it enters rotation.  Like
+        wait()/flush(), the caller's bound rides as ``wait_s`` and the
+        transport timeout gets slack on top — an unbounded prewarm (cold
+        CPU CI ladder) must not be cut off by a transport cap."""
+        reply = self._call(
+            "prewarm", timeout=None if timeout is None else timeout + 30.0,
+            wait=int(bool(wait)), wait_s=timeout)
+        return reply["status"]
+
     @property
     def epoch(self) -> int:
         return int(self._call("epoch", timeout=30.0)["epoch"])
@@ -486,6 +499,10 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
                     dec_array(msg["q"]), dec_array(msg["alpha"]),
                     timeout=msg.get("wait_s"))
                 reply(mid, swz=enc_array(swz), sw=enc_array(sw), epoch=epoch)
+            elif op == "prewarm":
+                reply(mid, status=host.prewarm(
+                    wait=bool(msg.get("wait", 1)),
+                    timeout=msg.get("wait_s")))
             elif op == "depth":
                 reply(mid, depth=host.queue_depth())
             elif op == "probe":
@@ -531,7 +548,7 @@ def serve_host(host: HostServer, address: tuple[str, int], *,
     # the item is in the FIFO, and callers block on that reply before
     # issuing their next op.
     _BLOCKING = {"await", "flush", "update_wait", "close", "submit",
-                 "update", "shard_knn", "shard_partial"}
+                 "update", "shard_knn", "shard_partial", "prewarm"}
     try:
         while not stop.is_set():
             line = rfile.readline()
@@ -559,6 +576,7 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
                  jax_coordinator: str | None = None,
                  shard_of: int = 0,
                  trace_sample_rate: float | None = None,
+                 compilation_cache_dir: str | None = None,
                  env: dict | None = None) -> subprocess.Popen:
     """Launch one fleet host as a subprocess running :func:`main`.
 
@@ -583,6 +601,8 @@ def spawn_worker(host_id: int, n_hosts: int, *, points: int, seed: int = 0,
         cmd += ["--jax-coordinator", jax_coordinator]
     if trace_sample_rate is not None:
         cmd += ["--trace-sample-rate", str(trace_sample_rate)]
+    if compilation_cache_dir:
+        cmd += ["--compilation-cache-dir", compilation_cache_dir]
     return subprocess.Popen(cmd, env=env)
 
 
@@ -612,12 +632,18 @@ def main(argv=None) -> None:
                    help="obs trace sampling probability for this host "
                         "(omit = tracing off; spans pull over the 'spans' "
                         "rpc op)")
+    p.add_argument("--compilation-cache-dir", default=None,
+                   help="persistent XLA compilation cache directory "
+                        "(default: AIDW_CACHE_DIR env; hosts given the "
+                        "same directory share one cache)")
     args = p.parse_args(argv)
 
     ctx = bootstrap(ClusterConfig(
         n_hosts=args.n_hosts, host_id=args.host_id,
         jax_coordinator=args.jax_coordinator,
-        control_host=args.control_host, control_port=args.control_port))
+        control_host=args.control_host, control_port=args.control_port,
+        cache_dir=(args.compilation_cache_dir
+                   or os.environ.get("AIDW_CACHE_DIR") or None)))
     # the dataset replica is reconstructed, not shipped: spatial_points is
     # deterministic in (n, seed), so every host plans the identical grid
     pts = spatial_points(args.points, seed=args.seed)
